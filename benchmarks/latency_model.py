@@ -1,0 +1,38 @@
+"""Benchmark: Table 3.1 minimal-operation latencies + Eq. 3.1-3.4 / 4.1.
+
+Recomputes the component totals and evaluates the latency equations at the
+paper's 2KB reference size and across a size sweep (the Eq. 4.1 efficiency
+curve drives the size-dependent effective bandwidth).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import hw, latency
+
+
+def run() -> list[str]:
+    rows = []
+    t0 = time.perf_counter()
+    totals = latency.table_3_1_totals_ns()
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(f"table31_read_total,{us:.1f},{totals['read']:.0f}ns "
+                f"(paper 220)")
+    rows.append(f"table31_write_total,{us:.1f},{totals['write']:.0f}ns "
+                f"(paper 90)")
+    rows.append(f"table31_atomic_completion,{us:.1f},"
+                f"{totals['atomic_completion']:.0f}ns (paper 40)")
+
+    bw = 4.0e12   # 4 TB/s
+    for size in (2 * 1024, 64 * 1024, 1 << 20, 64 << 20):
+        r = latency.fh_read_latency_s(size, bw) * 1e9
+        w = latency.fh_write_latency_s(size, bw) * 1e9
+        rows.append(f"eq31_read_{size}B,{us:.1f},{r:.1f}ns")
+        rows.append(f"eq32_write_{size}B,{us:.1f},{w:.1f}ns")
+    link = latency.LinkModel(hw.PAPER_READ_LATENCY_NS * 1e-9, bw)
+    for size in (4 * 1024, 1 << 20, 256 << 20):
+        eff = link.efficiency(size)
+        t = latency.prefetch_overhead_s(size, bw, link) * 1e6
+        rows.append(f"eq41_prefetch_{size}B,{us:.1f},"
+                    f"{t:.2f}us eff={eff:.3f}")
+    return rows

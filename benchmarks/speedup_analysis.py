@@ -1,0 +1,38 @@
+"""Benchmark: §3.3.3 theoretical speed-up analysis (paper Table: 70x / 15.56x).
+
+Reproduces every number in the section from the component model and checks
+them against the paper's quoted figures.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import analysis
+
+
+def run() -> list[str]:
+    rows = []
+    t0 = time.perf_counter()
+    rep = analysis.speedup_report(8)
+    headline = analysis.paper_headline_numbers(8)
+    us = (time.perf_counter() - t0) * 1e6
+
+    checks = [
+        ("enabler1_latency_bound", rep.enabler1_latency_bound, 14.0),
+        ("enabler1_bandwidth_bound", rep.enabler1_bandwidth_bound, 1.75),
+        ("enabler2_bandwidth_bound", rep.enabler2_bandwidth_bound, 8.89),
+        ("overall_latency_bound_paper", headline["overall_latency_bound"], 70.0),
+        ("overall_bandwidth_bound_paper",
+         headline["overall_bandwidth_bound"], 15.56),
+    ]
+    for name, got, want in checks:
+        ok = abs(got - want) / want < 0.01
+        rows.append(f"speedup_{name},{us:.1f},{got:.3f} (paper {want}"
+                    f" match={ok})")
+    rows.append(f"speedup_enabler2_latency_exact,{us:.1f},"
+                f"read {rep.enabler2_latency_bound_read:.2f}x / "
+                f"write {rep.enabler2_latency_bound_write:.2f}x "
+                f"(paper rounds to 5x)")
+    rows.append(f"speedup_overall_latency_exact,{us:.1f},"
+                f"{rep.overall_latency_bound:.1f}x (with exact 1000/220)")
+    return rows

@@ -1,0 +1,73 @@
+"""End-to-end FengHuang serving driver (the paper's workload shape):
+a small dense LM serving batched requests, run twice — shared-nothing
+baseline vs FengHuang-paged (weights in the remote tier, TensorPager
+double-buffered prefetch) — and verified to emit identical tokens.
+
+    PYTHONPATH=src python examples/serve_fenghuang.py
+"""
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, build_model
+from repro.core import pager
+from repro.runtime.serve import BatchedServer
+
+PROMPTS = [
+    np.asarray([11, 42, 7, 3], np.int32),
+    np.asarray([5, 9], np.int32),
+    np.asarray([100, 101, 102, 103, 104], np.int32),
+    np.asarray([1], np.int32),
+]
+
+
+def serve_all(model, params, tag):
+    server = BatchedServer(model, params, batch_size=2, max_seq=96)
+    t0 = time.perf_counter()
+    reqs = [server.submit(p, max_new_tokens=12) for p in PROMPTS]
+    while any(not r.done.is_set() for r in reqs):
+        server.run_once()
+    dt = time.perf_counter() - t0
+    print(f"[{tag}] served {len(reqs)} requests, "
+          f"{server.stats['tokens']} tokens in {dt:.2f}s")
+    return [tuple(r.output) for r in reqs]
+
+
+def main():
+    cfg = get_config("qwen2.5-14b").reduced(num_layers=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"[serve] model: {cfg.name} "
+          f"({sum(x.size for x in jax.tree.leaves(params))/1e6:.1f}M params)")
+
+    # 1) shared-nothing baseline: weights resident in device memory
+    base_out = serve_all(model, params, "baseline ")
+
+    # 2) FengHuang: stacked layer weights live in the remote tier
+    #    (pinned_host); the TensorPager pages them per layer with
+    #    lookahead-1 double buffering.
+    print(f"[serve] memory spaces supported: "
+          f"{pager.supports_memory_spaces()}")
+    paged_cfg = cfg.with_pager(enabled=True, lookahead=1)
+    paged_model = build_model(paged_cfg)
+    paged_params = dict(params)
+    paged_params["layers"] = jax.tree.map(
+        lambda x: jax.device_put(x, jax.memory.Space.Host), params["layers"])
+    resident = pager.resident_window_bytes(paged_params["layers"], 1)
+    total = pager.tree_bytes(params["layers"])
+    print(f"[serve] FengHuang local window: {resident/1e6:.2f} MB resident "
+          f"of {total/1e6:.2f} MB weights "
+          f"({100*(1-resident/total):.1f}% local-capacity reduction)")
+    fh_out = serve_all(paged_model, paged_params, "fenghuang")
+
+    assert base_out == fh_out, "paged serving must be semantically invisible"
+    print("[serve] OK — identical tokens with and without paging")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Architecture registry: ``get_config(id)`` / ``build_model(cfg)``.
+
+The ten assigned architectures plus the paper's own simulator workloads
+(gpt3-175b / grok-1 / qwen3-235b, which live in ``repro.core.graphs`` as
+analytical configs and here as runnable ``ModelConfig``s for completeness).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+from repro.models.base import ModelConfig
+
+ARCH_IDS = (
+    "qwen2.5-14b", "qwen3-14b", "minicpm-2b", "starcoder2-15b",
+    "recurrentgemma-9b", "xlstm-125m", "whisper-base",
+    "moonshot-v1-16b-a3b", "granite-moe-3b-a800m", "llava-next-34b",
+)
+
+_MODULES = {
+    "qwen2.5-14b": "qwen2_5_14b",
+    "qwen3-14b": "qwen3_14b",
+    "minicpm-2b": "minicpm_2b",
+    "starcoder2-15b": "starcoder2_15b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "xlstm-125m": "xlstm_125m",
+    "whisper-base": "whisper_base",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "llava-next-34b": "llava_next_34b",
+    # paper workloads, runnable form
+    "gpt3-175b": "gpt3_175b",
+    "grok-1": "grok_1",
+    "qwen3-235b": "qwen3_235b",
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def build_model(cfg: ModelConfig):
+    """Instantiate the model class for a config's family."""
+    if cfg.family in ("dense",):
+        from repro.models.transformer import DenseLM
+        return DenseLM(cfg)
+    if cfg.family == "vlm":
+        from repro.models.vlm import VLM
+        return VLM(cfg)
+    if cfg.family == "moe":
+        from repro.models.moe import MoELM
+        return MoELM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import HybridLM
+        return HybridLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.ssm import XLSTM
+        return XLSTM(cfg)
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    raise ValueError(cfg.family)
+
+
+def get_model(arch_id: str, **overrides):
+    cfg = get_config(arch_id)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return build_model(cfg), cfg
+
+
+# Sub-quadratic families that support the long_500k shape.
+SUBQUADRATIC = {"recurrentgemma-9b", "xlstm-125m"}

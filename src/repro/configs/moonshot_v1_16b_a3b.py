@@ -1,0 +1,11 @@
+"""moonshot-v1-16b-a3b (kimi/moonlight): 48L d=2048 16H (kv=16)
+per-expert d_ff=1408, vocab=163840, MoE 64 experts top-6
+[hf:moonshotai/Moonlight-16B-A3B].  EP: 64/16 = 4 experts per shard."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    num_layers=48, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1408, vocab=163840, head_dim=128,
+    num_experts=64, top_k=6,
+)

@@ -1,0 +1,9 @@
+"""Qwen3-235B-A22B (paper workload §4.1.2): fine-grained MoE 128e top-8."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-235b", family="moe",
+    num_layers=94, d_model=4096, num_heads=64, num_kv_heads=4,
+    d_ff=1536, vocab=151936, head_dim=128,
+    qk_norm=True, num_experts=128, top_k=8,
+)

@@ -1,0 +1,11 @@
+"""whisper-base: 6L(dec)+6L(enc) d=512 8H d_ff=2048 vocab=51865; enc-dec
+with conv/mel frontend STUBBED (precomputed frame embeddings)
+[arXiv:2212.04356].  Full attention => long_500k skipped."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base", family="encdec",
+    num_layers=6, d_model=512, num_heads=8, num_kv_heads=8,
+    d_ff=2048, vocab=51865, head_dim=64,
+    num_encoder_layers=6, encoder_seq=1500,
+)

@@ -1,0 +1,11 @@
+"""xlstm-125m: 12L d=768 4H d_ff=0 vocab=50304; sLSTM + mLSTM blocks in
+pattern (m,m,m,s) x 3 (3:1 m:s ratio; the paper's xLSTM[7:1] rounded to a
+12-layer tiling) [arXiv:2405.04517].  O(1) state => long_500k runs."""
+from repro.models.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m", family="ssm",
+    num_layers=12, d_model=768, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab=50304,
+    block_pattern=("m", "m", "m", "s"),
+)

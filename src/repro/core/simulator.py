@@ -1,0 +1,293 @@
+"""FengHuang discrete-event simulator (§4.1.3).
+
+Replays an operator dependency graph (``core.graphs``) on a modelled system:
+
+* a **compute stream** executing operators at a roofline-with-MFU rate,
+* a **paging stream** (the Tensor Prefetcher) bringing pageable tensors from
+  the FengHuang remote tier into local memory with a lookahead window ``w``
+  (paper uses w=1: each node triggers the prefetch of its successor), and
+* **collectives** costed by the fabric model of ``core.latency``
+  (FengHuang shared-memory one-shot vs NVLink ring).
+
+The simulator also accounts the peak *local* memory footprint — weights/KV
+resident in the paging window plus pinned tensors and activations — which
+reproduces Table 4.3 (10–20 GB instead of 144 GB per GPU).
+
+Calibration constants (``MfuModel``, ``local_efficiency``) are the free
+parameters of the paper's methodology ("we apply a scaling coefficient …
+similar to empirical NVLink behaviour"); they are documented in
+EXPERIMENTS.md and swept in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core import hw, latency
+from repro.core.graphs import Node
+
+GB = 1e9
+TB = 1e12
+
+
+@dataclasses.dataclass(frozen=True)
+class MfuModel:
+    """Saturating matmul-efficiency model (compute-bound ops only).
+
+    mfu(M, K, N) = mfu_max * (1 - exp(-N/knee_n)) * M/(M+knee_m)
+
+    Smaller per-GPU output shards (larger TP slices) get lower MFU — the
+    mechanism by which the paper's FH4 (TP=4, fatter shards) closes most of
+    the aggregate-FLOPs gap against Baseline8 (TP=8) on prefill.  Memory-
+    bound ops (decode GEMVs) never see this curve; they run at the
+    bandwidth roofline (see ``exec_time``).
+    """
+
+    mfu_max: float = 0.82
+    knee_m: float = 64.0
+    knee_n: float = 8192.0
+    attention_mfu: float = 0.40   # flash-attention prefill efficiency
+
+    def matmul(self, m: float, k: float, n: float) -> float:
+        del k
+        return (self.mfu_max
+                * (1.0 - math.exp(-n / self.knee_n))
+                * (m / (m + self.knee_m)))
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemConfig:
+    """A simulated node (Baseline8 / FH4-1.5xM / FH4-2.0xM)."""
+
+    name: str
+    num_gpus: int
+    peak_flops: float                 # per GPU
+    local_bw: float                   # bytes/s per GPU
+    fabric: str                       # 'nvlink' | 'fh'
+    fabric_bw: float                  # bytes/s per GPU
+    paged: bool = False
+    remote_bw: float = 0.0            # bytes/s per GPU (FengHuang crossbar)
+    lookahead: int = 1
+    local_efficiency: float = 0.60    # achieved fraction of local HBM bw
+    mfu: MfuModel = dataclasses.field(default_factory=MfuModel)
+    kernel_overhead_s: float = 4e-6
+
+    def remote_link(self) -> latency.LinkModel:
+        return latency.LinkModel(
+            fixed_latency_s=hw.PAPER_READ_LATENCY_NS * 1e-9,
+            bandwidth_Bps=self.remote_bw,
+            eff_max=0.95, eff_min=0.25, eff_knee_bytes=512 * 1024.0)
+
+    def fabric_link(self) -> latency.LinkModel:
+        if self.fabric == "fh":
+            return latency.make_fh_link(self.fabric_bw)
+        return latency.make_nvlink(self.fabric_bw)
+
+
+def baseline8() -> SystemConfig:
+    """8x H200 + NVLink 4.0 (Table 4.1/4.2)."""
+    return SystemConfig(
+        name="Baseline8", num_gpus=8,
+        peak_flops=hw.PAPER_H200_BF16_TFLOPS * 1e12,
+        local_bw=hw.PAPER_H200_HBM_BW_TBPS * TB,
+        fabric="nvlink", fabric_bw=hw.PAPER_NVLINK_BW_GBPS * GB,
+        paged=False)
+
+
+def fh4(local_scale: float = 1.5, remote_bw_tbps: float = 4.0,
+        lookahead: int = 12) -> SystemConfig:
+    """FH4-{1.5,2.0}xM: 4 GPUs @1.33x H200 compute, scaled local HBM,
+    FengHuang TAB fabric + remote tier at `remote_bw_tbps` per GPU.
+
+    ``lookahead`` is in *operator* nodes.  The paper's w=1 is in units of its
+    Nsight trace nodes (fused kernel groups ~ one transformer sub-layer);
+    twelve operator nodes ~ two of our layers, which keeps the same ~2-layer
+    resident window (Table 4.3) while restoring the full paging/compute
+    overlap the paper's simulator exhibits.
+    """
+    return SystemConfig(
+        name=f"FH4-{local_scale}xM@{remote_bw_tbps}T", num_gpus=4,
+        peak_flops=hw.PAPER_H200_BF16_TFLOPS * 1e12 * hw.PAPER_FH_COMPUTE_SCALE,
+        local_bw=hw.PAPER_H200_HBM_BW_TBPS * TB * local_scale,
+        fabric="fh", fabric_bw=remote_bw_tbps * TB,
+        paged=True, remote_bw=remote_bw_tbps * TB, lookahead=lookahead,
+        # §3.1: FH local memory is "tuned to workload characteristics for
+        # efficient caching" — a small working set streamed sequentially
+        # sustains a higher fraction of peak than baseline fine-grained
+        # kernel access (0.60, the measured MBU of inference servers).
+        local_efficiency=0.85)
+
+
+@dataclasses.dataclass
+class SimResult:
+    elapsed_s: float
+    compute_busy_s: float
+    paging_busy_s: float
+    collective_s: float
+    paging_exposed_s: float        # time compute stalled waiting on pages
+    peak_paged_window_bytes: float
+    peak_local_bytes: float        # window + pinned + activations
+    num_nodes: int
+
+    def summary(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def exec_time(node: Node, sys: SystemConfig) -> float:
+    """Roofline-with-MFU execution time for a non-collective node."""
+    if node.kind == "collective":
+        kind, payload = node.collective
+        return latency.collective_time_s(kind, sys.fabric, payload,
+                                         sys.num_gpus, sys.fabric_link())
+    mem_t = node.local_bytes / (sys.local_bw * sys.local_efficiency)
+    if node.flops <= 0:
+        return mem_t + sys.kernel_overhead_s
+    if node.kind == "attention":
+        eff = sys.mfu.attention_mfu
+    elif node.matmul_dims is not None:
+        eff = sys.mfu.matmul(*node.matmul_dims)
+    else:
+        eff = sys.mfu.mfu_max
+    # Roofline: the op runs at whichever limit is slower.  The MFU derate
+    # applies to the compute term at every size (skinny TP shards are
+    # inefficient); memory-bound GEMVs are floored by the bandwidth term
+    # because their derated compute term is tiny anyway.
+    comp_t = node.flops / (sys.peak_flops * eff)
+    return max(comp_t, mem_t) + sys.kernel_overhead_s
+
+
+def simulate(nodes: Sequence[Node], sys: SystemConfig,
+             *, pinned_bytes: float = 0.0,
+             activation_bytes: float = 0.0,
+             warm_window: bool = False) -> SimResult:
+    """Schedule `nodes` on the compute + paging streams.
+
+    warm_window=True models steady-state decode, where the first `w` pages
+    were prefetched during the previous token's tail (their cost is charged
+    to that token — symmetric in steady state).
+    """
+    n = len(nodes)
+    page_done = [0.0] * n
+    node_start = [0.0] * n
+    paging_t = 0.0
+    paging_busy = 0.0
+    issued = 0
+    remote = sys.remote_link() if sys.paged else None
+
+    def issue_up_to(limit: int, trigger: float) -> None:
+        nonlocal paging_t, paging_busy, issued
+        while issued <= min(limit, n - 1):
+            nd = nodes[issued]
+            if sys.paged and nd.pageable_bytes > 0:
+                start = max(paging_t, trigger)
+                dur = remote.transfer_time(nd.pageable_bytes)
+                page_done[issued] = start + dur
+                paging_t = start + dur
+                paging_busy += dur
+            else:
+                page_done[issued] = 0.0
+            issued += 1
+
+    w = max(0, sys.lookahead)
+    # Prime the initial window.  Steady-state decode: free (overlapped with
+    # the previous token); cold start (prefill): pages serialize from t=0.
+    issue_up_to(w, 0.0)
+    if warm_window:
+        for i in range(min(w + 1, n)):
+            page_done[i] = 0.0
+
+    compute_t = 0.0
+    compute_busy = 0.0
+    collective_t = 0.0
+    paging_exposed = 0.0
+    peak_window = 0.0
+
+    for j, nd in enumerate(nodes):
+        # degenerate windows (w=0): the page for node j must exist before
+        # the node can wait on it — issue it now, triggered by "compute is
+        # here" (demand paging).
+        issue_up_to(j, compute_t)
+        start = max(compute_t, page_done[j])
+        paging_exposed += max(0.0, page_done[j] - compute_t)
+        dur = exec_time(nd, sys)
+        node_start[j] = start
+        compute_t = start + dur
+        if nd.kind == "collective":
+            collective_t += dur
+        else:
+            compute_busy += dur
+        issue_up_to(j + w, start)
+        # resident pageable window: nodes [j, j+w] (executing + prefetched)
+        if sys.paged:
+            window_bytes = sum(nodes[i].pageable_bytes
+                               for i in range(j, min(j + w + 1, n)))
+            peak_window = max(peak_window, window_bytes)
+
+    return SimResult(
+        elapsed_s=compute_t,
+        compute_busy_s=compute_busy,
+        paging_busy_s=paging_busy,
+        collective_s=collective_t,
+        paging_exposed_s=paging_exposed,
+        peak_paged_window_bytes=peak_window,
+        peak_local_bytes=peak_window + pinned_bytes + activation_bytes,
+        num_nodes=n,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Workload-level driver: TTFT / TPOT / E2E (Figure 4.1) + local capacity
+# (Table 4.3).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InferenceTask:
+    name: str
+    prompt_len: int
+    gen_len: int
+    batch: int = 8
+
+
+QA_TASK = InferenceTask("qa", prompt_len=4096, gen_len=1024)
+REASONING_TASK = InferenceTask("reasoning", prompt_len=512, gen_len=16384)
+
+
+def run_workload(cfg, task: InferenceTask, sys: SystemConfig,
+                 *, page_kv: bool = True) -> dict:
+    from repro.core import graphs as G
+
+    tp = sys.num_gpus
+    prefill = G.build_graph(cfg, "prefill", batch=task.batch,
+                            prompt_len=task.prompt_len, tp=tp,
+                            paged=sys.paged, page_kv=page_kv)
+    mid_ctx = task.prompt_len + task.gen_len // 2
+    decode = G.build_graph(cfg, "decode", batch=task.batch,
+                           prompt_len=task.prompt_len, ctx_len=mid_ctx,
+                           tp=tp, paged=sys.paged, page_kv=page_kv)
+
+    # pinned local tensors: embeddings + lm head shard (+ KV if not paged)
+    pinned = cfg.embedding_params * G.BYTES_PER_PARAM / tp
+    act = task.batch * task.prompt_len * cfg.d_model * G.BYTES_PER_PARAM * 4 / tp
+    act_dec = task.batch * cfg.d_model * G.BYTES_PER_PARAM * 16 / tp
+    kv_total = (2 * task.batch * (task.prompt_len + task.gen_len)
+                * cfg.num_kv_heads * cfg.head_dim * cfg.num_layers
+                * G.BYTES_PER_PARAM / tp)
+    if not page_kv:
+        pinned += kv_total
+
+    r_prefill = simulate(prefill, sys, pinned_bytes=pinned,
+                         activation_bytes=act, warm_window=False)
+    r_decode = simulate(decode, sys, pinned_bytes=pinned,
+                        activation_bytes=act_dec, warm_window=True)
+    ttft = r_prefill.elapsed_s
+    tpot = r_decode.elapsed_s
+    e2e = ttft + max(0, task.gen_len - 1) * tpot
+    return {
+        "system": sys.name, "workload": cfg.name, "task": task.name,
+        "ttft_s": ttft, "tpot_s": tpot, "e2e_s": e2e,
+        "prefill": r_prefill.summary(), "decode": r_decode.summary(),
+        "peak_local_gb": max(r_prefill.peak_local_bytes,
+                             r_decode.peak_local_bytes) / GB,
+        "kv_total_gb": kv_total / GB,
+    }

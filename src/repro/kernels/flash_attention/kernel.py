@@ -1,0 +1,109 @@
+"""Flash attention (prefill) Pallas kernel.
+
+Grid: (batch*heads, num_q_blocks, num_kv_blocks) with the online-softmax
+state (m, l, acc) held in VMEM scratch across the innermost (kv) grid
+dimension.  Q/K/V blocks stream HBM->VMEM via BlockSpec tiling — on TPU
+the Mosaic pipeline double-buffers them, the kernel-level expression of
+the FengHuang paging stream.
+
+Causal masking skips nothing structurally (blocks beyond the diagonal are
+masked, not skipped) — the kernel stays grid-static; the jnp path in
+``models.layers`` handles dynamic skipping for the huge-prefill case.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, bq: int, bk: int,
+            n_kv: int, q_offset: int, kv_valid: int):
+    kv_idx = pl.program_id(2)
+    q_idx = pl.program_id(1)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (bq, d)
+    k = k_ref[0]                                   # (bk, d)
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (bq, bk)
+
+    q_pos = q_offset + q_idx * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+    k_pos = kv_idx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < kv_valid            # padded KV rows never attend
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = 256, bk: int = 256, q_offset: int = 0,
+                    kv_valid: int | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, d); k, v: (BH, Sk, d) -> (BH, Sq, d).
+
+    Heads are folded into the leading dim (ops.py does the fold and the
+    GQA group expansion).  Sq % bq == Sk % bk == 0 required.
+    """
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    n_kv = sk // bk
+    grid = (bh, sq // bq, n_kv)
+    scale = 1.0 / math.sqrt(d)
+    kv_valid = sk if kv_valid is None else kv_valid
+
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          window=window, bq=bq, bk=bk, n_kv=n_kv,
+                          q_offset=q_offset, kv_valid=kv_valid),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,50 @@
+"""jit'd wrapper: (B, S, H, d) API with GQA expansion, padding, head fold."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention import ref as _ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0, bq: int = 256,
+              bk: int = 256, interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, Hq, d); k, v: (B, Sk, Hkv, d), Hq % Hkv == 0."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    assert hq % hkv == 0
+    if hq != hkv:   # GQA: expand kv heads
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+    bq_ = min(bq, sq)
+    bk_ = min(bk, sk)
+    pq = (-sq) % bq_
+    pk = (-sk) % bk_
+    qf = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kf = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vf = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    # fold heads into batch: (B*H, S, d)
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(-1, x.shape[1], d)
+    # q positions align to the suffix of the true (unpadded) kv sequence;
+    # kv_valid masks the padded rows for the non-causal case too.
+    out = flash_attention(fold(qf), fold(kf), fold(vf), causal=causal,
+                          window=window, bq=bq_, bk=bk_,
+                          q_offset=sk - sq, kv_valid=sk,
+                          interpret=interpret)
+    out = out.reshape(b, hq, sq + pq, d).transpose(0, 2, 1, 3)
+    return out[:, :sq]
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    if hq != hkv:
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+    return _ref.attention_ref(q, k, v, causal=causal, window=window)

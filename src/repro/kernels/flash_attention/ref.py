@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel (naive softmax attention)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int = 0) -> jnp.ndarray:
+    """q: (B, Sq, H, d); k, v: (B, Sk, H, d) — same head count (the GQA
+    group expansion happens in ops.py)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    q_pos = jnp.arange(sq)[:, None] + (sk - sq)   # aligned to the suffix
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = _softmax(s)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def _softmax(s):
+    m = s.max(axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    return e / e.sum(axis=-1, keepdims=True)

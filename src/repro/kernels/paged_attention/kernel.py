@@ -1,0 +1,101 @@
+"""Paged decode attention — FengHuang KV paging at kernel granularity.
+
+The KV cache lives as fixed-size pages in a global HBM pool (the kernel's
+"remote tier"); the page table is **scalar-prefetched**
+(``PrefetchScalarGridSpec``) so the BlockSpec index_map can look up which
+physical page to DMA into VMEM for each grid step — the hardware analogue
+of the paper's Tensor Prefetcher: the next page's fetch is issued by the
+Mosaic pipeline while the current page is being reduced.
+
+Grid: (batch, kv_heads, pages_per_seq); online-softmax state in VMEM
+scratch across the page dimension.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(page_table_ref, seq_lens_ref,      # scalar-prefetch refs
+            q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *,
+            page: int, n_pages: int, scale: float):
+    b = pl.program_id(0)
+    p_idx = pl.program_id(2)
+
+    @pl.when(p_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                               # (G, d)
+    k = k_ref[0, :, 0, :]                         # (page, d)
+    v = v_ref[0, :, 0, :]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = p_idx * page + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)                    # (G, page)
+    valid = pos < seq_lens_ref[b]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(p_idx == n_pages - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    page_table: jax.Array, seq_lens: jax.Array, *,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Hkv, G, d); pages: (P, page, Hkv, d);
+    page_table: (B, n_pages) int32; seq_lens: (B,) int32.
+    Returns (B, Hkv, G, d)."""
+    b, hkv, g, d = q.shape
+    n_pages = page_table.shape[1]
+    page = k_pages.shape[1]
+    scale = 1.0 / math.sqrt(d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bb, h, p, pt, sl: (bb, h, 0, 0)),
+            # the page table drives which physical page is DMA'd
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bb, h, p, pt, sl: (pt[bb, p], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda bb, h, p, pt, sl: (pt[bb, p], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bb, h, p, pt, sl: (bb, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, page=page, n_pages=n_pages, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(page_table, seq_lens, q, k_pages, v_pages)

@@ -1,0 +1,71 @@
+"""jit'd wrapper for paged decode attention + cache pool management."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+           page_table: jax.Array, seq_lens: jax.Array, *,
+           interpret: bool = False) -> jax.Array:
+    """q: (B, Hkv, G, d) single decode token -> (B, Hkv, G, d)."""
+    return paged_attention(q, k_pages, v_pages, page_table, seq_lens,
+                           interpret=interpret)
+
+
+def attend_ref(q, k_pages, v_pages, page_table, seq_lens):
+    return paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens)
+
+
+class PagePool:
+    """Host-side page allocator for the paged KV cache.
+
+    Sequences own lists of fixed-size pages from a global pool — the
+    FengHuang remote tier holds the pool; per-sequence page tables are the
+    prefetcher's routing metadata."""
+
+    def __init__(self, num_pages: int, page_size: int, kv_heads: int,
+                 head_dim: int, dtype=jnp.bfloat16):
+        self.page_size = page_size
+        self.k = jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype)
+        self.v = jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype)
+        self.free = list(range(num_pages - 1, 0, -1))   # page 0 = null page
+        self.tables: dict[int, list[int]] = {}
+        self.lens: dict[int, int] = {}
+
+    def alloc_seq(self, uid: int) -> None:
+        self.tables[uid] = []
+        self.lens[uid] = 0
+
+    def append(self, uid: int, k_tok: jax.Array, v_tok: jax.Array) -> None:
+        """k_tok/v_tok: (kv_heads, head_dim) — one token's KV."""
+        pos = self.lens[uid]
+        if pos % self.page_size == 0:
+            if not self.free:
+                raise MemoryError("page pool exhausted")
+            self.tables[uid].append(self.free.pop())
+        page_id = self.tables[uid][-1]
+        slot = pos % self.page_size
+        self.k = self.k.at[page_id, slot].set(k_tok)
+        self.v = self.v.at[page_id, slot].set(v_tok)
+        self.lens[uid] = pos + 1
+
+    def free_seq(self, uid: int) -> None:
+        self.free.extend(self.tables.pop(uid, []))
+        self.lens.pop(uid, None)
+
+    def batch_tables(self, uids: list[int], n_pages: int) -> jax.Array:
+        out = []
+        for u in uids:
+            t = self.tables.get(u, [])
+            out.append(t[:n_pages] + [0] * max(0, n_pages - len(t)))
+        return jnp.asarray(out, jnp.int32)
+
+    def batch_lens(self, uids: list[int]) -> jax.Array:
+        return jnp.asarray([self.lens.get(u, 0) for u in uids], jnp.int32)

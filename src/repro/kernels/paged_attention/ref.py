@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens):
+    """Decode attention over a paged KV cache.
+
+    q:          (B, Hkv, G, d)       one query token, grouped heads
+    k_pages:    (P, page, Hkv, d)    global page pool
+    v_pages:    (P, page, Hkv, d)
+    page_table: (B, pages_per_seq)   int32 page ids
+    seq_lens:   (B,)                 valid tokens per sequence
+    returns     (B, Hkv, G, d)
+    """
+    b, hkv, g, d = q.shape
+    pages_per_seq = page_table.shape[1]
+    page = k_pages.shape[1]
+
+    k = k_pages[page_table]          # (B, pages, page, Hkv, d)
+    v = v_pages[page_table]
+    k = k.reshape(b, pages_per_seq * page, hkv, d)
+    v = v.reshape(b, pages_per_seq * page, hkv, d)
+
+    s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    pos = jnp.arange(pages_per_seq * page)[None, :]
+    valid = pos < seq_lens[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,62 @@
+"""Streamed matmul — the FengHuang Tensor Prefetcher at kernel granularity.
+
+The weight matrix lives in HBM (the kernel-level "remote tier"); BlockSpec
+tiling streams (bk, bn) weight tiles through VMEM while the MXU consumes
+the previous tile — Pallas' implicit grid pipeline plays the paging
+stream, double-buffering tiles exactly like ``core.pager`` double-buffers
+layers.  Accumulation runs in an fp32 VMEM scratch across the K grid
+dimension.
+
+Block shapes are MXU-aligned (multiples of 128 on the matmul dims).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def streamed_matmul(x: jax.Array, w: jax.Array, *,
+                    bm: int = 256, bk: int = 512, bn: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """x: (M, K) @ w: (K, N) -> (M, N).
+
+    Requires M % bm == K % bk == N % bn == 0 (ops.py pads otherwise).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,37 @@
+"""jit'd public wrapper for the streamed matmul (padding + dispatch)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.streamed_matmul.kernel import streamed_matmul
+from repro.kernels.streamed_matmul.ref import streamed_matmul_ref
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul(x: jax.Array, w: jax.Array, *, bm: int = 256, bk: int = 512,
+           bn: int = 256, interpret: bool = False) -> jax.Array:
+    """Padded, jit'd streamed matmul; shapes need not be block-aligned."""
+    m, k = x.shape
+    _, n = w.shape
+    bm_, bk_, bn_ = min(bm, m) or 1, min(bk, k) or 1, min(bn, n) or 1
+    xp = _pad_to(x, bm_, bk_)
+    wp = _pad_to(w, bk_, bn_)
+    out = streamed_matmul(xp, wp, bm=bm_, bk=bk_, bn=bn_,
+                          interpret=interpret)
+    return out[:m, :n]
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return streamed_matmul_ref(x, w)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the streamed matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def streamed_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: (M, K), w: (K, N) -> (M, N) in fp32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)

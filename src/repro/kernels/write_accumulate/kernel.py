@@ -1,0 +1,54 @@
+"""Write-accumulate — the TAB's line-rate in-memory tensor reduction
+(§3.3.1) as a Pallas kernel.
+
+N xPU contributions stream through VMEM block-by-block and accumulate into
+the shared output buffer in fp32 — the memory-side half of the FengHuang
+AllReduce (each device's `write` targets the same address range; the
+accumulator applies `+=` at line rate; commutativity means no ordering is
+required, which is exactly why a grid-order-agnostic accumulation is
+legal).
+
+Grid: (num_blocks, N).  The shard index is the innermost dimension so the
+output block stays resident in the VMEM accumulator across contributions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref, acc_ref, *, n_shards: int):
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += x_ref[0].astype(jnp.float32)
+
+    @pl.when(n == n_shards - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def write_accumulate(shards: jax.Array, *, block: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """shards: (N, rows, cols) -> (rows, cols) elementwise sum."""
+    n, rows, cols = shards.shape
+    block = min(block, rows)
+    assert rows % block == 0, (rows, block)
+    grid = (rows // block, n)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_shards=n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block, cols), lambda i, j: (j, i, 0))],
+        out_specs=pl.BlockSpec((block, cols), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), shards.dtype),
+        scratch_shapes=[pltpu.VMEM((block, cols), jnp.float32)],
+        interpret=interpret,
+    )(shards)

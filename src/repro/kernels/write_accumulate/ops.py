@@ -1,0 +1,35 @@
+"""jit'd wrapper for the TAB write-accumulate (arbitrary pytree shapes)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.write_accumulate.kernel import write_accumulate
+from repro.kernels.write_accumulate.ref import write_accumulate_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def accumulate(shards: jax.Array, *, block: int = 512,
+               interpret: bool = False) -> jax.Array:
+    """shards: (N, ...) -> (...) sum; flattens, pads, dispatches."""
+    n = shards.shape[0]
+    orig_shape = shards.shape[1:]
+    flat = shards.reshape(n, -1)
+    size = flat.shape[1]
+    cols = min(512, size)
+    pad = (-size) % cols
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    rows = flat.shape[1] // cols
+    x = flat.reshape(n, rows, cols)
+    blk = min(block, rows)
+    while rows % blk:
+        blk -= 1
+    out = write_accumulate(x, block=blk, interpret=interpret)
+    return out.reshape(-1)[:size].reshape(orig_shape)
+
+
+def accumulate_ref(shards: jax.Array) -> jax.Array:
+    return write_accumulate_ref(shards)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the TAB write-accumulate reduction."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def write_accumulate_ref(shards: jnp.ndarray) -> jnp.ndarray:
+    """shards: (N, ...) — N xPU contributions -> elementwise sum (fp32
+    accumulation, result in input dtype)."""
+    return shards.astype(jnp.float32).sum(axis=0).astype(shards.dtype)

@@ -1,0 +1,358 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with ShapeDtypeStruct inputs (no allocation), record
+memory_analysis / cost_analysis / per-collective traffic for the roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40-cell sweep
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>[__paged].json.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as config_registry
+from repro.configs import ARCH_IDS, SUBQUADRATIC, build_model, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.runtime import optim
+from repro.runtime.sharding import batch_spec, named_shardings, resolve_spec
+from repro.runtime.train import TrainConfig, make_train_step
+from repro.runtime.serve import make_serve_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def _fit_spec(spec: P, shape, mesh) -> P:
+    """Drop axis entries that don't divide the dim (e.g. batch=1 cells)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, entry in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for n in names:
+            total *= sizes.get(n, 1)
+        if shape[i] % total == 0 and shape[i] >= total:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def sds(shape, dtype, mesh, spec):
+    resolved = _fit_spec(resolve_spec(spec, mesh), shape, mesh)
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, resolved))
+
+
+def abstract_params(model, mesh, *, paged: bool):
+    """ShapeDtypeStructs for params with production shardings attached."""
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    shardings = named_shardings(model.param_specs(), mesh,
+                                pageable_remote=paged)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def abstract_cache(model, mesh, batch, seq):
+    shapes = jax.eval_shape(lambda: model.init_cache(batch, seq))
+    shardings = named_shardings(model.cache_specs(), mesh)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=NamedSharding(mesh, _fit_spec(sh.spec, s.shape, mesh))),
+        shapes, shardings)
+
+
+def input_specs(arch: str, shape_name: str, mesh, *, paged: bool = False,
+                kv_quant: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    if paged:
+        cfg = cfg.with_pager(enabled=True, lookahead=1)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    model = build_model(cfg)
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    bspec = batch_spec(mesh)
+    params = abstract_params(model, mesh, paged=paged)
+
+    extra = {}
+    if cfg.family == "encdec":
+        extra["frames"] = sds((b, cfg.encoder_seq, cfg.d_model), jnp.float32,
+                              mesh, P(bspec[0], None, None))
+    if cfg.family == "vlm":
+        extra["patches"] = sds((b, cfg.num_patches, cfg.d_model), jnp.float32,
+                               mesh, P(bspec[0], None, None))
+
+    if info["kind"] == "train":
+        text = s - cfg.num_patches if cfg.family == "vlm" else s
+        batch = {
+            "tokens": sds((b, text), jnp.int32, mesh, P(bspec[0], None)),
+            "labels": sds((b, text), jnp.int32, mesh, P(bspec[0], None)),
+            **extra,
+        }
+        opt_shapes = jax.eval_shape(optim.init_opt_state, params)
+        opt_sharding = optim.opt_state_specs(model.param_specs())
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        data_ax = sizes.get("data", 1)
+
+        def zero1(sh, sp):
+            """ZeRO-1: moments additionally sharded over 'data' on the
+            first free dim that divides."""
+            spec = list(resolve_spec(sp, mesh)) + \
+                [None] * (len(sh.shape) - len(sp))
+            if sh.dtype == jnp.float32 and "data" in sizes:
+                for i, (dim, entry) in enumerate(zip(sh.shape, spec)):
+                    if entry is None and dim % data_ax == 0 and dim >= data_ax:
+                        spec[i] = "data"
+                        break
+            return jax.ShapeDtypeStruct(
+                sh.shape, sh.dtype,
+                sharding=NamedSharding(mesh, P(*spec)))
+
+        opt = jax.tree.map(
+            zero1, opt_shapes,
+            jax.tree.map(lambda s_: s_, opt_sharding,
+                         is_leaf=lambda x: isinstance(x, P)),
+            is_leaf=lambda x: hasattr(x, "shape"))
+        return model, cfg, dict(kind="train", params=params, opt=opt,
+                                batch=batch)
+    if info["kind"] == "prefill":
+        text = s - cfg.num_patches if cfg.family == "vlm" else s
+        tokens = sds((b, text), jnp.int32, mesh, P(bspec[0], None))
+        cache = abstract_cache(model, mesh, b, s)
+        return model, cfg, dict(kind="prefill", params=params, tokens=tokens,
+                                cache=cache, extra=extra)
+    # decode
+    tokens = sds((b, 1), jnp.int32, mesh, P(bspec[0], None))
+    cache = abstract_cache(model, mesh, b, s)
+    cur_pos = sds((b,), jnp.int32, mesh, P(bspec[0]))
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32,
+                               sharding=NamedSharding(mesh, P()))
+    return model, cfg, dict(kind="decode", params=params, tokens=tokens,
+                            cache=cache, cur_pos=cur_pos, key=key,
+                            extra=extra)
+
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*= \(?([a-z0-9_]+)\[([0-9,]*)\]")
+SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,]*)\]")
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+               "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+               "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-operand bytes of every collective op in the HLO."""
+    out: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(
+            r".*= ((?:\([^)]*\)|[a-z0-9_]+\[[0-9,]*\][^ ]*)) "
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)", line)
+        if not m:
+            continue
+        sig, op = m.group(1), m.group(2)
+        total = 0
+        for dt, dims in SHAPE_RE.findall(sig):
+            nbytes = DTYPE_BYTES.get(dt)
+            if nbytes is None:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * nbytes
+        out[op] = out.get(op, 0.0) + total
+        count[op] = count.get(op, 0) + 1
+    return {"bytes": out, "counts": count,
+            "total_bytes": float(sum(out.values()))}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             paged: bool = False, kv_quant: bool = False,
+             save: bool = True) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = (f"{arch}__{shape_name}__{mesh_name}" + ("__paged" if paged else "")
+           + ("__kvq" if kv_quant else ""))
+    info = SHAPES[shape_name]
+
+    cfg0 = get_config(arch)
+    if shape_name == "long_500k" and arch not in SUBQUADRATIC:
+        result = {"cell": tag, "status": "skipped",
+                  "reason": "full quadratic attention at 512k context "
+                            "(DESIGN.md long_500k policy)"}
+        if save:
+            _save(tag, result)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.monotonic()
+    model, cfg, spec = input_specs(arch, shape_name, mesh, paged=paged,
+                                   kv_quant=kv_quant)
+
+    # jax.set_mesh (not `with mesh:`) sets the ambient mesh that
+    # with_sharding_constraint(P(...)) and get_abstract_mesh() observe.
+    with jax.set_mesh(mesh):
+        if spec["kind"] == "train":
+            # microbatching: larger models train with gradient accumulation
+            # so per-microbatch activations fit HBM (standard production
+            # knob; communication is deferred to one reduction).
+            accum = 2 if cfg.d_model >= 5120 else 1
+            tstep = make_train_step(model, TrainConfig(accum_steps=accum))
+            lowered = jax.jit(tstep, donate_argnums=(0, 1)).lower(
+                spec["params"], spec["opt"], spec["batch"])
+        elif spec["kind"] == "prefill":
+            def prefill(params, tokens, cache, extra):
+                return model.prefill(params, tokens, cache, extra or None)
+            lowered = jax.jit(prefill, donate_argnums=(2,)).lower(
+                spec["params"], spec["tokens"], spec["cache"], spec["extra"])
+        else:
+            sstep = make_serve_step(model)
+            def serve(params, tokens, cache, cur_pos, key, extra):
+                del extra
+                return sstep(params, tokens, cache, cur_pos, key)
+            lowered = jax.jit(serve, donate_argnums=(2,)).lower(
+                spec["params"], spec["tokens"], spec["cache"],
+                spec["cur_pos"], spec["key"], spec["extra"])
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    from repro.launch.hlo_cost import module_cost
+    walked = module_cost(hlo)   # trip-count-aware per-device costs
+
+    result = {
+        "cell": tag, "status": "ok", "arch": arch, "shape": shape_name,
+        "mesh": mesh_name, "paged": paged,
+        "devices": int(np.prod(mesh.devices.shape)),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_device_bytes": (ma.argument_size_in_bytes +
+                                  ma.output_size_in_bytes +
+                                  ma.temp_size_in_bytes -
+                                  ma.alias_size_in_bytes),
+            "host_argument_bytes": ma.host_argument_size_in_bytes,
+            "host_temp_bytes": ma.host_temp_size_in_bytes,
+        },
+        "cost": {
+            # trip-count-aware walker (see hlo_cost.py); XLA's own numbers
+            # kept for reference — they count while bodies once.
+            "flops": walked["flops"],
+            "bytes_accessed": walked["bytes"],
+            "transcendentals": walked["transcendentals"],
+            "xla_flops": ca.get("flops", 0.0),
+            "xla_bytes_accessed": ca.get("bytes accessed", 0.0),
+        },
+        "collectives": {
+            "bytes": walked["collective_bytes"],
+            "counts": walked["collective_counts"],
+            "total_bytes": walked["collective_total_bytes"],
+            "once_per_loop": coll,
+        },
+    }
+    if save:
+        _save(tag, result)
+    return result
+
+
+def _save(tag: str, result: dict):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / f"{tag}.json").write_text(json.dumps(result, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="FengHuang configuration: weights in the remote "
+                         "tier, paged per layer")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache (dense family)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        tag = (f"{arch}__{shape}__{mesh_name}"
+               + ("__paged" if args.paged else "")
+               + ("__kvq" if args.kv_quant else ""))
+        if args.skip_existing and (RESULTS_DIR / f"{tag}.json").exists():
+            prev = json.loads((RESULTS_DIR / f"{tag}.json").read_text())
+            if prev.get("status") in ("ok", "skipped"):
+                print(f"[skip] {tag} (cached {prev['status']})")
+                continue
+        try:
+            r = run_cell(arch, shape, multi_pod=mp, paged=args.paged,
+                         kv_quant=args.kv_quant)
+            if r["status"] == "ok":
+                peak = r["memory"]["peak_device_bytes"] / 2**30
+                print(f"[ok]   {tag}: peak {peak:.2f} GiB/dev, "
+                      f"flops {r['cost']['flops']:.3e}, "
+                      f"coll {r['collectives']['total_bytes']:.3e} B, "
+                      f"compile {r['compile_s']:.1f}s")
+            else:
+                print(f"[skip] {tag}: {r['reason']}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"[FAIL] {tag}: {type(e).__name__}: {str(e)[:400]}")
+            _save(tag, {"cell": tag, "status": "failed",
+                        "error": f"{type(e).__name__}: {str(e)[:2000]}",
+                        "traceback": traceback.format_exc()[-4000:]})
+    print(f"done: {len(cells) - failures}/{len(cells)} cells passed")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

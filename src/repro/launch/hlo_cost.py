@@ -1,0 +1,447 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+under-reports flops/bytes/collective traffic for scan-structured models by
+a factor of num_layers (and microbatches, loss chunks, ...).  This module
+parses the post-optimization HLO text, builds the computation call graph,
+and multiplies each while body by its ``known_trip_count`` (falling back to
+the loop-condition compare constant).
+
+Reported per device (SPMD modules carry local shapes):
+
+* ``flops``            — 2 * numel(out) * contracted for every dot
+* ``bytes``            — operand + output bytes at fusion boundaries
+* ``collectives``      — per-op-kind payload bytes and instruction counts
+* ``transcendentals``  — numel of exp/log/tanh/rsqrt/power outputs
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "c64": 8, "c128": 16,
+}
+
+SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+SIMPLE_SHAPE_RE = re.compile(
+    r"^((?:\w+\[[0-9,]*\])(?:\{[^}]*\})?)\s+([\w\-]+)\((.*)$")
+
+
+def _parse_instr(line: str):
+    """'%name = SHAPE op(rest' -> (name, shape, op, rest) or None.
+
+    Handles tuple shapes with layout braces and /*index=N*/ comments
+    (which defeat a single regex)."""
+    m = ASSIGN_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.groups()
+    if rhs.startswith("("):           # tuple shape: find matching paren
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    shape = rhs[: i + 1]
+                    m2 = re.match(r"\s*([\w\-]+)\((.*)$", rhs[i + 1:])
+                    if not m2:
+                        return None
+                    return name, shape, m2.group(1), m2.group(2)
+        return None
+    m2 = SIMPLE_SHAPE_RE.match(rhs)
+    if not m2:
+        return None
+    shape, op, rest = m2.groups()
+    return name, shape, op, rest
+PARAM_RE = re.compile(r"%?([\w.\-]+):\s*((?:\([^)]*\))|(?:\w+\[[0-9,]*\](?:\{[0-9,]*\})?))")
+COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->.*\{")
+TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+CALLED_RE = re.compile(r"(?:condition|body|to_apply|calls)=%([\w.\-]+)")
+BRANCHES_RE = re.compile(r"branches=\{([^}]*)\}")
+
+SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "after-all", "partition-id", "replica-id",
+    "call", "opt-barrier", "domain", "add-dependency",
+}
+
+COLLECTIVE_OPS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+
+TRANSCENDENTAL_OPS = {"exponential", "log", "tanh", "rsqrt", "power",
+                      "logistic", "exponential-minus-one", "log-plus-one",
+                      "sine", "cosine", "sqrt"}
+
+
+def shape_bytes(shape_text: str) -> int:
+    """Total bytes of a (possibly tuple) shape string."""
+    total = 0
+    for dt, dims in SHAPE_RE.findall(shape_text):
+        nb = DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def shape_numel(shape_text: str) -> int:
+    m = SHAPE_RE.search(shape_text)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def shape_dims(shape_text: str) -> list[int]:
+    m = SHAPE_RE.search(shape_text)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    symtab: dict           # name -> shape text
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] += v * mult
+        for k, v in other.collective_counts.items():
+            self.collective_counts[k] += v * mult
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "bytes": self.bytes,
+            "transcendentals": self.transcendentals,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_counts": dict(self.collective_counts),
+            "collective_total_bytes": float(
+                sum(self.collective_bytes.values())),
+        }
+
+
+def parse_module(hlo: str) -> tuple[dict, str]:
+    """Returns ({name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = COMP_START_RE.match(line.strip())
+            if m and "{" in line:
+                name = m.group(1)
+                cur = Computation(name, [], {})
+                if line.strip().startswith("ENTRY"):
+                    entry = name
+                # parameters from the signature carry shapes
+                for pname, pshape in PARAM_RE.findall(m.group(2)):
+                    cur.symtab[pname] = pshape
+            continue
+        if line.strip() == "}" or line.strip().startswith("} //"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_instr(line)
+        if parsed:
+            name, shape, op, rest = parsed
+            cur.symtab[name] = shape
+            cur.instrs.append(Instr(name, shape, op, rest))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _operand_names(rest: str) -> list[str]:
+    # operands are inside the first balanced paren group
+    depth, end = 1, len(rest)
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return re.findall(r"%([\w.\-]+)", rest[:end])
+
+
+def _dot_flops(instr: Instr, symtab: dict) -> float:
+    out_numel = shape_numel(instr.shape)
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    ops = _operand_names(instr.rest)
+    if not mc or not ops:
+        return 2.0 * out_numel  # degenerate
+    lhs_shape = symtab.get(ops[0], "")
+    dims = shape_dims(lhs_shape)
+    contracted = 1
+    for idx in mc.group(1).split(","):
+        if idx and int(idx) < len(dims):
+            contracted *= dims[int(idx)]
+    return 2.0 * out_numel * contracted
+
+
+def _trip_count(instr: Instr, comps: dict) -> float:
+    m = TRIP_RE.search(instr.rest)
+    if m:
+        return float(m.group(1))
+    # fallback: find the compare bound in the condition computation
+    mc = re.search(r"condition=%([\w.\-]+)", instr.rest)
+    if mc and mc.group(1) in comps:
+        cond = comps[mc.group(1)]
+        consts = {}
+        for ins in cond.instrs:
+            mm = re.match(r"constant\((\d+)\)", ins.op + "(" + ins.rest)
+            if ins.op == "constant":
+                mm2 = re.match(r"(\d+)\)", ins.rest)
+                if mm2:
+                    consts[ins.name] = int(mm2.group(1))
+        if consts:
+            return float(max(consts.values()))
+    return 1.0
+
+
+PASSTHROUGH_OPS = {"convert", "bitcast", "copy", "reshape", "transpose",
+                   "broadcast"}
+
+
+def _fusion_bytes(ins: Instr, comp: Computation, comps: dict) -> float:
+    """Memory traffic of a fusion at its boundary.
+
+    A kLoop fusion makes ONE pass: each parameter is read only in the
+    region its internal consumers touch (a fused dynamic-slice reads just
+    the slice), and a root dynamic-update-slice writes just the updated
+    region (the rest of the buffer is aliased through).  Pure dtype/layout
+    chains (convert/bitcast/copy) are followed transparently — XLA:CPU
+    emulates bf16 in f32 and wraps buffers in converts that native-bf16
+    TPUs never materialize.
+    """
+    callees = CALLED_RE.findall(ins.rest)
+    fused = comps.get(callees[0]) if callees else None
+    ops_names = _operand_names(ins.rest)
+    if fused is None:
+        nbytes = shape_bytes(ins.shape)
+        for o in ops_names:
+            nbytes += shape_bytes(comp.symtab.get(o, ""))
+        return nbytes
+
+    # map parameter NUMBER -> name ("%p = shape parameter(2)" ordering in
+    # the text does not follow the operand order)
+    by_idx: dict[int, str] = {}
+    for fi in fused.instrs:
+        if fi.op == "parameter":
+            m = re.match(r"(\d+)\)", fi.rest)
+            if m:
+                by_idx[int(m.group(1))] = fi.name
+    param_names = [by_idx.get(i, "") for i in range(len(ops_names))]
+
+    # Pure dtype/layout fusion (convert/bitcast/copy/transpose chains):
+    # the consumer reads the narrow form and widens in registers/VMEM on
+    # TPU (bf16 native, int8 dequant fused into the MXU load) — charge a
+    # single pass at the NARROW width instead of in+out at both widths.
+    body_ops = [fi.op for fi in fused.instrs if fi.op != "parameter"]
+    if body_ops and all(op in PASSTHROUGH_OPS or op == "multiply"
+                        for op in body_ops):
+        in_bytes = sum(shape_bytes(comp.symtab.get(o, "")) for o in ops_names)
+        return 2.0 * min(in_bytes, shape_bytes(ins.shape))
+
+    # def-use inside the fused computation
+    consumers: dict[str, list[Instr]] = {}
+    producer: dict[str, Instr] = {}
+    for fi in fused.instrs:
+        producer[fi.name] = fi
+        for o in _operand_names(fi.rest):
+            consumers.setdefault(o, []).append(fi)
+
+    def terminal_consumers(name: str, depth: int = 0) -> list[Instr]:
+        """Consumers reached through pure dtype/layout chains."""
+        outs: list[Instr] = []
+        for c in consumers.get(name, []):
+            if c.op in PASSTHROUGH_OPS and depth < 8:
+                outs.extend(terminal_consumers(c.name, depth + 1))
+            else:
+                outs.append(c)
+        return outs
+
+    root = fused.instrs[-1] if fused.instrs else None
+
+    def effective_root(r: Instr | None, depth: int = 0) -> Instr | None:
+        """Skip convert/bitcast wrappers around the real root op."""
+        while (r is not None and r.op in PASSTHROUGH_OPS and depth < 8):
+            srcs = _operand_names(r.rest)
+            if not srcs or srcs[0] not in producer:
+                break
+            r = producer[srcs[0]]
+            depth += 1
+        return r
+
+    eroot = effective_root(root)
+    # in-place updates: DUS and scatter write only the updated region on
+    # hardware with buffer aliasing (TPU); the base buffer passes through.
+    INPLACE = {"dynamic-update-slice": 1, "scatter": 2}
+    inplace_base: str | None = None
+    upd_idx = INPLACE.get(eroot.op) if eroot is not None else None
+    if upd_idx is not None:
+        e_ops = _operand_names(eroot.rest)
+        if e_ops:
+            b = e_ops[0]
+            for _ in range(8):
+                if b in param_names:
+                    inplace_base = b
+                    break
+                pr = producer.get(b)
+                if pr is None or pr.op not in PASSTHROUGH_OPS:
+                    break
+                srcs = _operand_names(pr.rest)
+                if not srcs:
+                    break
+                b = srcs[0]
+
+    total = 0.0
+    for idx, o in enumerate(ops_names):
+        pname = param_names[idx] if idx < len(param_names) else None
+        full = shape_bytes(comp.symtab.get(o, ""))
+        if pname == inplace_base and inplace_base is not None:
+            continue   # aliased passthrough: only the region is written
+        terms = terminal_consumers(pname) if pname else []
+        if terms and all(t.op in ("dynamic-slice", "slice", "gather")
+                         for t in terms):
+            total += sum(shape_bytes(t.shape) for t in terms)
+        else:
+            total += full
+    if upd_idx is not None:
+        e_ops = _operand_names(eroot.rest)
+        upd = e_ops[upd_idx] if len(e_ops) > upd_idx else ""
+        upd_bytes = shape_bytes(fused.symtab.get(upd, ""))
+        # read+write of the updated region only (native-dtype size)
+        total += 2 * min(upd_bytes, shape_bytes(ins.shape))
+    else:
+        total += shape_bytes(ins.shape)
+    return max(total, 0.0)
+
+
+def computation_cost(name: str, comps: dict, memo: dict) -> Cost:
+    if name in memo:
+        return memo[name]
+    memo[name] = Cost()  # cycle guard
+    comp = comps.get(name)
+    if comp is None:
+        return memo[name]
+    cost = Cost()
+    for ins in comp.instrs:
+        op = ins.op
+        if op == "while":
+            callees = CALLED_RE.findall(ins.rest)
+            trip = _trip_count(ins, comps)
+            for callee in callees:
+                cost.add(computation_cost(callee, comps, memo), trip)
+            continue
+        if op == "conditional":
+            mb = BRANCHES_RE.search(ins.rest)
+            if mb:
+                branch_costs = [computation_cost(b.strip().lstrip("%"),
+                                                 comps, memo)
+                                for b in mb.group(1).split(",")]
+                if branch_costs:
+                    best = max(branch_costs, key=lambda c: c.flops + c.bytes)
+                    cost.add(best)
+            continue
+        if op in ("call", "async-start"):
+            for callee in CALLED_RE.findall(ins.rest):
+                cost.add(computation_cost(callee, comps, memo))
+            continue
+        if op == "fusion":
+            for callee in CALLED_RE.findall(ins.rest):
+                sub = computation_cost(callee, comps, memo)
+                # flops & transcendentals inside the fusion body; traffic
+                # at the fusion boundary only.
+                cost.flops += sub.flops
+                cost.transcendentals += sub.transcendentals
+        if op in COLLECTIVE_OPS:
+            kind = op.replace("-start", "")
+            payload = max(
+                shape_bytes(ins.shape),
+                sum(shape_bytes(comp.symtab.get(o, ""))
+                    for o in _operand_names(ins.rest)))
+            cost.collective_bytes[kind] += payload
+            cost.collective_counts[kind] += 1
+        if op == "dot":
+            cost.flops += _dot_flops(ins, comp.symtab)
+        if op == "convolution":
+            cost.flops += 2.0 * shape_numel(ins.shape) * 128  # coarse
+        if op in TRANSCENDENTAL_OPS:
+            cost.transcendentals += shape_numel(ins.shape)
+        if op not in SKIP_BYTES_OPS and not op.endswith("-done"):
+            ops_names = _operand_names(ins.rest)
+            if op == "fusion":
+                nbytes = _fusion_bytes(ins, comp, comps)
+            elif op == "dynamic-update-slice":
+                # in-place (aliased): traffic = read+write of the update
+                # region, not the whole buffer.
+                upd = ops_names[1] if len(ops_names) > 1 else ""
+                nbytes = 2 * shape_bytes(comp.symtab.get(upd, ""))
+            elif op in ("dynamic-slice", "slice", "gather"):
+                nbytes = 2 * shape_bytes(ins.shape)
+            elif op == "scatter":
+                upd = ops_names[2] if len(ops_names) > 2 else ""
+                nbytes = 3 * shape_bytes(comp.symtab.get(upd, ""))
+            else:
+                nbytes = shape_bytes(ins.shape)
+                for o in ops_names:
+                    nbytes += shape_bytes(comp.symtab.get(o, ""))
+            cost.bytes += nbytes
+    memo[name] = cost
+    return cost
+
+
+def module_cost(hlo_text: str) -> dict:
+    comps, entry = parse_module(hlo_text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    memo: dict[str, Cost] = {}
+    return computation_cost(entry, comps, memo).as_dict()

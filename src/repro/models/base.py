@@ -1,0 +1,178 @@
+"""Model zoo foundations: configs, parameter specs, dtype policy.
+
+Pure-functional JAX models.  Parameters are nested dicts of arrays; every
+init function has a twin returning the matching pytree of
+``PartitionSpec`` so the runtime can shard params for any mesh.
+
+Divisibility policy (documented in DESIGN.md §4): the tensor-parallel mesh
+axis is 16, so head counts / expert counts / vocab are **padded** to the
+next multiple of the relevant quantum; KV heads are **replicated** up to
+the axis size when smaller.  Padding overhead is charged in the roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Literal
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# Logical mesh axis names (resolved by runtime.sharding for single/multi-pod).
+BATCH_AXES = ("pod", "data")   # batch dim is sharded over these (if present)
+MODEL_AXIS = "model"
+
+VOCAB_QUANTUM = 256            # vocab padded to a multiple of this
+DEFAULT_TP = 16                # production model-axis size
+
+
+def pad_to(n: int, q: int) -> int:
+    return ((n + q - 1) // q) * q
+
+
+@dataclasses.dataclass(frozen=True)
+class PagerPolicy:
+    """FengHuang paging policy carried in the model config."""
+    enabled: bool = False
+    lookahead: int = 1
+    offload_kv: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Superset config covering every assigned architecture family."""
+
+    name: str
+    family: Literal["dense", "moe", "hybrid", "ssm", "encdec", "vlm"]
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+
+    # attention options
+    qkv_bias: bool = False           # qwen2.5
+    qk_norm: bool = False            # qwen3
+    rope_theta: float = 10000.0
+    sliding_window: int = 0          # 0 = full attention
+    tie_embeddings: bool = False
+
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # hybrid (recurrentgemma): pattern of block kinds, e.g. ("rec","rec","att")
+    block_pattern: tuple[str, ...] = ()
+    rglru_conv_width: int = 4
+
+    # ssm (xlstm): alternating mlstm/slstm
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+
+    # encdec (whisper)
+    num_encoder_layers: int = 0
+    encoder_seq: int = 1500          # precomputed frame embeddings (stub)
+
+    # vlm (llava)
+    num_patches: int = 576           # anyres patch embeddings (stub)
+
+    # numerics / system
+    dtype: Any = jnp.bfloat16
+    kv_quant: bool = False           # int8 KV cache (per-token-per-head scale)
+    norm_eps: float = 1e-6
+    tp: int = DEFAULT_TP             # model-axis size the config targets
+    pager: PagerPolicy = dataclasses.field(default_factory=PagerPolicy)
+    collective_schedule: Literal["tab", "ring"] = "tab"
+    # attention implementation for prefill/train
+    q_block: int = 512
+    kv_block: int = 512
+    # remat policy for train
+    remat: bool = True
+
+    # ---------- padded dims -------------------------------------------------
+    @property
+    def padded_heads(self) -> int:
+        return pad_to(self.num_heads, self.tp)
+
+    @property
+    def padded_kv_heads(self) -> int:
+        if self.num_kv_heads >= self.tp:
+            return pad_to(self.num_kv_heads, self.tp)
+        return self.tp  # replicate small KV-head counts up to the axis
+
+    @property
+    def kv_repeat(self) -> int:
+        """How many times each true KV head is replicated."""
+        return self.padded_kv_heads // math.gcd(self.padded_kv_heads,
+                                                self.num_kv_heads) \
+            if self.num_kv_heads else 1
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to(self.vocab, VOCAB_QUANTUM)
+
+    @property
+    def padded_experts(self) -> int:
+        return pad_to(self.num_experts, self.tp) if self.num_experts else 0
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.padded_heads // self.padded_kv_heads
+
+    def with_pager(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, pager=PagerPolicy(**kw))
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        small = dict(
+            num_layers=min(self.num_layers, 2 if not self.block_pattern
+                           else len(self.block_pattern)),
+            d_model=128, num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) or 2,
+            d_ff=256 if self.d_ff else 0, vocab=512, head_dim=32, tp=1,
+            encoder_seq=16, num_patches=8, sliding_window=(
+                8 if self.sliding_window else 0),
+        )
+        if self.num_experts:
+            # high capacity factor => no token dropping at smoke scale, so
+            # decode matches teacher forcing exactly (capacity-based MoE
+            # drops differently for different batch shapes by design).
+            small.update(num_experts=4, top_k=min(self.top_k, 2),
+                         capacity_factor=8.0)
+        if self.block_pattern:
+            small.update(block_pattern=self.block_pattern[:3] or ("rec", "rec", "att"))
+        if self.num_encoder_layers:
+            small.update(num_encoder_layers=2)
+        small.update(overrides)
+        return dataclasses.replace(self, name=self.name + "-smoke", **small)
+
+
+# ---------------------------------------------------------------------------
+# Param init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def spec_like(tree: Any, spec_fn) -> Any:
+    """Build a PartitionSpec pytree parallel to ``tree``."""
+    return jax.tree.map(spec_fn, tree)

@@ -1,0 +1,222 @@
+"""Whisper-style encoder-decoder backbone (whisper-base).
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, T_enc, d_model); the encoder is
+the transformer part only (bidirectional self-attention + GELU MLP).
+Deviation note (DESIGN.md): decoder positions use RoPE instead of learned
+absolute embeddings — backbone-only fidelity.
+
+Cross-attention K/V are computed once from the encoder output and live in
+the cache — on FengHuang they sit in the remote tier between decode steps
+(a natural fit: written once, read every step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import pager
+from repro.models import layers as L
+from repro.models.base import BATCH_AXES, ModelConfig, split_keys
+from repro.models.transformer import _pager_cfg
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ----- params -------------------------------------------------------
+    def _enc_layer(self, key) -> dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {"attn": L.attn_params(k1, cfg),
+                "mlp": L.mlp2_params(k2, cfg),
+                "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+                "ln2": jnp.ones((cfg.d_model,), cfg.dtype)}
+
+    def _dec_layer(self, key) -> dict:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"attn": L.attn_params(k1, cfg),
+                "xattn": L.attn_params(k2, cfg, cross=True),
+                "mlp": L.mlp2_params(k3, cfg),
+                "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+                "lnx": jnp.ones((cfg.d_model,), cfg.dtype),
+                "ln2": jnp.ones((cfg.d_model,), cfg.dtype)}
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ke, k1, k2 = jax.random.split(key, 3)
+        enc_keys = jnp.stack(split_keys(k1, cfg.num_encoder_layers))
+        dec_keys = jnp.stack(split_keys(k2, cfg.num_layers))
+        return {
+            "embed": L.embed_params(ke, cfg),
+            "enc_layers": jax.vmap(self._enc_layer)(enc_keys),
+            "enc_ln": jnp.ones((cfg.d_model,), cfg.dtype),
+            "dec_layers": jax.vmap(self._dec_layer)(dec_keys),
+            "ln_f": jnp.ones((cfg.d_model,), cfg.dtype),
+        }
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        return {
+            "embed": L.embed_specs(cfg),
+            "enc_layers": {"attn": L.attn_specs(cfg), "mlp": L.mlp2_specs(),
+                           "ln1": P(None, None), "ln2": P(None, None)},
+            "enc_ln": P(None),
+            "dec_layers": {"attn": L.attn_specs(cfg),
+                           "xattn": L.attn_specs(cfg, cross=True),
+                           "mlp": L.mlp2_specs(),
+                           "ln1": P(None, None), "lnx": P(None, None),
+                           "ln2": P(None, None)},
+            "ln_f": P(None),
+        }
+
+    # ----- encoder --------------------------------------------------------
+    def encode(self, params: dict, frames: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        positions = jnp.arange(frames.shape[1])
+
+        def body(h, lp):
+            a = L.attn_forward(lp["attn"],
+                               L.rmsnorm(h, lp["ln1"], cfg.norm_eps),
+                               positions, cfg, causal=False)
+            h = h + a
+            h = h + L.mlp2_forward(lp["mlp"],
+                                   L.rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            return h, None
+
+        h, _ = pager.paged_scan(body, frames.astype(cfg.dtype),
+                                params["enc_layers"], config=_pager_cfg(cfg))
+        return L.rmsnorm(h, params["enc_ln"], cfg.norm_eps)
+
+    # ----- decoder blocks ---------------------------------------------------
+    def _dec_block(self, lp, h, positions, enc_kv):
+        cfg = self.cfg
+        h = h + L.attn_forward(lp["attn"],
+                               L.rmsnorm(h, lp["ln1"], cfg.norm_eps),
+                               positions, cfg, causal=True)
+        h = h + L.cross_attn_forward(lp["xattn"],
+                                     L.rmsnorm(h, lp["lnx"], cfg.norm_eps),
+                                     enc_kv, cfg)
+        h = h + L.mlp2_forward(lp["mlp"],
+                               L.rmsnorm(h, lp["ln2"], cfg.norm_eps))
+        return h
+
+    # ----- passes -------------------------------------------------------------
+    def forward_hidden(self, params: dict, tokens: jax.Array,
+                       extra: dict | None = None) -> jax.Array:
+        """Train forward (pre-head).  extra['frames']: (B, T_enc, d)."""
+        from repro.runtime.sharding import SEQ_SHARDED_ACTS, maybe_constraint
+        cfg = self.cfg
+        enc_out = self.encode(params, extra["frames"])
+        x = L.embed_lookup(params["embed"], tokens)
+        positions = jnp.arange(x.shape[1])
+
+        def body(h, lp):
+            h = maybe_constraint(h, SEQ_SHARDED_ACTS)
+            def run(h):
+                enc_kv = L.cross_kv(lp["xattn"], enc_out, cfg)
+                return self._dec_block(lp, h, positions, enc_kv)
+            if cfg.remat:
+                run = jax.checkpoint(run)
+            return run(h), None
+
+        x, _ = pager.paged_scan(body, x, params["dec_layers"],
+                                config=_pager_cfg(cfg))
+        return L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+
+    def forward(self, params: dict, tokens: jax.Array,
+                extra: dict | None = None) -> jax.Array:
+        x = self.forward_hidden(params, tokens, extra)
+        return L.lm_head(params["embed"], x, self.cfg)
+
+    # ----- cache ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        cfg = self.cfg
+        kv = (cfg.num_layers, batch, cfg.padded_kv_heads, max_seq,
+              cfg.head_dim)
+        xkv = (cfg.num_layers, batch, cfg.padded_kv_heads, cfg.encoder_seq,
+               cfg.head_dim)
+        return {"k": jnp.zeros(kv, cfg.dtype), "v": jnp.zeros(kv, cfg.dtype),
+                "xk": jnp.zeros(xkv, cfg.dtype),
+                "xv": jnp.zeros(xkv, cfg.dtype)}
+
+    def cache_specs(self) -> dict:
+        s = P(None, BATCH_AXES, "model", None, None)
+        return {"k": s, "v": s, "xk": s, "xv": s}
+
+    def prefill(self, params: dict, tokens: jax.Array, cache: dict,
+                extra: dict | None = None):
+        cfg = self.cfg
+        enc_out = self.encode(params, extra["frames"])
+        x = L.embed_lookup(params["embed"], tokens)
+        positions = jnp.arange(x.shape[1])
+
+        def body(h, lp):
+            enc_kv = L.cross_kv(lp["xattn"], enc_out, cfg)
+            a, (k, v) = L.attn_prefill_kv(
+                lp["attn"], L.rmsnorm(h, lp["ln1"], cfg.norm_eps),
+                positions, cfg)
+            h = h + a
+            h = h + L.cross_attn_forward(
+                lp["xattn"], L.rmsnorm(h, lp["lnx"], cfg.norm_eps), enc_kv, cfg)
+            h = h + L.mlp2_forward(lp["mlp"],
+                                   L.rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            return h, (L.to_cache_layout(k), L.to_cache_layout(v),
+                       L.to_cache_layout(enc_kv[0]),
+                       L.to_cache_layout(enc_kv[1]))
+
+        x, (k, v, xk, xv) = pager.paged_scan(
+            body, x, params["dec_layers"], config=_pager_cfg(cfg))
+        cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=3),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=3),
+            "xk": xk.astype(cache["xk"].dtype),
+            "xv": xv.astype(cache["xv"].dtype),
+        }
+        x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+        return L.lm_head(params["embed"], x, cfg), cache
+
+    def decode_step(self, params: dict, tokens: jax.Array, cache: dict,
+                    cur_pos: jax.Array, extra: dict | None = None):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], tokens)
+
+        b = x.shape[0]
+
+        def body(h, lp, cache_layer):
+            ck, cv, xk, xv = cache_layer
+            a, k0, v0 = L.attn_decode(
+                lp["attn"], L.rmsnorm(h, lp["ln1"], cfg.norm_eps),
+                ck, cv, cur_pos, cfg)
+            h = h + a
+            # cross attention: single query against precomputed enc K/V
+            q = L.rmsnorm(h, lp["lnx"], cfg.norm_eps)
+            hq, hd = cfg.padded_heads, cfg.head_dim
+            qh = (q @ lp["xattn"]["wq"]).reshape(b, 1, hq, hd)
+            o = L.decode_attention(qh, xk, xv,
+                                   jnp.full((b,), xk.shape[2] - 1, jnp.int32))
+            h = h + (o.reshape(b, 1, -1) @ lp["xattn"]["wo"])
+            h = h + L.mlp2_forward(lp["mlp"],
+                                   L.rmsnorm(h, lp["ln2"], cfg.norm_eps))
+            return h, (k0, v0)
+
+        # caches read-only in the scan; one batched write afterwards.
+        x, (k_new, v_new) = pager.paged_scan(
+            body, x, params["dec_layers"],
+            xs=(cache["k"], cache["v"], cache["xk"], cache["xv"]),
+            config=_pager_cfg(cfg), page_xs=cfg.pager.offload_kv)
+        bidx = jnp.arange(b)
+        cache = {
+            "k": cache["k"].at[:, bidx, :, cur_pos].set(
+                k_new.transpose(1, 0, 2, 3).astype(cache["k"].dtype)),
+            "v": cache["v"].at[:, bidx, :, cur_pos].set(
+                v_new.transpose(1, 0, 2, 3).astype(cache["v"].dtype)),
+            "xk": cache["xk"], "xv": cache["xv"],
+        }
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return L.lm_head(params["embed"], x, cfg), cache

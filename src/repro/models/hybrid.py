@@ -1,0 +1,450 @@
+"""Pattern-structured LMs: RecurrentGemma-style hybrids (RG-LRU + local
+attention, pattern rec/rec/att) and the machinery shared with xLSTM.
+
+``GroupedLM`` scans over *groups* (one repetition of ``cfg.block_pattern``);
+layers left over when ``num_layers % len(pattern) != 0`` form an explicit
+tail (e.g. recurrentgemma-9b: 38 = 12x(rec,rec,att) + 2x rec).  Each block
+kind defines init/specs/train/prefill/decode hooks; recurrent kinds carry
+O(1) state, which is what makes the ``long_500k`` decode shape runnable for
+these families.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import pager
+from repro.models import layers as L
+from repro.models.base import ModelConfig, dense_init, split_keys
+from repro.models.transformer import _pager_cfg
+
+RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin / RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+def rglru_params(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    w = cfg.rglru_conv_width
+    return {
+        "ln": jnp.ones((d,), cfg.dtype),
+        "w_x": dense_init(ks[0], (d, d), cfg.dtype),
+        "w_y": dense_init(ks[1], (d, d), cfg.dtype),
+        "conv_w": dense_init(ks[2], (w, d), cfg.dtype, scale=1.0 / w),
+        "conv_b": jnp.zeros((d,), cfg.dtype),
+        "w_a": dense_init(ks[3], (d, d), cfg.dtype),
+        "b_a": jnp.zeros((d,), cfg.dtype),
+        "w_i": dense_init(ks[4], (d, d), cfg.dtype),
+        "b_i": jnp.zeros((d,), cfg.dtype),
+        # Λ init so a^c in ~(0.9, 0.999)
+        "lam": jnp.asarray(
+            jax.random.uniform(ks[5], (d,), jnp.float32, 0.3, 1.5)),
+        "w_out": dense_init(ks[6], (d, d), cfg.dtype),
+    }
+
+
+def rglru_specs() -> dict:
+    return {
+        "ln": P(None, None), "w_x": P(None, None, "model"),
+        "w_y": P(None, None, "model"),
+        "conv_w": P(None, None, "model"), "conv_b": P(None, "model"),
+        "w_a": P(None, None, "model"), "b_a": P(None, "model"),
+        "w_i": P(None, None, "model"), "b_i": P(None, "model"),
+        "lam": P(None, "model"), "w_out": P(None, "model", None),
+    }
+
+
+def _rglru_gates(p: dict, u: jax.Array):
+    """u: (..., d) conv output.  Returns (a, beta*i*u) in fp32."""
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(u32 @ p["w_a"].astype(jnp.float32) +
+                       p["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(u32 @ p["w_i"].astype(jnp.float32) +
+                       p["b_i"].astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return a, beta * i * u32
+
+
+def _causal_conv(p: dict, x: jax.Array, state: jax.Array | None = None):
+    """Per-channel causal conv, width W.  x: (B,S,d).
+
+    Returns (y, new_state) where state is the last W-1 inputs."""
+    w = p["conv_w"].shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], w - 1, x.shape[-1]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)               # (B, S+W-1, d)
+    y = sum(xx[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(w))
+    y = y + p["conv_b"]
+    new_state = xx[:, -(w - 1):]
+    return y, new_state
+
+
+def rglru_seq(p: dict, x: jax.Array, h0: jax.Array | None = None):
+    """Full-sequence RG-LRU via associative scan.  x: (B,S,d) normed input.
+
+    Returns (out (B,S,d), (h_last, conv_state))."""
+    xb = x @ p["w_x"]
+    gate = jax.nn.gelu(x @ p["w_y"])
+    u, conv_state = _causal_conv(p, xb)
+    a, b = _rglru_gates(p, u)                               # (B,S,d) fp32
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype)
+    out = (h * gate) @ p["w_out"]
+    return out, (h[:, -1], conv_state)
+
+
+def rglru_step(p: dict, x: jax.Array, h: jax.Array, conv_state: jax.Array):
+    """Single-token RG-LRU.  x: (B,1,d); h: (B,d); conv_state: (B,W-1,d)."""
+    xb = x @ p["w_x"]
+    gate = jax.nn.gelu(x @ p["w_y"])
+    u, conv_state = _causal_conv(p, xb, conv_state)
+    a, b = _rglru_gates(p, u[:, 0])                         # (B,d)
+    h = (a * h.astype(jnp.float32) + b).astype(x.dtype)
+    out = (h[:, None] * gate) @ p["w_out"]
+    return out, h, conv_state
+
+
+# ---------------------------------------------------------------------------
+# Block-kind registry
+# ---------------------------------------------------------------------------
+
+class BlockKinds:
+    """Hooks per block kind; subclassed by families to add kinds."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- init / specs
+    def init_block(self, key, kind: str) -> dict:
+        cfg = self.cfg
+        if kind == "att":
+            k1, k2 = jax.random.split(key)
+            return {"attn": L.attn_params(k1, cfg),
+                    "mlp": L.mlp_params(k2, cfg),
+                    "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+                    "ln2": jnp.ones((cfg.d_model,), cfg.dtype)}
+        if kind == "rec":
+            k1, k2 = jax.random.split(key)
+            return {"rglru": rglru_params(k1, cfg),
+                    "mlp": L.mlp_params(k2, cfg),
+                    "ln2": jnp.ones((cfg.d_model,), cfg.dtype)}
+        raise ValueError(kind)
+
+    def block_specs(self, kind: str) -> dict:
+        if kind == "att":
+            return {"attn": L.attn_specs(self.cfg), "mlp": L.mlp_specs(),
+                    "ln1": P(None, None), "ln2": P(None, None)}
+        if kind == "rec":
+            return {"rglru": rglru_specs(), "mlp": L.mlp_specs(),
+                    "ln2": P(None, None)}
+        raise ValueError(kind)
+
+    # -- state
+    def init_state(self, kind: str, batch: int, max_seq: int) -> Any:
+        cfg = self.cfg
+        if kind == "att":
+            s = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+            shape = (batch, cfg.padded_kv_heads, s, cfg.head_dim)
+            return {"k": jnp.zeros(shape, cfg.dtype),
+                    "v": jnp.zeros(shape, cfg.dtype)}
+        if kind == "rec":
+            return {"h": jnp.zeros((batch, cfg.d_model), cfg.dtype),
+                    "conv": jnp.zeros((batch, cfg.rglru_conv_width - 1,
+                                       cfg.d_model), cfg.dtype)}
+        raise ValueError(kind)
+
+    def state_specs(self, kind: str) -> Any:
+        from repro.models.base import BATCH_AXES
+        if kind == "att":
+            s = P(None, BATCH_AXES, "model", None, None)
+            return {"k": s, "v": s}
+        if kind == "rec":
+            return {"h": P(None, BATCH_AXES, "model"),
+                    "conv": P(None, BATCH_AXES, None, "model")}
+        raise ValueError(kind)
+
+    # -- apply
+    def train(self, kind: str, p: dict, x, positions):
+        cfg = self.cfg
+        if kind == "att":
+            h = x + L.attn_forward(
+                p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), positions, cfg)
+            return h + L.mlp_forward(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps))
+        if kind == "rec":
+            o, _ = rglru_seq(p["rglru"], L.rmsnorm(x, p["rglru"]["ln"], cfg.norm_eps))
+            h = x + o
+            return h + L.mlp_forward(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps))
+        raise ValueError(kind)
+
+    def prefill(self, kind: str, p: dict, x, positions, state):
+        cfg = self.cfg
+        if kind == "att":
+            a, (k, v) = L.attn_prefill_kv(
+                p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps), positions, cfg)
+            h = x + a
+            out = h + L.mlp_forward(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps))
+            cs = state["k"].shape[2]
+            seq = x.shape[1]
+            k = L.to_cache_layout(k[:, -cs:])
+            v = L.to_cache_layout(v[:, -cs:])
+            if cfg.sliding_window and cs == cfg.sliding_window:
+                shift = seq % cs
+                k = jnp.roll(k, shift, axis=2)
+                v = jnp.roll(v, shift, axis=2)
+            pad = cs - min(cs, seq)
+            if pad:  # prompt shorter than cache window
+                k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            return out, {"k": k.astype(state["k"].dtype),
+                         "v": v.astype(state["v"].dtype)}
+        if kind == "rec":
+            o, (h_last, conv) = rglru_seq(
+                p["rglru"], L.rmsnorm(x, p["rglru"]["ln"], cfg.norm_eps))
+            h = x + o
+            out = h + L.mlp_forward(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps))
+            return out, {"h": h_last.astype(state["h"].dtype),
+                         "conv": conv.astype(state["conv"].dtype)}
+        raise ValueError(kind)
+
+    def decode(self, kind: str, p: dict, x, state, cur_pos):
+        """Returns (out, update).  For "att" the update is the current
+        token's {k0, v0} (cache read-only; written post-scan); recurrent
+        kinds return their full (small) replacement state."""
+        cfg = self.cfg
+        if kind == "att":
+            a, k0, v0 = L.attn_decode(
+                p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                state["k"], state["v"], cur_pos, cfg)
+            h = x + a
+            out = h + L.mlp_forward(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps))
+            return out, {"k0": k0, "v0": v0}
+        if kind == "rec":
+            o, hh, conv = rglru_step(
+                p["rglru"], L.rmsnorm(x, p["rglru"]["ln"], cfg.norm_eps),
+                state["h"], state["conv"])
+            h = x + o
+            out = h + L.mlp_forward(p["mlp"], L.rmsnorm(h, p["ln2"], cfg.norm_eps))
+            return out, {"h": hh.astype(state["h"].dtype), "conv": conv}
+        raise ValueError(kind)
+
+    def is_token_update(self, kind: str) -> bool:
+        return kind == "att"
+
+    def apply_token_update(self, state, update, cur_pos):
+        """Batched write of token (k, v) into stacked attention caches.
+        state: {"k": (G?, B, H, W, d), ...}; update: {"k0": (G?, B, H, d)}."""
+        cfg = self.cfg
+        k, v = state["k"], state["v"]
+        stacked = k.ndim == 5
+        w_dim = k.shape[-2]
+        w = cfg.sliding_window
+        slot = (cur_pos % w_dim) if (w > 0 and w_dim <= w) else cur_pos
+        b = cur_pos.shape[0]
+        bidx = jnp.arange(b)
+        if stacked:
+            return {
+                "k": k.at[:, bidx, :, slot].set(
+                    update["k0"].transpose(1, 0, 2, 3).astype(k.dtype)),
+                "v": v.at[:, bidx, :, slot].set(
+                    update["v0"].transpose(1, 0, 2, 3).astype(v.dtype)),
+            }
+        return {"k": k.at[bidx, :, slot].set(update["k0"].astype(k.dtype)),
+                "v": v.at[bidx, :, slot].set(update["v0"].astype(v.dtype))}
+
+
+class GroupedLM:
+    """LM whose layer stack is ``num_layers`` blocks following
+    ``cfg.block_pattern`` (scan over full pattern groups + explicit tail)."""
+
+    def __init__(self, cfg: ModelConfig, kinds: BlockKinds | None = None):
+        self.cfg = cfg
+        self.kinds = kinds or BlockKinds(cfg)
+        plen = len(cfg.block_pattern)
+        assert plen > 0, "GroupedLM needs cfg.block_pattern"
+        self.n_groups = cfg.num_layers // plen
+        self.tail = cfg.block_pattern[: cfg.num_layers % plen]
+
+    # ----- params -----
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ke, kg, kt = jax.random.split(key, 3)
+
+        def init_group(k):
+            ks = split_keys(k, len(cfg.block_pattern))
+            return {f"b{i}": self.kinds.init_block(ks[i], kind)
+                    for i, kind in enumerate(cfg.block_pattern)}
+
+        gkeys = jnp.stack(split_keys(kg, self.n_groups))
+        params = {
+            "embed": L.embed_params(ke, cfg),
+            "groups": jax.vmap(init_group)(gkeys),
+            "ln_f": jnp.ones((cfg.d_model,), cfg.dtype),
+        }
+        if self.tail:
+            tks = split_keys(kt, len(self.tail))
+            params["tail"] = {f"t{i}": self.kinds.init_block(tks[i], kind)
+                              for i, kind in enumerate(self.tail)}
+        return params
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        specs = {
+            "embed": L.embed_specs(cfg),
+            "groups": {f"b{i}": self.kinds.block_specs(kind)
+                       for i, kind in enumerate(cfg.block_pattern)},
+            "ln_f": P(None),
+        }
+        if self.tail:
+            # tail blocks are unstacked: drop the leading layer axis
+            def unstack(spec):
+                return P(*spec[1:])
+            specs["tail"] = {
+                f"t{i}": jax.tree.map(
+                    unstack, self.kinds.block_specs(kind),
+                    is_leaf=lambda s: isinstance(s, P))
+                for i, kind in enumerate(self.tail)}
+        return specs
+
+    # ----- cache -----
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        cfg = self.cfg
+
+        def stack_state(kind):
+            st = self.kinds.init_state(kind, batch, max_seq)
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (self.n_groups,) + x.shape), st)
+
+        cache = {f"b{i}": stack_state(kind)
+                 for i, kind in enumerate(cfg.block_pattern)}
+        for i, kind in enumerate(self.tail):
+            cache[f"t{i}"] = self.kinds.init_state(kind, batch, max_seq)
+        return cache
+
+    def cache_specs(self) -> dict:
+        cfg = self.cfg
+        cache = {f"b{i}": self.kinds.state_specs(kind)
+                 for i, kind in enumerate(cfg.block_pattern)}
+
+        def unstack(spec):
+            return P(*spec[1:])
+        for i, kind in enumerate(self.tail):
+            cache[f"t{i}"] = jax.tree.map(
+                unstack, self.kinds.state_specs(kind),
+                is_leaf=lambda s: isinstance(s, P))
+        return cache
+
+    # ----- passes -----
+    def forward_hidden(self, params: dict, tokens: jax.Array,
+                       extra: dict | None = None) -> jax.Array:
+        from repro.runtime.sharding import SEQ_SHARDED_ACTS, maybe_constraint
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], tokens)
+        positions = jnp.arange(x.shape[1])
+
+        def body(h, gp):
+            h = maybe_constraint(h, SEQ_SHARDED_ACTS)
+            def run(h):
+                for i, kind in enumerate(cfg.block_pattern):
+                    h = self.kinds.train(kind, gp[f"b{i}"], h, positions)
+                return h
+            if cfg.remat:
+                run = jax.checkpoint(run)
+            return run(h), None
+
+        x, _ = pager.paged_scan(body, x, params["groups"],
+                                config=_pager_cfg(cfg))
+        for i, kind in enumerate(self.tail):
+            x = self.kinds.train(kind, params["tail"][f"t{i}"], x, positions)
+        return L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+
+    def forward(self, params: dict, tokens: jax.Array,
+                extra: dict | None = None) -> jax.Array:
+        x = self.forward_hidden(params, tokens, extra)
+        return L.lm_head(params["embed"], x, self.cfg)
+
+    def prefill(self, params: dict, tokens: jax.Array, cache: dict,
+                extra: dict | None = None):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], tokens)
+        positions = jnp.arange(x.shape[1])
+
+        def body(h, gp, cache_group):
+            new_states = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                h, st = self.kinds.prefill(kind, gp[f"b{i}"], h, positions,
+                                           cache_group[f"b{i}"])
+                new_states[f"b{i}"] = st
+            return h, new_states
+
+        group_cache = {k: v for k, v in cache.items() if k.startswith("b")}
+        x, new_group_cache = pager.paged_scan(
+            body, x, params["groups"], xs=group_cache,
+            config=_pager_cfg(cfg))
+        new_cache = dict(new_group_cache)
+        for i, kind in enumerate(self.tail):
+            x, st = self.kinds.prefill(kind, params["tail"][f"t{i}"], x,
+                                       positions, cache[f"t{i}"])
+            new_cache[f"t{i}"] = st
+        x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+        return L.lm_head(params["embed"], x, cfg), new_cache
+
+    def decode_step(self, params: dict, tokens: jax.Array, cache: dict,
+                    cur_pos: jax.Array, extra: dict | None = None):
+        cfg = self.cfg
+        x = L.embed_lookup(params["embed"], tokens)
+
+        def body(h, gp, cache_group):
+            updates = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                h, upd = self.kinds.decode(kind, gp[f"b{i}"], h,
+                                           cache_group[f"b{i}"], cur_pos)
+                updates[f"b{i}"] = upd
+            return h, updates
+
+        group_cache = {k: v for k, v in cache.items() if k.startswith("b")}
+        # caches are READ-ONLY inside the scan; token updates come out as
+        # small ys and are merged in batched post-scan writes (§Perf A').
+        x, updates = pager.paged_scan(
+            body, x, params["groups"], xs=group_cache,
+            config=_pager_cfg(cfg), page_xs=cfg.pager.offload_kv)
+        new_cache = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            key = f"b{i}"
+            if self.kinds.is_token_update(kind):
+                new_cache[key] = self.kinds.apply_token_update(
+                    cache[key], updates[key], cur_pos)
+            else:
+                new_cache[key] = updates[key]   # full replacement (stacked)
+        for i, kind in enumerate(self.tail):
+            key = f"t{i}"
+            x, upd = self.kinds.decode(kind, params["tail"][key], x,
+                                       cache[key], cur_pos)
+            if self.kinds.is_token_update(kind):
+                new_cache[key] = self.kinds.apply_token_update(
+                    cache[key], upd, cur_pos)
+            else:
+                new_cache[key] = upd
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return L.lm_head(params["embed"], x, cfg), new_cache
+
+
+class HybridLM(GroupedLM):
+    """RecurrentGemma-style hybrid (rec/rec/att)."""

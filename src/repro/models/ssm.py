@@ -1,0 +1,320 @@
+"""xLSTM (sLSTM + mLSTM blocks) — arXiv:2405.04517, structurally faithful:
+
+* **mLSTM**: matrix memory C_t (per head, hd x hd), exponential input gate,
+  sigmoid forget gate with log-domain stabilizer m_t; recurrence
+      C_t = f C_{t-1} + i v k^T,  n_t = f n_{t-1} + i k,
+      h_t = (C_t q) / max(|n_t . q|, 1)
+  Fully state-space: O(1) decode state => long_500k runs.
+* **sLSTM**: scalar memory with exponential gating, normalizer and
+  stabilizer states, per-head block-diagonal recurrent matrices; the
+  recurrence depends on h_{t-1} through the gates, so it scans sequentially
+  (per paper).
+
+``d_ff == 0`` in the assigned config: the blocks carry their own
+projections (mlstm_proj_factor up-projection / slstm post-MLP).
+
+Head alignment policy: heads are *subdivided* to the tensor-parallel axis
+(4 -> 16 on the production mesh) — identical parameter count, finer head
+granularity — so all per-head state shards over the model axis.  KV paging
+is inapplicable (no KV cache — DESIGN.md §Arch-applicability); weight
+paging applies unchanged.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.base import ModelConfig, dense_init
+from repro.models.hybrid import BlockKinds, GroupedLM
+
+
+TIME_CHUNK = 128
+
+
+def chunked_time_scan(step, carry, length: int, chunk: int = TIME_CHUNK):
+    """scan over t=0..length-1 with chunk-boundary checkpointing.
+
+    BPTT over a plain ``lax.scan`` of length S stores per-step residuals
+    (O(S) memory).  Nesting scans and checkpointing the inner chunk stores
+    only O(S/chunk) chunk carries + O(chunk) transient recompute — the
+    standard chunkwise-recurrent training trick (xLSTM appendix).
+    """
+    ts = jnp.arange(length)
+    chunk = min(chunk, length)
+    if length % chunk:
+        return jax.lax.scan(step, carry, ts)
+    tsc = ts.reshape(-1, chunk)
+
+    def inner(c, tchunk):
+        return jax.lax.scan(step, c, tchunk)
+
+    inner_ckpt = jax.checkpoint(inner)
+
+    def outer(c, tchunk):
+        return inner_ckpt(c, tchunk)
+
+    carry, ys = jax.lax.scan(outer, carry, tsc)
+    ys = jax.tree.map(lambda y: y.reshape((length,) + y.shape[2:]), ys)
+    return carry, ys
+
+
+def mlstm_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(dp, nh, hd) for the mLSTM inner space."""
+    nh = cfg.padded_heads
+    dp = int(cfg.d_model * cfg.mlstm_proj_factor)
+    dp = ((dp + nh - 1) // nh) * nh
+    return dp, nh, dp // nh
+
+
+def slstm_dims(cfg: ModelConfig) -> tuple[int, int]:
+    """(nh, hd) for the sLSTM space (nh*hd == d_model)."""
+    nh = cfg.padded_heads
+    assert cfg.d_model % nh == 0, (cfg.d_model, nh)
+    return nh, cfg.d_model // nh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_params(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dp, nh, hd = mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": jnp.ones((d,), cfg.dtype),
+        "w_up": dense_init(ks[0], (d, 2 * dp), cfg.dtype),
+        "w_q": dense_init(ks[1], (dp, dp), cfg.dtype),
+        "w_k": dense_init(ks[2], (dp, dp), cfg.dtype),
+        "w_v": dense_init(ks[3], (dp, dp), cfg.dtype),
+        "w_i": dense_init(ks[4], (dp, nh), cfg.dtype),
+        "b_i": jnp.zeros((nh,), jnp.float32),
+        "w_f": dense_init(ks[5], (dp, nh), cfg.dtype),
+        "b_f": jnp.full((nh,), 3.0, jnp.float32),   # forget-open init
+        "gn": jnp.ones((dp,), cfg.dtype),
+        "w_down": dense_init(ks[6], (dp, d), cfg.dtype),
+    }
+
+
+def mlstm_specs() -> dict:
+    return {
+        "ln": P(None, None), "w_up": P(None, None, "model"),
+        "w_q": P(None, None, "model"), "w_k": P(None, None, "model"),
+        "w_v": P(None, None, "model"),
+        "w_i": P(None, None, "model"), "b_i": P(None, "model"),
+        "w_f": P(None, None, "model"), "b_f": P(None, "model"),
+        "gn": P(None, "model"), "w_down": P(None, "model", None),
+    }
+
+
+def mlstm_seq(p: dict, x: jax.Array, cfg: ModelConfig, state=None):
+    """Sequential (scan) mLSTM over a full sequence.  x: (B,S,d) normed."""
+    dp, nh, hd = mlstm_dims(cfg)
+    b, s, _ = x.shape
+    up = x @ p["w_up"]
+    z, gate = jnp.split(up, 2, axis=-1)                      # (B,S,dp) each
+    q = (z @ p["w_q"]).reshape(b, s, nh, hd) / math.sqrt(hd)
+    k = (z @ p["w_k"]).reshape(b, s, nh, hd) / math.sqrt(hd)
+    v = (z @ p["w_v"]).reshape(b, s, nh, hd)
+    log_i = (z @ p["w_i"]).astype(jnp.float32) + p["b_i"]    # (B,S,nh)
+    log_f = jax.nn.log_sigmoid(
+        (z @ p["w_f"]).astype(jnp.float32) + p["b_f"])
+
+    if state is None:
+        C0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, nh, hd), jnp.float32)
+        m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def step(carry, t):
+        C, n, m = carry
+        qt = q[:, t].astype(jnp.float32)
+        kt = k[:, t].astype(jnp.float32)
+        vt = v[:, t].astype(jnp.float32)
+        li, lf = log_i[:, t], log_f[:, t]
+        m_new = jnp.maximum(lf + m, li)
+        i_ = jnp.exp(li - m_new)
+        f_ = jnp.exp(lf + m - m_new)
+        C = f_[..., None, None] * C + i_[..., None, None] * \
+            jnp.einsum("bhd,bhe->bhde", vt, kt)
+        n = f_[..., None] * n + i_[..., None] * kt
+        hq = jnp.einsum("bhde,bhe->bhd", C, qt)
+        denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)), 1.0)
+        h = hq / denom[..., None]
+        return (C, n, m_new), h.astype(x.dtype)
+
+    (C, n, m), hs = chunked_time_scan(step, (C0, n0, m0), s)
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, s, dp)
+    out = (L.rmsnorm(hs, p["gn"], 1e-6) * gate) @ p["w_down"]
+    return out, {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_params(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nh, hd = slstm_dims(cfg)
+    pf = cfg.slstm_proj_factor
+    dp = max(64, int(round(d * pf / 64)) * 64)
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": jnp.ones((d,), cfg.dtype),
+        "w_in": dense_init(ks[0], (d, 4 * nh * hd), cfg.dtype),
+        "r_z": dense_init(ks[1], (nh, hd, hd), cfg.dtype),
+        "r_i": dense_init(ks[2], (nh, hd, hd), cfg.dtype),
+        "r_f": dense_init(ks[3], (nh, hd, hd), cfg.dtype),
+        "r_o": dense_init(ks[4], (nh, hd, hd), cfg.dtype),
+        "b": jnp.zeros((4, nh, hd), jnp.float32),
+        "gn": jnp.ones((nh * hd,), cfg.dtype),
+        "w_up": dense_init(ks[5], (nh * hd, dp), cfg.dtype),
+        "w_down": dense_init(ks[6], (dp, d), cfg.dtype),
+    }
+
+
+def slstm_specs() -> dict:
+    return {
+        "ln": P(None, None), "w_in": P(None, None, "model"),
+        "r_z": P(None, "model", None, None), "r_i": P(None, "model", None, None),
+        "r_f": P(None, "model", None, None), "r_o": P(None, "model", None, None),
+        "b": P(None, None, "model", None),
+        "gn": P(None, "model"),
+        "w_up": P(None, "model", None), "w_down": P(None, None, None),
+    }
+
+
+def slstm_seq(p: dict, x: jax.Array, cfg: ModelConfig, state=None):
+    nh, hd = slstm_dims(cfg)
+    b, s, _ = x.shape
+    zifo = (x @ p["w_in"]).reshape(b, s, 4, nh, hd)
+    if state is None:
+        c0 = jnp.zeros((b, nh, hd), jnp.float32)
+        n0 = jnp.zeros((b, nh, hd), jnp.float32)
+        h0 = jnp.zeros((b, nh, hd), jnp.float32)
+        m0 = jnp.full((b, nh, hd), -1e30, jnp.float32)
+    else:
+        c0, n0, h0, m0 = state["c"], state["n"], state["h"], state["m"]
+
+    bias = p["b"]
+
+    def rec(h, r):   # (b,nh,hd) x (nh,hd,hd) -> (b,nh,hd)
+        return jnp.einsum("bhd,hde->bhe", h, r.astype(jnp.float32))
+
+    def step(carry, t):
+        c, n, h, m = carry
+        z_in = zifo[:, t, 0].astype(jnp.float32) + bias[0]
+        i_in = zifo[:, t, 1].astype(jnp.float32) + bias[1]
+        f_in = zifo[:, t, 2].astype(jnp.float32) + bias[2]
+        o_in = zifo[:, t, 3].astype(jnp.float32) + bias[3]
+        z = jnp.tanh(z_in + rec(h, p["r_z"]))
+        log_i = i_in + rec(h, p["r_i"])
+        log_f = jax.nn.log_sigmoid(f_in + rec(h, p["r_f"]))
+        o = jax.nn.sigmoid(o_in + rec(h, p["r_o"]))
+        m_new = jnp.maximum(log_f + m, log_i)
+        i_ = jnp.exp(log_i - m_new)
+        f_ = jnp.exp(log_f + m - m_new)
+        c = f_ * c + i_ * z
+        n = f_ * n + i_
+        h_new = o * c / jnp.maximum(n, 1.0)
+        return (c, n, h_new, m_new), h_new
+
+    (c, n, h, m), hs = chunked_time_scan(step, (c0, n0, h0, m0), s)
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, s, nh * hd).astype(x.dtype)
+    hs = L.rmsnorm(hs, p["gn"], 1e-6)
+    out = jax.nn.gelu(hs @ p["w_up"]) @ p["w_down"]
+    return out, {"c": c, "n": n, "h": h, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# Block kinds + model
+# ---------------------------------------------------------------------------
+
+class XLSTMKinds(BlockKinds):
+    def init_block(self, key, kind: str) -> dict:
+        if kind == "m":
+            return {"mlstm": mlstm_params(key, self.cfg)}
+        if kind == "s":
+            return {"slstm": slstm_params(key, self.cfg)}
+        return super().init_block(key, kind)
+
+    def block_specs(self, kind: str) -> dict:
+        if kind == "m":
+            return {"mlstm": mlstm_specs()}
+        if kind == "s":
+            return {"slstm": slstm_specs()}
+        return super().block_specs(kind)
+
+    def init_state(self, kind: str, batch: int, max_seq: int):
+        cfg = self.cfg
+        if kind == "m":
+            _, nh, hd = mlstm_dims(cfg)
+            return {"C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+                    "n": jnp.zeros((batch, nh, hd), jnp.float32),
+                    "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+        if kind == "s":
+            nh, hd = slstm_dims(cfg)
+            return {"c": jnp.zeros((batch, nh, hd), jnp.float32),
+                    "n": jnp.zeros((batch, nh, hd), jnp.float32),
+                    "h": jnp.zeros((batch, nh, hd), jnp.float32),
+                    "m": jnp.full((batch, nh, hd), -1e30, jnp.float32)}
+        return super().init_state(kind, batch, max_seq)
+
+    def state_specs(self, kind: str):
+        from repro.models.base import BATCH_AXES
+        if kind == "m":
+            return {"C": P(None, BATCH_AXES, "model", None, None),
+                    "n": P(None, BATCH_AXES, "model", None),
+                    "m": P(None, BATCH_AXES, "model")}
+        if kind == "s":
+            s = P(None, BATCH_AXES, "model", None)
+            return {"c": s, "n": s, "h": s, "m": s}
+        return super().state_specs(kind)
+
+    def train(self, kind: str, p: dict, x, positions):
+        cfg = self.cfg
+        if kind == "m":
+            o, _ = mlstm_seq(p["mlstm"],
+                             L.rmsnorm(x, p["mlstm"]["ln"], cfg.norm_eps), cfg)
+            return x + o
+        if kind == "s":
+            o, _ = slstm_seq(p["slstm"],
+                             L.rmsnorm(x, p["slstm"]["ln"], cfg.norm_eps), cfg)
+            return x + o
+        return super().train(kind, p, x, positions)
+
+    def prefill(self, kind: str, p: dict, x, positions, state):
+        cfg = self.cfg
+        if kind == "m":
+            o, st = mlstm_seq(p["mlstm"],
+                              L.rmsnorm(x, p["mlstm"]["ln"], cfg.norm_eps), cfg)
+            return x + o, st
+        if kind == "s":
+            o, st = slstm_seq(p["slstm"],
+                              L.rmsnorm(x, p["slstm"]["ln"], cfg.norm_eps), cfg)
+            return x + o, st
+        return super().prefill(kind, p, x, positions, state)
+
+    def decode(self, kind: str, p: dict, x, state, cur_pos):
+        cfg = self.cfg
+        if kind == "m":
+            o, st = mlstm_seq(p["mlstm"],
+                              L.rmsnorm(x, p["mlstm"]["ln"], cfg.norm_eps),
+                              cfg, state)
+            return x + o, st
+        if kind == "s":
+            o, st = slstm_seq(p["slstm"],
+                              L.rmsnorm(x, p["slstm"]["ln"], cfg.norm_eps),
+                              cfg, state)
+            return x + o, st
+        return super().decode(kind, p, x, state, cur_pos)
+
+
+class XLSTM(GroupedLM):
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg, XLSTMKinds(cfg))

@@ -1,0 +1,270 @@
+"""Dense decoder-only transformer (qwen2.5 / qwen3 / minicpm / starcoder2,
+and the llava backbone) with FengHuang paging as a first-class option.
+
+Layers are stacked on a leading L axis and executed with
+:func:`repro.core.pager.paged_scan`, so the same model definition runs
+shared-nothing (weights resident in HBM) or FengHuang-paged (weights and
+optionally KV in the remote tier, double-buffered prefetch).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import pager
+from repro.models import layers as L
+from repro.models.base import ModelConfig, BATCH_AXES, split_keys
+from repro.runtime.sharding import SEQ_SHARDED_ACTS, maybe_constraint
+
+
+def _pager_cfg(cfg: ModelConfig) -> pager.PagerConfig:
+    return pager.PagerConfig(enabled=cfg.pager.enabled,
+                             lookahead=cfg.pager.lookahead,
+                             offload_kv=cfg.pager.offload_kv)
+
+
+class DenseLM:
+    """Decoder-only LM.  Also the base class for the MoE and VLM variants."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ----- params -----------------------------------------------------------
+    def init_layer(self, key) -> dict:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "attn": L.attn_params(k1, cfg),
+            "mlp": L.mlp_params(k2, cfg),
+            "ln1": jnp.ones((cfg.d_model,), cfg.dtype),
+            "ln2": jnp.ones((cfg.d_model,), cfg.dtype),
+        }
+
+    def layer_specs(self) -> dict:
+        return {
+            "attn": L.attn_specs(self.cfg),
+            "mlp": L.mlp_specs(),
+            "ln1": P(None, None), "ln2": P(None, None),
+        }
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ke, kl = jax.random.split(key)
+        layer_keys = split_keys(kl, cfg.num_layers)
+        stacked = jax.vmap(self.init_layer)(jnp.stack(layer_keys))
+        return {
+            "embed": L.embed_params(ke, cfg),
+            "layers": stacked,
+            "ln_f": jnp.ones((cfg.d_model,), cfg.dtype),
+        }
+
+    def param_specs(self) -> dict:
+        return {
+            "embed": L.embed_specs(self.cfg),
+            "layers": self.layer_specs(),
+            "ln_f": P(None),
+        }
+
+    # ----- blocks ------------------------------------------------------------
+    def ffn(self, lp: dict, x: jax.Array) -> jax.Array:
+        return L.mlp_forward(lp["mlp"], x)
+
+    def block_train(self, lp: dict, x: jax.Array,
+                    positions: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        # constraining each sub-block's output to seq-sharded turns the
+        # TP partial-sum into a reduce-scatter (half the wire of
+        # all-reduce) — Megatron-SP proper (§Perf iteration C).
+        a = maybe_constraint(
+            L.attn_forward(lp["attn"], L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                           positions, cfg), SEQ_SHARDED_ACTS)
+        h = x + a
+        f = maybe_constraint(
+            self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps)),
+            SEQ_SHARDED_ACTS)
+        return h + f
+
+    def block_prefill(self, lp: dict, x: jax.Array, positions: jax.Array):
+        cfg = self.cfg
+        a, kv = L.attn_prefill_kv(lp["attn"],
+                                  L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                                  positions, cfg)
+        h = x + a
+        return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps)), kv
+
+    def block_decode(self, lp: dict, x: jax.Array, ck, cv, cur_pos):
+        """Cache is read-only; returns the current token's (k, v) for the
+        single post-scan batched write."""
+        cfg = self.cfg
+        a, k0, v0 = L.attn_decode(lp["attn"],
+                                  L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                                  ck, cv, cur_pos, cfg)
+        h = x + a
+        return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps)), k0, v0
+
+    # ----- forward passes ----------------------------------------------------
+    def _embed(self, params, tokens):
+        return L.embed_lookup(params["embed"], tokens)
+
+    def forward_hidden(self, params: dict, tokens: jax.Array,
+                       extra: dict | None = None) -> jax.Array:
+        """Full-sequence forward without the LM head (chunked-loss path)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        if extra and "patches" in extra:   # VLM: prepend patch embeddings
+            x = jnp.concatenate([extra["patches"].astype(x.dtype), x], axis=1)
+        positions = jnp.arange(x.shape[1])
+
+        def body(h, lp):
+            # Megatron-style sequence parallelism: the residual saved per
+            # layer for backward is seq-sharded over the model axis.
+            h = maybe_constraint(h, SEQ_SHARDED_ACTS)
+            fn = self.block_train
+            if cfg.remat:
+                fn = jax.checkpoint(fn)
+            return fn(lp, h, positions), None
+
+        x, _ = pager.paged_scan(body, x, params["layers"],
+                                config=_pager_cfg(cfg))
+        return L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+
+    def forward(self, params: dict, tokens: jax.Array,
+                extra: dict | None = None) -> jax.Array:
+        """Training/eval forward over a full sequence -> logits (B, S, V)."""
+        x = self.forward_hidden(params, tokens, extra)
+        return L.lm_head(params["embed"], x, self.cfg)
+
+    # ----- KV cache -----------------------------------------------------------
+    def cache_seq(self, max_seq: int) -> int:
+        w = self.cfg.sliding_window
+        return min(max_seq, w) if w > 0 else max_seq
+
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        cfg = self.cfg
+        s = self.cache_seq(max_seq)
+        # head-major layout (L, B, Hkv, S, hd): decode dots are
+        # layout-native (no transposed cache copies) — §Perf iteration A.
+        shape = (cfg.num_layers, batch, cfg.padded_kv_heads, s, cfg.head_dim)
+        if cfg.kv_quant:
+            # int8 values + per-token-per-head bf16 absmax scales (A3)
+            return {"k": jnp.zeros(shape, jnp.int8),
+                    "v": jnp.zeros(shape, jnp.int8),
+                    "k_scale": jnp.zeros(shape[:-1], jnp.bfloat16),
+                    "v_scale": jnp.zeros(shape[:-1], jnp.bfloat16)}
+        return {"k": jnp.zeros(shape, cfg.dtype),
+                "v": jnp.zeros(shape, cfg.dtype)}
+
+    def cache_specs(self) -> dict:
+        spec = P(None, BATCH_AXES, "model", None, None)
+        if self.cfg.kv_quant:
+            sc = P(None, BATCH_AXES, "model", None)
+            return {"k": spec, "v": spec, "k_scale": sc, "v_scale": sc}
+        return {"k": spec, "v": spec}
+
+    def prefill(self, params: dict, tokens: jax.Array, cache: dict,
+                extra: dict | None = None):
+        """Process the prompt, fill the cache, return last-position logits."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        if extra and "patches" in extra:
+            x = jnp.concatenate([extra["patches"].astype(x.dtype), x], axis=1)
+        seq = x.shape[1]
+        positions = jnp.arange(seq)
+        cs = self.cache_seq(cache["k"].shape[3])
+
+        def body(h, lp):
+            h, (k, v) = self.block_prefill(lp, h, positions)
+            return h, (L.to_cache_layout(k[:, -cs:]),
+                       L.to_cache_layout(v[:, -cs:]))
+
+        x, kv = pager.paged_scan(body, x, params["layers"],
+                                 config=_pager_cfg(cfg))
+        k_new, v_new = kv
+        if cfg.sliding_window > 0 and cs == cfg.sliding_window:
+            # rolling cache: position p lives at slot p % W.  The last cs
+            # keys cover positions seq-cs .. seq-1, so rotate them into
+            # place: slot((seq-cs)+i) = (seq % W + i) % W.
+            shift = seq % cs
+            k_new = jnp.roll(k_new, shift, axis=3)
+            v_new = jnp.roll(v_new, shift, axis=3)
+        if cfg.kv_quant:
+            kq, ks = L.kv_quantize(k_new)
+            vq, vs = L.kv_quantize(v_new)
+            upd = lambda buf, val, ax: jax.lax.dynamic_update_slice_in_dim(
+                buf, val.astype(buf.dtype), 0, axis=ax)
+            cache = {"k": upd(cache["k"], kq, 3),
+                     "v": upd(cache["v"], vq, 3),
+                     "k_scale": upd(cache["k_scale"], ks, 3),
+                     "v_scale": upd(cache["v_scale"], vs, 3)}
+        else:
+            cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k_new.astype(cache["k"].dtype), 0, axis=3),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v_new.astype(cache["v"].dtype), 0, axis=3),
+            }
+        x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+        return L.lm_head(params["embed"], x, cfg), cache
+
+    def decode_step(self, params: dict, tokens: jax.Array, cache: dict,
+                    cur_pos: jax.Array, extra: dict | None = None):
+        """tokens: (B, 1); cur_pos: (B,) absolute position being written."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        b = x.shape[0]
+
+        def body(h, lp, cache_layer):
+            if cfg.kv_quant:
+                ck, cv, ks, vs = cache_layer
+                ck = L.kv_dequantize(ck, ks, cfg.dtype)
+                cv = L.kv_dequantize(cv, vs, cfg.dtype)
+            else:
+                ck, cv = cache_layer
+            h, k0, v0 = self.block_decode(lp, h, ck, cv, cur_pos)
+            return h, (k0, v0)
+
+        # cache is READ-ONLY in the scan; per-layer new (k, v) come out as
+        # tiny ys and are written in ONE batched scatter afterwards —
+        # no per-layer slice copies / write-back round trips (§Perf A').
+        xs = ((cache["k"], cache["v"], cache["k_scale"], cache["v_scale"])
+              if cfg.kv_quant else (cache["k"], cache["v"]))
+        x, (k_new, v_new) = pager.paged_scan(
+            body, x, params["layers"], xs=xs,
+            config=_pager_cfg(cfg), page_xs=cfg.pager.offload_kv)
+        s_cache = cache["k"].shape[3]
+        w = cfg.sliding_window
+        slot = (cur_pos % s_cache) if (w > 0 and s_cache <= w) else cur_pos
+        bidx = jnp.arange(b)
+        # advanced-index set: value layout (B, L, Hkv, hd)
+        if cfg.kv_quant:
+            kq, ks = L.kv_quantize(k_new)   # (L,B,H,hd) -> int8 + (L,B,H)
+            vq, vs = L.kv_quantize(v_new)
+            cache = {
+                "k": cache["k"].at[:, bidx, :, slot].set(
+                    kq.transpose(1, 0, 2, 3)),
+                "v": cache["v"].at[:, bidx, :, slot].set(
+                    vq.transpose(1, 0, 2, 3)),
+                "k_scale": cache["k_scale"].at[:, bidx, :, slot].set(
+                    ks.transpose(1, 0, 2)),
+                "v_scale": cache["v_scale"].at[:, bidx, :, slot].set(
+                    vs.transpose(1, 0, 2)),
+            }
+        else:
+            cache = {
+                "k": cache["k"].at[:, bidx, :, slot].set(
+                    k_new.transpose(1, 0, 2, 3).astype(cache["k"].dtype)),
+                "v": cache["v"].at[:, bidx, :, slot].set(
+                    v_new.transpose(1, 0, 2, 3).astype(cache["v"].dtype)),
+            }
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return L.lm_head(params["embed"], x, cfg), cache
+
+
+def vocab_mask_logits(logits: jax.Array, vocab: int) -> jax.Array:
+    """Mask padded vocabulary columns to -inf."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(cols < vocab, logits, L.NEG_INF)

@@ -1,0 +1,24 @@
+"""LLaVA-NeXT-style VLM backbone (llava-next-34b).
+
+The assignment specifies the transformer BACKBONE only; the anyres vision
+tower is a STUB — ``input_specs()`` provides precomputed patch embeddings
+(B, num_patches, d_model) which are prepended to the token embeddings
+(positions 0..P-1), exactly how the projected CLIP patches enter the
+language model in LLaVA.  Everything else (GQA attention, SwiGLU MLP,
+paging, caching) is the dense LM.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.base import ModelConfig
+from repro.models.transformer import DenseLM
+
+
+class VLM(DenseLM):
+    """DenseLM consuming ``extra={'patches': (B, P, d)}`` during the
+    full-sequence passes; decode steps are pure text continuation."""
+
+    def text_len(self, total_seq: int) -> int:
+        """Text tokens for a given total sequence budget."""
+        return max(1, total_seq - self.cfg.num_patches)

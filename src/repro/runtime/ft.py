@@ -1,0 +1,126 @@
+"""Fault tolerance: checkpointed training loop with restart-on-failure,
+straggler detection, and elastic mesh degradation.
+
+Single-process semantics (this container), cluster-shaped structure: the
+loop is written against abstract callbacks (``make_step``, ``remesh``) so a
+multi-host deployment plugs in jax.distributed initialization + real
+failure detection without touching the loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable
+
+from repro.runtime import checkpoint
+
+log = logging.getLogger("repro.ft")
+
+
+@dataclasses.dataclass
+class FTConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 10
+    keep: int = 3
+    max_restarts: int = 3
+    straggler_factor: float = 3.0   # step slower than factor x median => flag
+    async_save: bool = True
+
+
+class StragglerMonitor:
+    """Tracks step durations; flags outliers (the signal a cluster runtime
+    would use to trigger backup workers / re-scheduling)."""
+
+    def __init__(self, factor: float = 3.0, window: int = 50):
+        self.factor = factor
+        self.window = window
+        self.durations: list[float] = []
+        self.flags = 0
+
+    def observe(self, seconds: float) -> bool:
+        self.durations.append(seconds)
+        if len(self.durations) > self.window:
+            self.durations.pop(0)
+        med = sorted(self.durations)[len(self.durations) // 2]
+        is_straggler = len(self.durations) >= 5 and seconds > self.factor * med
+        if is_straggler:
+            self.flags += 1
+        return is_straggler
+
+
+class FaultTolerantLoop:
+    """Run a training step function with checkpoint/restart.
+
+    ``state`` is an arbitrary pytree (params, opt state, ...).  On an
+    exception from ``step_fn`` the loop restores the latest checkpoint and
+    replays from there (deterministic data makes the replay exact).  After
+    ``max_restarts`` consecutive failures it calls ``on_degrade`` — the
+    elastic-scaling hook (e.g. rebuild a smaller mesh and reshard via
+    ``checkpoint.restore(..., mesh=new_mesh)``).
+    """
+
+    def __init__(self, cfg: FTConfig, step_fn: Callable[[Any, int], Any],
+                 *, on_degrade: Callable[[], Any] | None = None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.on_degrade = on_degrade
+        self.monitor = StragglerMonitor(cfg.straggler_factor)
+        self.restarts = 0
+        self.metrics_log: list[dict] = []
+
+    def run(self, state: Any, *, start_step: int = 0,
+            num_steps: int = 100) -> tuple[Any, int]:
+        step = start_step
+        consecutive_failures = 0
+        pending_save = None
+        while step < start_step + num_steps:
+            t0 = time.monotonic()
+            try:
+                state, metrics = self.step_fn(state, step)
+            except Exception as e:  # noqa: BLE001 - the whole point
+                log.warning("step %d failed: %r", step, e)
+                self.restarts += 1
+                consecutive_failures += 1
+                if consecutive_failures > self.cfg.max_restarts:
+                    if self.on_degrade is not None:
+                        log.warning("degrading after %d failures",
+                                    consecutive_failures)
+                        state = self.on_degrade()
+                        consecutive_failures = 0
+                        continue
+                    raise
+                try:
+                    state, step = checkpoint.restore(
+                        self.cfg.ckpt_dir, state)
+                    log.warning("restored checkpoint at step %d", step)
+                except FileNotFoundError:
+                    log.warning("no checkpoint; retrying step %d", step)
+                continue
+            consecutive_failures = 0
+            dt = time.monotonic() - t0
+            if self.monitor.observe(dt):
+                log.warning("straggler step %d: %.3fs", step, dt)
+            self.metrics_log.append(
+                {"step": step, "dt": dt, **jax_scalarize(metrics)})
+            step += 1
+            if step % self.cfg.ckpt_every == 0:
+                if self.cfg.async_save:
+                    pending_save = checkpoint.save_async(
+                        self.cfg.ckpt_dir, step, state, keep=self.cfg.keep)
+                else:
+                    checkpoint.save(self.cfg.ckpt_dir, step, state,
+                                    keep=self.cfg.keep)
+        if pending_save is not None:
+            pending_save.join(timeout=30.0)
+        return state, step
+
+
+def jax_scalarize(metrics: dict) -> dict:
+    out = {}
+    for k, v in metrics.items():
+        try:
+            out[k] = float(v)
+        except (TypeError, ValueError):
+            pass
+    return out

@@ -1,0 +1,133 @@
+"""Optimizers & schedules: AdamW with ZeRO-1-ready state layout, cosine and
+WSD (Warmup-Stable-Decay, MiniCPM arXiv:2404.06395) schedules, optional
+int8 gradient compression with error feedback.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"        # 'cosine' | 'wsd' | 'const'
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_fraction: float = 0.1     # WSD: last 10% of steps decay
+
+
+def schedule_value(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "const":
+        return cfg.lr * warm
+    if cfg.schedule == "cosine":
+        frac = jnp.clip((s - cfg.warmup_steps) /
+                        jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    if cfg.schedule == "wsd":
+        # Warmup -> Stable (lr) -> Decay (last decay_fraction of steps,
+        # exponential-to-~0.1x as in MiniCPM).
+        decay_start = cfg.total_steps * (1.0 - cfg.decay_fraction)
+        in_decay = jnp.clip((s - decay_start) /
+                            jnp.maximum(cfg.total_steps - decay_start, 1),
+                            0.0, 1.0)
+        return cfg.lr * warm * jnp.power(0.1, in_decay)
+    raise ValueError(cfg.schedule)
+
+
+def init_opt_state(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def opt_state_specs(param_specs: Any) -> dict:
+    """Optimizer moments inherit the param sharding; with a 'data' axis in
+    the mesh the caller may extend these for ZeRO-1."""
+    from jax.sharding import PartitionSpec as P
+    return {
+        "step": P(),
+        "m": param_specs,
+        "v": param_specs,
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params: Any, grads: Any,
+                 state: dict) -> tuple[Any, dict, dict]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule_value(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [t[0] for t in new])
+    new_m = jax.tree.unflatten(treedef, [t[1] for t in new])
+    new_v = jax.tree.unflatten(treedef, [t[2] for t in new])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"step": step, "m": new_m, "v": new_v}, metrics
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (int8 + error feedback) — distributed-optimization
+# trick for bandwidth-bound data parallelism.
+# ---------------------------------------------------------------------------
+
+def compress_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_grad(g: jax.Array, err: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Quantize g+err to int8; return (dequantized grad, new error)."""
+    total = g.astype(jnp.float32) + err
+    q, scale = compress_int8(total)
+    deq = decompress_int8(q, scale)
+    return deq, total - deq

@@ -1,0 +1,130 @@
+"""Serving runtime: prefill/decode step functions and a batched server
+with continuous-batching-lite semantics.
+
+serve_step == one decode step for the whole batch against the KV cache —
+the function the decode_* dry-run shapes lower.  Sampling is greedy or
+temperature-based; padded vocab columns are masked.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import vocab_mask_logits
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
+    output: list = dataclasses.field(default_factory=list)
+
+
+def sample(logits: jax.Array, vocab: int, temperature: float,
+           key: jax.Array) -> jax.Array:
+    """logits: (B, 1, V) -> (B, 1) token ids."""
+    logits = vocab_mask_logits(logits, vocab).astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params, tokens, cache, extra=None):
+        logits, cache = model.prefill(params, tokens, cache, extra)
+        return logits, cache
+    return prefill_step
+
+
+def make_serve_step(model, *, temperature: float = 0.0) -> Callable:
+    """One decode step: (params, tokens (B,1), cache, cur_pos, key) ->
+    (next_tokens (B,1), logits, cache)."""
+    vocab = model.cfg.vocab
+
+    def serve_step(params, tokens, cache, cur_pos, key):
+        logits, cache = model.decode_step(params, tokens, cache, cur_pos)
+        nxt = sample(logits, vocab, temperature, key)
+        return nxt, logits, cache
+    return serve_step
+
+
+class BatchedServer:
+    """Minimal batched inference server (single process, CPU demo scale).
+
+    Requests accumulate into fixed-size batches (padding with idle slots),
+    prefill runs per batch, then the decode loop emits one token per step
+    for every live slot — the paper's inference-serving shape.
+    """
+
+    def __init__(self, model, params, *, batch_size: int = 4,
+                 max_seq: int = 256, temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.batch = batch_size
+        self.max_seq = max_seq
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self._uid = 0
+        self.prefill_step = jax.jit(make_prefill_step(model))
+        self.serve_step = jax.jit(make_serve_step(model,
+                                                  temperature=temperature))
+        self.key = jax.random.PRNGKey(seed)
+        self.stats = {"steps": 0, "tokens": 0, "batches": 0}
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
+        self._uid += 1
+        req = Request(self._uid, np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens)
+        self.queue.put(req)
+        return req
+
+    def _next_batch(self) -> list[Request]:
+        reqs = [self.queue.get()]
+        while len(reqs) < self.batch:
+            try:
+                reqs.append(self.queue.get_nowait())
+            except queue.Empty:
+                break
+        return reqs
+
+    def run_once(self) -> list[Request]:
+        """Serve one batch to completion; returns the finished requests."""
+        reqs = self._next_batch()
+        n = len(reqs)
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((self.batch, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
+        cache = self.model.init_cache(self.batch, self.max_seq)
+        logits, cache = self.prefill_step(self.params, jnp.asarray(toks),
+                                          cache)
+        self.key, k = jax.random.split(self.key)
+        cur = sample(logits, self.model.cfg.vocab, 0.0, k)
+        for i, r in enumerate(reqs):
+            r.output.append(int(cur[i, 0]))
+        max_new = max(r.max_new_tokens for r in reqs)
+        pos = jnp.full((self.batch,), plen, jnp.int32)
+        for step in range(max_new - 1):
+            self.key, k = jax.random.split(self.key)
+            cur, logits, cache = self.serve_step(self.params, cur, cache,
+                                                 pos, k)
+            pos = pos + 1
+            self.stats["steps"] += 1
+            for i, r in enumerate(reqs):
+                if len(r.output) < r.max_new_tokens:
+                    r.output.append(int(cur[i, 0]))
+                    self.stats["tokens"] += 1
+        for r in reqs:
+            r.done.set()
+        self.stats["batches"] += 1
+        return reqs

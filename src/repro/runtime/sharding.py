@@ -1,0 +1,125 @@
+"""Sharding resolution: logical specs -> physical NamedShardings.
+
+Model code writes PartitionSpecs against logical axes (``"model"`` and the
+``BATCH_AXES`` tuple ``("pod", "data")``).  This module resolves them for a
+concrete mesh:
+
+* single-pod mesh ("data", "model"): batch -> ("data",)
+* multi-pod mesh ("pod", "data", "model"): batch -> ("pod", "data")
+* smoke meshes (1 device): everything -> None
+
+It also applies the FengHuang memory tier: params whose top-level group is
+pageable get ``memory_kind="pinned_host"`` when the pager is enabled.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.pager import REMOTE_KIND
+from repro.models.base import BATCH_AXES
+
+PAGEABLE_GROUPS = ("layers", "groups", "dec_layers", "enc_layers")
+
+
+def resolve_spec(spec: P, mesh: Mesh) -> P:
+    """Map logical axis entries to the axes present in ``mesh``."""
+    axes = set(mesh.axis_names)
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+        elif isinstance(entry, tuple):           # e.g. ("pod", "data")
+            kept = tuple(a for a in entry if a in axes)
+            out.append(kept if kept else None)
+        elif entry == "model":
+            out.append("model" if "model" in axes else None)
+        elif entry in ("pod", "data"):
+            out.append(entry if entry in axes else None)
+        else:
+            out.append(entry if entry in axes else None)
+    return P(*out)
+
+
+def _treat_as_leaf(x) -> bool:
+    return isinstance(x, P)
+
+
+def resolve_tree(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: resolve_spec(s, mesh), spec_tree,
+                        is_leaf=_treat_as_leaf)
+
+
+def named_shardings(spec_tree: Any, mesh: Mesh, *,
+                    pageable_remote: bool = False) -> Any:
+    """PartitionSpec tree -> NamedSharding tree.
+
+    With ``pageable_remote=True``, specs under PAGEABLE_GROUPS are placed in
+    the FengHuang remote tier (pinned_host) — the weights will be paged into
+    device memory by the TensorPager inside the step function.
+    """
+
+    def convert(path, s):
+        kind = "device"
+        if pageable_remote and path and getattr(path[0], "key", None) in PAGEABLE_GROUPS:
+            kind = REMOTE_KIND
+        return NamedSharding(mesh, resolve_spec(s, mesh), memory_kind=kind)
+
+    return jax.tree_util.tree_map_with_path(convert, spec_tree,
+                                            is_leaf=_treat_as_leaf)
+
+
+def batch_spec(mesh: Mesh, *trailing) -> P:
+    """Spec for (batch, ...) data: batch over ("pod","data") as available."""
+    axes = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+    return P(axes if axes else None, *trailing)
+
+
+def constraint(x, mesh: Mesh, spec: P):
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve_spec(spec, mesh)))
+
+
+def maybe_constraint(x, spec: P):
+    """Best-effort sharding constraint against the *ambient* mesh.
+
+    Model code calls this with logical specs (e.g. sequence-parallel
+    residuals P(batch, "model", None)); outside a mesh context, or when an
+    axis is missing / the dim isn't divisible, it's a no-op — so smoke
+    tests and single-device runs are unaffected.
+    """
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:   # pragma: no cover
+        return x
+    if am is None or getattr(am, "empty", True):
+        return x
+    axes = set(am.axis_names)
+    sizes = dict(zip(am.axis_names, am.axis_sizes)) if hasattr(am, "axis_sizes") \
+        else {n: am.shape[n] for n in am.axis_names}
+    out = []
+    for dim, entry in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        names = ()
+        if entry is None:
+            names = ()
+        elif isinstance(entry, tuple):
+            names = tuple(a for a in entry if a in axes)
+        elif entry in axes:
+            names = (entry,)
+        total = 1
+        for n in names:
+            total *= sizes[n]
+        if names and dim % total == 0:
+            out.append(names if len(names) > 1 else names[0])
+        else:
+            out.append(None)
+    if all(e is None for e in out):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*out))
+
+
+#: logical spec for sequence-parallel residual activations (B, S, d)
+SEQ_SHARDED_ACTS = P(BATCH_AXES, "model", None)

@@ -1,0 +1,142 @@
+"""Training step: causal LM loss with gradient accumulation, MoE aux loss,
+optional int8 gradient compression (error feedback), donation-friendly.
+
+The step is pure and pjit-able; batch arrives sharded over the batch axes,
+params per ``model.param_specs()``.  With the FengHuang pager enabled the
+stacked layer weights live in the remote tier and are paged per layer by
+``paged_scan`` — the same step function, no special casing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import vocab_mask_logits
+from repro.runtime import optim
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: optim.AdamWConfig = dataclasses.field(default_factory=optim.AdamWConfig)
+    accum_steps: int = 1
+    moe_aux_weight: float = 0.01
+    compress_grads: bool = False
+    z_loss: float = 1e-4
+
+
+LOSS_CHUNK = 512
+
+
+def _chunk_ce(model, params, hidden, labels, z_loss: float):
+    """Cross entropy over one sequence chunk (keeps fp32 logits at
+    (B, chunk, V) instead of the full sequence).
+
+    The label pick uses a one-hot contraction instead of take_along_axis so
+    GSPMD keeps the vocab axis sharded (partial sum + all-reduce) rather
+    than all-gathering the logits."""
+    from repro.models import layers as L
+    cfg = model.cfg
+    logits = L.lm_head(params["embed"], hidden, cfg)
+    logits = vocab_mask_logits(logits, cfg.vocab).astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                         logits.ndim - 1)
+    onehot = (vocab_ids == labels_safe[..., None]).astype(jnp.float32)
+    ll = jnp.sum(logits * onehot, axis=-1)
+    nll = ((lse - ll) * mask).sum()
+    zl = (jnp.square(lse) * mask).sum() * z_loss
+    return nll + zl, mask.sum()
+
+
+def lm_loss(model, params, batch: dict, *, z_loss: float = 0.0) -> jax.Array:
+    """Next-token cross entropy; labels==-1 are masked; padded vocab
+    columns masked; VLM patch prefix positions are skipped.  The LM head +
+    CE run in sequence chunks so fp32 logits never materialize at
+    (B, S, V)."""
+    cfg = model.cfg
+    extra = {k: v for k, v in batch.items()
+             if k in ("patches", "frames")}
+    hidden = model.forward_hidden(params, batch["tokens"], extra or None)
+    offs = hidden.shape[1] - batch["tokens"].shape[1]
+    if offs:                                  # VLM: drop patch positions
+        hidden = hidden[:, offs:]
+    # predict token t+1 from position t
+    hidden = hidden[:, :-1]
+    labels = batch["labels"][:, 1:]
+    s = hidden.shape[1]
+    chunk = min(LOSS_CHUNK, s)
+    pad = (-s) % chunk
+    if pad:   # pad to a chunk multiple; padded labels are masked (-1)
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        s += pad
+    nc = s // chunk
+    hs = hidden.reshape(hidden.shape[0], nc, chunk, -1).transpose(1, 0, 2, 3)
+    ls = labels.reshape(labels.shape[0], nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        h, l = xs
+        t, c = _chunk_ce(model, params, h, l, z_loss)
+        return (carry[0] + t, carry[1] + c), None
+
+    # checkpoint: recompute chunk logits in backward instead of storing
+    # (nc, B, chunk, V) fp32 residuals.
+    (total, count), _ = jax.lax.scan(jax.checkpoint(body), (0.0, 0.0),
+                                     (hs, ls))
+    return total / jnp.maximum(count, 1.0)
+
+
+def make_train_step(model, tcfg: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch[, err_state]) ->
+    (params, opt_state, metrics[, err_state])."""
+
+    def loss_fn(params, micro):
+        return lm_loss(model, params, micro, z_loss=tcfg.z_loss)
+
+    def train_step(params, opt_state, batch, err_state=None):
+        if tcfg.accum_steps > 1:
+            # split the batch into microbatches along batch dim; accumulate
+            # grads in fp32 (communication deferred to a single reduction).
+            def micro_split(x):
+                b = x.shape[0]
+                mb = b // tcfg.accum_steps
+                return x.reshape(tcfg.accum_steps, mb, *x.shape[1:])
+
+            micros = jax.tree.map(micro_split, batch)
+
+            def accum(carry, micro):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, micro)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(accum, (zeros, 0.0), micros)
+            grads = jax.tree.map(lambda g: g / tcfg.accum_steps, gsum)
+            loss = lsum / tcfg.accum_steps
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        if tcfg.compress_grads and err_state is not None:
+            pairs = jax.tree.map(optim.compressed_grad, grads, err_state)
+            grads = jax.tree.map(lambda p: p[0], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+            err_state = jax.tree.map(lambda p: p[1], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+
+        params, opt_state, om = optim.adamw_update(
+            tcfg.adamw, params, grads, opt_state)
+        metrics = {"loss": loss, **om}
+        if err_state is not None:
+            return params, opt_state, metrics, err_state
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,17 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see
+the real single-device CPU backend; multi-device tests subprocess."""
+import os
+import sys
+from pathlib import Path
+
+import pytest
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+    return np.random.RandomState(0)

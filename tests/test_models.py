@@ -1,0 +1,175 @@
+"""Per-architecture smoke tests (reduced configs) + decode consistency.
+
+Each assigned arch: instantiate the reduced same-family config, run one
+forward and one train step on CPU, assert output shapes + no NaNs; then
+verify prefill+decode reproduces teacher-forced logits (fp32 exactness).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, build_model
+from repro.runtime import optim
+from repro.runtime.train import TrainConfig, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _extra(cfg, key=KEY, dtype=jnp.float32):
+    extra = {}
+    if cfg.family == "encdec":
+        extra["frames"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), dtype)
+    if cfg.family == "vlm":
+        extra["patches"] = jax.random.normal(
+            key, (B, cfg.num_patches, cfg.d_model), dtype)
+    return extra
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_shapes(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    extra = _extra(cfg)
+    logits = jax.jit(lambda p, t: model.forward(p, t, extra or None))(
+        params, tokens)
+    exp_seq = S + (cfg.num_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (B, exp_seq, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(KEY)
+    opt = optim.init_opt_state(params)
+    step = jax.jit(make_train_step(model, TrainConfig(
+        adamw=optim.AdamWConfig(lr=1e-3, total_steps=10, warmup_steps=1))))
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens, **_extra(cfg)}
+    params2, opt2, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["loss"]) > 0
+    # params actually changed
+    changed = any(
+        not np.array_equal(np.asarray(a, np.float32),
+                           np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert changed
+    assert int(opt2["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_teacher_forcing(arch):
+    cfg = dataclasses.replace(get_config(arch).reduced(), remat=False,
+                              dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, 12), 0, cfg.vocab)
+    extra = _extra(cfg)
+    full = model.forward(params, tokens, extra or None)
+    offs = cfg.num_patches if cfg.family == "vlm" else 0
+    k = 9
+    cache = model.init_cache(B, 64)
+    lg, cache = model.prefill(params, tokens[:, :k], cache, extra or None)
+    np.testing.assert_allclose(np.asarray(lg[:, -1]),
+                               np.asarray(full[:, offs + k - 1]),
+                               atol=5e-4, rtol=1e-3)
+    for i in range(k, 12):
+        pos = jnp.full((B,), offs + i, jnp.int32)
+        lg, cache = model.decode_step(params, tokens[:, i:i + 1], cache, pos)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, offs + i]),
+                                   atol=5e-4, rtol=1e-3)
+
+
+def test_sliding_window_semantics():
+    """Window attention: tokens beyond the window don't influence logits."""
+    cfg = dataclasses.replace(get_config("recurrentgemma-9b").reduced(),
+                              remat=False, dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    t1 = jax.random.randint(jax.random.PRNGKey(3), (1, 12), 0, cfg.vocab)
+    # same suffix, different ancient prefix -> attention part must match
+    # within the window;  recurrent part DOES carry state, so only check
+    # the attention mask path via the pure attention layer:
+    from repro.models import layers as L
+    q = jax.random.normal(KEY, (1, 12, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 12, 2, 16))
+    v = jax.random.normal(jax.random.PRNGKey(5), (1, 12, 2, 16))
+    w = 4
+    out = L.flash_attention(q, k, v, causal=True, window=w,
+                            q_block=4, kv_block=4)
+    k2 = k.at[:, :4].set(999.0)   # clobber tokens outside window of pos>=8
+    v2 = v.at[:, :4].set(999.0)
+    out2 = L.flash_attention(q, k2, v2, causal=True, window=w,
+                             q_block=4, kv_block=4)
+    np.testing.assert_allclose(np.asarray(out[:, 8:]),
+                               np.asarray(out2[:, 8:]), atol=1e-5)
+
+
+def test_vocab_padding_masked_in_loss():
+    from repro.models.transformer import vocab_mask_logits
+    cfg = get_config("qwen2.5-14b").reduced()
+    cfg = dataclasses.replace(cfg, vocab=500)  # force padding to 512
+    model = build_model(cfg)
+    params = model.init(KEY)
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    logits = model.forward(params, tokens)
+    assert logits.shape[-1] == 512
+    masked = vocab_mask_logits(logits.astype(jnp.float32), cfg.vocab)
+    probs = jax.nn.softmax(masked, axis=-1)
+    # padded columns carry no probability mass
+    assert float(probs[..., cfg.vocab:].max()) < 1e-6
+    from repro.runtime.train import lm_loss
+    loss = lm_loss(model, params, {"tokens": tokens, "labels": tokens})
+    assert bool(jnp.isfinite(loss))
+
+
+def test_moe_routing_is_sparse():
+    """Each token gets exactly top_k experts' outputs combined."""
+    from repro.models.moe import moe_ffn, moe_params
+    cfg = get_config("granite-moe-3b-a800m").reduced()
+    p = moe_params(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model), cfg.dtype)
+    out, aux = moe_ffn(p, x, cfg, return_aux=True)
+    assert out.shape == x.shape
+    assert bool(jnp.isfinite(out.astype(jnp.float32)).all())
+    assert float(aux) > 0.5   # LB loss near 1 for near-uniform routing
+
+
+def test_kv_quant_decode_close_to_fp32():
+    """int8 KV cache (§Perf A3): decode matches the full-precision model
+    within int8 quantization tolerance; cache dtypes are int8."""
+    cfg = dataclasses.replace(get_config("qwen3-14b").reduced(),
+                              remat=False, dtype=jnp.float32, kv_quant=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B, 12), 0, cfg.vocab)
+    full = model.forward(params, tokens)
+    cache = model.init_cache(B, 64)
+    assert cache["k"].dtype == jnp.int8 and "k_scale" in cache
+    lg, cache = model.prefill(params, tokens[:, :9], cache)
+    errs = [float(jnp.abs(lg[:, -1] - full[:, 8]).max())]
+    for i in range(9, 12):
+        pos = jnp.full((B,), i, jnp.int32)
+        lg, cache = model.decode_step(params, tokens[:, i:i + 1], cache, pos)
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, i]).max()))
+    assert max(errs) < 0.15, errs
+
+
+def test_kv_quant_roundtrip_property():
+    from repro.models.layers import kv_dequantize, kv_quantize
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 4, 8, 16)) * 3.0
+    q, s = kv_quantize(x)
+    back = kv_dequantize(q, s, jnp.float32)
+    rel = float(jnp.max(jnp.abs(back - x) / (jnp.max(jnp.abs(x)) + 1e-9)))
+    assert q.dtype == jnp.int8
+    assert rel < 1.0 / 100   # absmax int8: <=1/254 of per-vector range
