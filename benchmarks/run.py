@@ -10,6 +10,7 @@ Emits ``name,us_per_call,derived`` CSV rows:
   * collectives      — §3.3.2 TAB vs ring on a real device mesh
   * kernels_bench    — Pallas kernels vs oracles
   * roofline         — deliverable (g) per-cell terms (reads dry-run JSONs)
+  * serve_bench      — serving hot path: per-token loop vs fused block decode
 """
 from __future__ import annotations
 
@@ -18,7 +19,7 @@ import sys
 import traceback
 
 MODULES = ("speedup_analysis", "latency_model", "workloads", "local_memory",
-           "collectives", "kernels_bench", "roofline")
+           "collectives", "kernels_bench", "roofline", "serve_bench")
 
 
 def main() -> None:

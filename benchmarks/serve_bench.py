@@ -1,0 +1,167 @@
+"""Benchmark: serving hot path — seed-style host-driven per-token decode
+vs the fused on-device block loop (§Perf iteration D).
+
+The per-token baseline reproduces the seed ``BatchedServer.run_once``
+anti-pattern exactly: one ``serve_step`` dispatch per token plus a
+``int(cur[i, 0])`` host sync per slot per step.  The block path is one
+dispatch and one host sync per ``BLOCK`` tokens.  The demo model is the
+1-layer CPU smoke transformer — the decode-dispatch-bound regime the
+paper's §4.2 TPOT claims assume (host overhead, not model math, bounds
+the seed loop).  Deeper stacks shift the ratio toward compute: the
+2-layer smoke config gives ~4x (see EXPERIMENTS.md).
+
+Emits tokens/s, dispatches-per-step and host-syncs-per-token for both
+paths, the speedup, and a continuous-batching row (mid-stream admission,
+no batch restart).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import build_model, get_config
+from repro.models.base import DecodeState
+from repro.runtime.serve import (BatchedServer, make_decode_loop,
+                                 make_prefill_step, make_serve_step, sample)
+
+BATCH = 4
+PROMPT = 8
+NEW_TOKENS = 64
+BLOCK = 32
+MAX_SEQ = 128
+REPEATS = 3          # timing = min over repeats (dispatch noise)
+
+
+def _counted(fn, counter: dict):
+    def wrapped(*a, **k):
+        counter["n"] += 1
+        return fn(*a, **k)
+    return wrapped
+
+
+def _setup():
+    cfg = get_config("qwen2.5-14b").reduced(num_layers=1)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (BATCH, PROMPT), 0,
+                                 cfg.vocab)
+    return model, params, prompts
+
+
+def _prefill(model, params, prompts):
+    cache = model.init_cache(BATCH, MAX_SEQ)
+    logits, cache = jax.jit(make_prefill_step(model))(params, prompts, cache)
+    cur = sample(logits, model.cfg.vocab, 0.0, jax.random.PRNGKey(0))
+    return cur, cache
+
+
+def _per_token(model, params, prompts) -> tuple[float, int, int, list]:
+    """Seed-style loop: dispatch + per-slot host sync every token."""
+    dispatches = {"n": 0}
+    sstep = _counted(jax.jit(make_serve_step(model)), dispatches)
+
+    def once():
+        cur, cache = _prefill(model, params, prompts)
+        key = jax.random.PRNGKey(7)
+        pos = jnp.full((BATCH,), PROMPT, jnp.int32)
+        outs = [[] for _ in range(BATCH)]
+        syncs = 0
+        t0 = time.perf_counter()
+        for _ in range(NEW_TOKENS):
+            key, k = jax.random.split(key)
+            cur, _, cache = sstep(params, cur, cache, pos, k)
+            pos = pos + 1
+            for i in range(BATCH):
+                outs[i].append(int(cur[i, 0]))    # the seed's per-slot sync
+                syncs += 1
+        return time.perf_counter() - t0, syncs, outs
+
+    once()                                        # warm the compile cache
+    dispatches["n"] = 0
+    runs = [once() for _ in range(REPEATS)]
+    dt, syncs, outs = min(runs, key=lambda r: r[0])
+    return dt, dispatches["n"] // REPEATS, syncs, outs
+
+
+def _block_decode(model, params, prompts) -> tuple[float, int, int, list]:
+    """Fused loop: one dispatch + one host sync per BLOCK tokens."""
+    dispatches = {"n": 0}
+    loop = _counted(make_decode_loop(model, block_size=BLOCK), dispatches)
+
+    def once():
+        cur, cache = _prefill(model, params, prompts)
+        state = DecodeState(tokens=cur,
+                            pos=jnp.full((BATCH,), PROMPT, jnp.int32),
+                            active=jnp.ones((BATCH,), bool),
+                            remaining=jnp.full((BATCH,), NEW_TOKENS,
+                                               jnp.int32),
+                            key=jax.random.PRNGKey(7))
+        outs = [[] for _ in range(BATCH)]
+        syncs = 0
+        t0 = time.perf_counter()
+        for _ in range(NEW_TOKENS // BLOCK):
+            toks, valid, cache, state = loop(params, cache, state)
+            blk = np.asarray(jax.device_get(toks))   # ONE sync per block
+            syncs += 1
+            for i in range(BATCH):
+                outs[i].extend(int(t) for t in blk[i])
+        return time.perf_counter() - t0, syncs, outs
+
+    once()                                        # warm (donates warm bufs)
+    dispatches["n"] = 0
+    runs = [once() for _ in range(REPEATS)]
+    dt, syncs, outs = min(runs, key=lambda r: r[0])
+    return dt, dispatches["n"] // REPEATS, syncs, outs
+
+
+def _continuous(model, params) -> str:
+    server = BatchedServer(model, params, batch_size=2, max_seq=MAX_SEQ,
+                           block_size=8)
+    server.submit(np.arange(1, 6, dtype=np.int32), max_new_tokens=32)
+    server.submit(np.arange(6, 9, dtype=np.int32), max_new_tokens=8)
+    server.submit(np.arange(9, 11, dtype=np.int32), max_new_tokens=8)
+    t0 = time.perf_counter()
+    done = server.run_once()
+    us = (time.perf_counter() - t0) * 1e6
+    s = server.stats
+    assert s["batches"] == 1 and len(done) == 3, (s, done)
+    return (f"serve_continuous_batching,{us:.0f},"
+            f"reqs={len(done)} slots=2 batches={s['batches']} "
+            f"admitted_mid_stream={s['admitted'] - 2} "
+            f"tok_per_dispatch={s['tokens'] / max(s['dispatches'], 1):.1f}")
+
+
+def run() -> list[str]:
+    model, params, prompts = _setup()
+    total = BATCH * NEW_TOKENS
+
+    dt_old, disp_old, sync_old, outs_old = _per_token(model, params, prompts)
+    dt_new, disp_new, sync_new, outs_new = _block_decode(
+        model, params, prompts)
+    assert outs_old == outs_new, "block decode must match per-token decode"
+    assert disp_old == NEW_TOKENS                  # 1 dispatch / token
+    assert disp_new == NEW_TOKENS // BLOCK         # 1 dispatch / block
+    assert sync_new == NEW_TOKENS // BLOCK         # 1 host sync / block
+
+    tps_old, tps_new = total / dt_old, total / dt_new
+    rows = [
+        f"serve_per_token,{dt_old / NEW_TOKENS * 1e6:.0f},"
+        f"tok_s={tps_old:.0f} dispatches_per_step="
+        f"{disp_old / NEW_TOKENS:.3f} syncs_per_tok={sync_old / total:.3f}",
+        f"serve_block{BLOCK},{dt_new / NEW_TOKENS * 1e6:.0f},"
+        f"tok_s={tps_new:.0f} dispatches_per_step="
+        f"{disp_new / NEW_TOKENS:.3f} syncs_per_tok={sync_new / total:.3f}"
+        f" speedup={tps_new / tps_old:.2f}x",
+        _continuous(model, params),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "src")
+    for row in run():
+        print(row)

@@ -27,14 +27,20 @@ PROMPTS = [
 
 
 def serve_all(model, params, tag):
-    server = BatchedServer(model, params, batch_size=2, max_seq=96)
+    # 2 slots for 4 requests: the back half is admitted MID-STREAM via
+    # continuous batching when the front half's slots free up.
+    server = BatchedServer(model, params, batch_size=2, max_seq=96,
+                           block_size=8)
     t0 = time.perf_counter()
     reqs = [server.submit(p, max_new_tokens=12) for p in PROMPTS]
     while any(not r.done.is_set() for r in reqs):
         server.run_once()
     dt = time.perf_counter() - t0
-    print(f"[{tag}] served {len(reqs)} requests, "
-          f"{server.stats['tokens']} tokens in {dt:.2f}s")
+    s = server.stats
+    print(f"[{tag}] served {len(reqs)} requests, {s['tokens']} tokens "
+          f"in {dt:.2f}s — {s['dispatches']} block dispatches "
+          f"({s['tokens'] / max(s['dispatches'], 1):.1f} tok/dispatch), "
+          f"{s['host_syncs']} host syncs")
     return [tuple(r.output) for r in reqs]
 
 
@@ -56,8 +62,7 @@ def main():
     paged_cfg = cfg.with_pager(enabled=True, lookahead=1)
     paged_model = build_model(paged_cfg)
     paged_params = dict(params)
-    paged_params["layers"] = jax.tree.map(
-        lambda x: jax.device_put(x, jax.memory.Space.Host), params["layers"])
+    paged_params["layers"] = pager.host_put(params["layers"])
     resident = pager.resident_window_bytes(paged_params["layers"], 1)
     total = pager.tree_bytes(params["layers"])
     print(f"[serve] FengHuang local window: {resident/1e6:.2f} MB resident "

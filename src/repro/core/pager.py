@@ -31,6 +31,48 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 REMOTE_KIND = "pinned_host"
 LOCAL_KIND = "device"
 
+# Host-side kinds that can back the FengHuang remote tier, best first.
+# GPU/TPU expose "pinned_host"; the CPU backend only has "unpinned_host"
+# (where local == remote, so paging degenerates to the identity — the
+# semantics stay intact and tests exercise the full transform).
+_HOST_KINDS = ("pinned_host", "unpinned_host")
+
+try:  # public since jax 0.5
+    from jax.sharding import TransferToMemoryKind as _TransferToMemoryKind
+except ImportError:  # pragma: no cover - version specific
+    try:
+        from jax._src.sharding_impls import (
+            TransferToMemoryKind as _TransferToMemoryKind)
+    except ImportError:
+        _TransferToMemoryKind = None
+
+
+@functools.lru_cache(maxsize=None)
+def _memory_kinds() -> frozenset:
+    try:
+        dev = jax.devices()[0]
+        return frozenset(m.kind for m in dev.addressable_memories())
+    except Exception:  # pragma: no cover - platform specific
+        return frozenset()
+
+
+def resolved_remote_kind() -> str | None:
+    """The memory kind backing the remote tier on this backend."""
+    for kind in _HOST_KINDS:
+        if kind in _memory_kinds():
+            return kind
+    return None
+
+
+def resolved_local_kind() -> str | None:
+    """The memory kind backing the local tier on this backend."""
+    if LOCAL_KIND in _memory_kinds():
+        return LOCAL_KIND
+    try:
+        return jax.devices()[0].default_memory().kind
+    except Exception:  # pragma: no cover - platform specific
+        return None
+
 
 @dataclasses.dataclass(frozen=True)
 class PagerConfig:
@@ -54,13 +96,9 @@ class PagerConfig:
 
 
 def supports_memory_spaces() -> bool:
-    """True if the backend exposes distinct host/device memory spaces."""
-    try:
-        dev = jax.devices()[0]
-        kinds = {m.kind for m in dev.addressable_memories()}
-        return REMOTE_KIND in kinds
-    except Exception:  # pragma: no cover - platform specific
-        return False
+    """True if the backend exposes a host memory kind the remote tier can
+    live in (distinct from HBM on GPU/TPU; aliased with it on CPU)."""
+    return resolved_remote_kind() is not None
 
 
 def remote_sharding(mesh, pspec: P) -> NamedSharding:
@@ -79,20 +117,51 @@ def to_remote(tree: Any, mesh, pspec_tree: Any) -> Any:
         tree, pspec_tree)
 
 
+def _put_kind(x: jax.Array, kind: str | None) -> jax.Array:
+    if kind is None:
+        return x
+    if isinstance(x, jax.core.Tracer):
+        if _TransferToMemoryKind is None:  # pragma: no cover - old jax
+            return x
+        return jax.device_put(x, _TransferToMemoryKind(kind))
+    return jax.device_put(x, x.sharding.with_memory_kind(kind))
+
+
 def page_in(tree: Any) -> Any:
     """Fetch a pytree from the remote tier into local (device) memory.
 
     Traceable: inside jit this lowers to an async H2D copy that XLA
     schedules concurrently with unrelated compute (the paging stream).
     """
-    return jax.tree.map(lambda x: jax.device_put(x, jax.memory.Space.Device),
-                        tree)
+    return jax.tree.map(lambda x: _put_kind(x, resolved_local_kind()), tree)
 
 
 def page_out(tree: Any) -> Any:
     """Evict a pytree to the remote tier (write-back)."""
-    return jax.tree.map(lambda x: jax.device_put(x, jax.memory.Space.Host),
-                        tree)
+    return jax.tree.map(lambda x: _put_kind(x, resolved_remote_kind()), tree)
+
+
+def host_put(tree: Any) -> Any:
+    """Eagerly place a pytree in the remote tier (single-device helper for
+    examples/tests; sharded placement goes through :func:`to_remote`)."""
+    return jax.tree.map(lambda x: _put_kind(jnp.asarray(x),
+                                            resolved_remote_kind()), tree)
+
+
+def donating_jit(fn: Callable, *, donate_argnums: tuple[int, ...] = (),
+                 config: PagerConfig | None = None, **jit_kwargs) -> Callable:
+    """``jax.jit`` with the FengHuang donation contract.
+
+    The serving hot path hands its KV cache and decode state to every
+    dispatch and never touches the old buffers again — exactly the
+    "consumed double buffer" the pager's eviction policy describes.
+    Donating them lets XLA alias input and output so the cache is updated
+    in place instead of copied once per dispatch.  ``config.donate_evicted
+    = False`` turns the aliasing off (debug mode: old buffers stay live).
+    """
+    if config is not None and not config.donate_evicted:
+        donate_argnums = ()
+    return jax.jit(fn, donate_argnums=donate_argnums, **jit_kwargs)
 
 
 def _index_layer(stacked: Any, i) -> Any:

@@ -31,6 +31,43 @@ def pad_to(n: int, q: int) -> int:
     return ((n + q - 1) // q) * q
 
 
+@dataclasses.dataclass
+class DecodeState:
+    """Per-slot decoding state threaded through the fused decode loop.
+
+    One instance covers the whole serving batch; every field is a device
+    array so a block of decode steps runs without a host round trip.
+
+    Donation contract: a decode loop *consumes* its ``(cache, state)``
+    arguments.  Callers jit the loop with ``donate_argnums`` on both (see
+    :func:`repro.core.pager.donating_jit`) so XLA aliases the KV cache and
+    state buffers in place; the donated inputs are dead after the call and
+    must not be reused.
+    """
+
+    tokens: jax.Array     # (B, 1) int32 — last sampled token per slot
+    pos: jax.Array        # (B,)  int32 — absolute position the next decode
+                          #        step writes (== tokens seen so far)
+    active: jax.Array     # (B,)  bool  — slot is mid-generation
+    remaining: jax.Array  # (B,)  int32 — decode tokens still owed
+    key: jax.Array        # PRNG key, split once per decode step
+
+    @classmethod
+    def init(cls, batch: int, key: jax.Array) -> "DecodeState":
+        """All-idle state: every slot is a no-op until admission."""
+        return cls(tokens=jnp.zeros((batch, 1), jnp.int32),
+                   pos=jnp.zeros((batch,), jnp.int32),
+                   active=jnp.zeros((batch,), bool),
+                   remaining=jnp.zeros((batch,), jnp.int32),
+                   key=key)
+
+
+jax.tree_util.register_dataclass(
+    DecodeState,
+    data_fields=["tokens", "pos", "active", "remaining", "key"],
+    meta_fields=[])
+
+
 @dataclasses.dataclass(frozen=True)
 class PagerPolicy:
     """FengHuang paging policy carried in the model config."""
@@ -90,6 +127,10 @@ class ModelConfig:
     # attention implementation for prefill/train
     q_block: int = 512
     kv_block: int = 512
+    # decode layer-scan unroll: >1 trades compile time for fewer per-
+    # iteration loop ops on the decode hot path (CPU demo: big win for
+    # shallow models; deep prod stacks keep 1)
+    decode_unroll: int = 1
     # remat policy for train
     remat: bool = True
 

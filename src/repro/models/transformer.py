@@ -17,7 +17,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import pager
 from repro.models import layers as L
-from repro.models.base import ModelConfig, BATCH_AXES, split_keys
+from repro.models.base import (ModelConfig, BATCH_AXES, DecodeState,
+                               split_keys)
 from repro.runtime.sharding import SEQ_SHARDED_ACTS, maybe_constraint
 
 
@@ -215,6 +216,20 @@ class DenseLM:
         """tokens: (B, 1); cur_pos: (B,) absolute position being written."""
         cfg = self.cfg
         x = self._embed(params, tokens)
+        if cfg.pager.offload_kv and not cfg.kv_quant:
+            x, cache = self._decode_paged_cache(params, x, cache, cur_pos)
+        else:
+            x, cache = self._decode_scatter(params, x, cache, cur_pos)
+        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+        return L.lm_head(params["embed"], x, cfg), cache
+
+    def _cache_slot(self, cache_seq: int, cur_pos: jax.Array) -> jax.Array:
+        w = self.cfg.sliding_window
+        return (cur_pos % cache_seq) if (w > 0 and cache_seq <= w) else cur_pos
+
+    def _decode_scatter(self, params: dict, x: jax.Array, cache: dict,
+                        cur_pos: jax.Array):
+        cfg = self.cfg
         b = x.shape[0]
 
         def body(h, lp, cache_layer):
@@ -234,10 +249,9 @@ class DenseLM:
               if cfg.kv_quant else (cache["k"], cache["v"]))
         x, (k_new, v_new) = pager.paged_scan(
             body, x, params["layers"], xs=xs,
-            config=_pager_cfg(cfg), page_xs=cfg.pager.offload_kv)
-        s_cache = cache["k"].shape[3]
-        w = cfg.sliding_window
-        slot = (cur_pos % s_cache) if (w > 0 and s_cache <= w) else cur_pos
+            config=_pager_cfg(cfg), page_xs=cfg.pager.offload_kv,
+            unroll=cfg.decode_unroll)
+        slot = self._cache_slot(cache["k"].shape[3], cur_pos)
         bidx = jnp.arange(b)
         # advanced-index set: value layout (B, L, Hkv, hd)
         if cfg.kv_quant:
@@ -260,11 +274,95 @@ class DenseLM:
                 "v": cache["v"].at[:, bidx, :, slot].set(
                     v_new.transpose(1, 0, 2, 3).astype(cache["v"].dtype)),
             }
-        x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
-        return L.lm_head(params["embed"], x, cfg), cache
+        return x, cache
+
+    def _decode_paged_cache(self, params: dict, x: jax.Array, cache: dict,
+                            cur_pos: jax.Array):
+        """FengHuang KV-offload decode: the cache rides in the scan CARRY
+        (``paged_scan_cache``), each layer's slice paged in before
+        attention and written back — with the current token's (k, v)
+        merged in place — so only one layer's KV is device-resident."""
+        cfg = self.cfg
+        b = x.shape[0]
+        slot = self._cache_slot(cache["k"].shape[3], cur_pos)
+        bidx = jnp.arange(b)
+
+        def body(h, lp, cache_layer):
+            ck, cv = cache_layer
+            h, k0, v0 = self.block_decode(lp, h, ck, cv, cur_pos)
+            ck = ck.at[bidx, :, slot].set(k0.astype(ck.dtype))
+            cv = cv.at[bidx, :, slot].set(v0.astype(cv.dtype))
+            return h, (ck, cv)
+
+        x, (ck, cv) = pager.paged_scan_cache(
+            body, x, params["layers"], (cache["k"], cache["v"]),
+            config=_pager_cfg(cfg))
+        return x, {"k": ck, "v": cv}
+
+    def decode_loop(self, params: dict, cache: dict, state: DecodeState, *,
+                    num_steps: int, temperature: float = 0.0,
+                    eos_id: int | None = None):
+        """Fused multi-step decode — see module-level :func:`decode_loop`."""
+        return decode_loop(self, params, cache, state, num_steps=num_steps,
+                           temperature=temperature, eos_id=eos_id)
 
 
 def vocab_mask_logits(logits: jax.Array, vocab: int) -> jax.Array:
     """Mask padded vocabulary columns to -inf."""
     cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
     return jnp.where(cols < vocab, logits, L.NEG_INF)
+
+
+def sample_tokens(logits: jax.Array, vocab: int, temperature: float,
+                  key: jax.Array) -> jax.Array:
+    """logits: (B, 1, V) -> (B, 1) token ids (greedy for temperature<=0)."""
+    logits = vocab_mask_logits(logits, vocab).astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def decode_loop(model, params: dict, cache: dict, state: DecodeState, *,
+                num_steps: int, temperature: float = 0.0,
+                eos_id: int | None = None):
+    """Fused on-device decode: ``num_steps`` tokens in ONE dispatch.
+
+    A ``lax.scan`` over decode steps — any model exposing
+    ``decode_step(params, tokens, cache, cur_pos)`` works.  Per-slot
+    ``active``/``remaining`` masks turn finished sequences into no-ops:
+    their fed token and write position freeze, so a drained slot neither
+    advances nor perturbs live neighbours, and the emitted ``valid`` mask
+    tells the host which tokens are real.  The PRNG key is split exactly
+    like the host-driven per-token loop (``key, k = split(key)`` per
+    step), so block decoding is bit-identical to per-token decoding at
+    any temperature.
+
+    Returns ``(tokens (B, num_steps), valid (B, num_steps), cache,
+    state)``.  Callers should jit this with the cache and state donated
+    (:func:`repro.core.pager.donating_jit`) so the KV cache is aliased in
+    place across dispatches — the decode-side donation contract of
+    :class:`repro.models.base.DecodeState`.
+    """
+    vocab = model.cfg.vocab
+
+    def step(carry, _):
+        cache, st = carry
+        key, k = jax.random.split(st.key)
+        logits, cache = model.decode_step(params, st.tokens, cache, st.pos)
+        nxt = sample_tokens(logits, vocab, temperature, k)
+        # freeze finished slots: keep re-feeding the last token in place
+        nxt = jnp.where(st.active[:, None], nxt, st.tokens)
+        emitted = st.active
+        pos = st.pos + emitted.astype(st.pos.dtype)
+        remaining = st.remaining - emitted.astype(st.remaining.dtype)
+        active = st.active & (remaining > 0)
+        if eos_id is not None:
+            active = active & (nxt[:, 0] != eos_id)
+        new_state = DecodeState(tokens=nxt, pos=pos, active=active,
+                                remaining=remaining, key=key)
+        return (cache, new_state), (nxt[:, 0], emitted)
+
+    (cache, state), (toks, valid) = jax.lax.scan(
+        step, (cache, state), None, length=num_steps)
+    return toks.T, valid.T, cache, state

@@ -1,23 +1,33 @@
-"""Serving runtime: prefill/decode step functions and a batched server
-with continuous-batching-lite semantics.
+"""Serving runtime: fused on-device block decode + continuous batching.
 
-serve_step == one decode step for the whole batch against the KV cache —
-the function the decode_* dry-run shapes lower.  Sampling is greedy or
-temperature-based; padded vocab columns are masked.
+The decode hot path is ONE dispatch per ``block_size`` tokens: a
+``lax.scan`` decode loop (:func:`repro.models.transformer.decode_loop`)
+emits a ``(B, block)`` token block with per-slot ``active``/``remaining``
+masks, the KV cache and decode state are **donated** into every dispatch
+(updated in place, never copied), and the host syncs once per block to
+harvest tokens.  On top of it, :class:`BatchedServer` does continuous
+batching: requests are admitted into individual slots between blocks via
+``dynamic_update_slice`` into the *live* cache/state — no batch restart —
+and slots are recycled the moment a sequence hits EOS or its token budget.
+
+``serve_step`` (one per-token dispatch) is kept for dry-run lowering and
+as the baseline the serving benchmark measures against.
 """
 from __future__ import annotations
 
 import dataclasses
 import queue
 import threading
-import time
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.transformer import vocab_mask_logits
+from repro.core import pager
+from repro.models.base import DecodeState
+from repro.models.transformer import (decode_loop, sample_tokens,
+                                      vocab_mask_logits)
 
 
 @dataclasses.dataclass
@@ -33,11 +43,7 @@ class Request:
 def sample(logits: jax.Array, vocab: int, temperature: float,
            key: jax.Array) -> jax.Array:
     """logits: (B, 1, V) -> (B, 1) token ids."""
-    logits = vocab_mask_logits(logits, vocab).astype(jnp.float32)
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(
-        key, logits / temperature, axis=-1).astype(jnp.int32)
+    return sample_tokens(logits, vocab, temperature, key)
 
 
 def make_prefill_step(model) -> Callable:
@@ -49,7 +55,7 @@ def make_prefill_step(model) -> Callable:
 
 def make_serve_step(model, *, temperature: float = 0.0) -> Callable:
     """One decode step: (params, tokens (B,1), cache, cur_pos, key) ->
-    (next_tokens (B,1), logits, cache)."""
+    (next_tokens (B,1), logits, cache).  The per-token baseline."""
     vocab = model.cfg.vocab
 
     def serve_step(params, tokens, cache, cur_pos, key):
@@ -59,72 +65,214 @@ def make_serve_step(model, *, temperature: float = 0.0) -> Callable:
     return serve_step
 
 
-class BatchedServer:
-    """Minimal batched inference server (single process, CPU demo scale).
+def make_decode_loop(model, *, block_size: int, temperature: float = 0.0,
+                     eos_id: int | None = None, donate: bool = True
+                     ) -> Callable:
+    """Jit the fused decode loop with the donation contract: the cache
+    (arg 1) and decode state (arg 2) are consumed by every dispatch."""
+    def loop(params, cache, state):
+        return decode_loop(model, params, cache, state, num_steps=block_size,
+                           temperature=temperature, eos_id=eos_id)
+    return pager.donating_jit(loop, donate_argnums=(1, 2) if donate else ())
 
-    Requests accumulate into fixed-size batches (padding with idle slots),
-    prefill runs per batch, then the decode loop emits one token per step
-    for every live slot — the paper's inference-serving shape.
+
+def _bucket(n: int, quantum: int = 8) -> int:
+    """Pad prompt lengths to a bucket so admission compiles O(log) shapes."""
+    b = quantum
+    while b < n:
+        b *= 2
+    return b
+
+
+class BatchedServer:
+    """Continuous-batching inference server (single process).
+
+    Decode runs in fixed-size fused blocks over a persistent ``batch_size``
+    -slot state.  Between blocks, finished slots are recycled and queued
+    requests are admitted into the live cache — mid-stream, without
+    restarting or re-prefilling the rest of the batch.  Exactly one host
+    transfer happens per decoded block (the token-block harvest).
     """
 
     def __init__(self, model, params, *, batch_size: int = 4,
-                 max_seq: int = 256, temperature: float = 0.0, seed: int = 0):
+                 max_seq: int = 256, temperature: float = 0.0, seed: int = 0,
+                 block_size: int = 8, eos_id: int | None = None):
         self.model = model
         self.params = params
         self.batch = batch_size
         self.max_seq = max_seq
+        self.block_size = block_size
+        self.temperature = temperature
+        self.eos_id = eos_id
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self._uid = 0
-        self.prefill_step = jax.jit(make_prefill_step(model))
-        self.serve_step = jax.jit(make_serve_step(model,
-                                                  temperature=temperature))
-        self.key = jax.random.PRNGKey(seed)
-        self.stats = {"steps": 0, "tokens": 0, "batches": 0}
+        self._decode_loop = make_decode_loop(
+            model, block_size=block_size, temperature=temperature,
+            eos_id=eos_id)
+        self._admit_step = pager.donating_jit(self._make_admit_step(),
+                                              donate_argnums=(2, 3))
+        # live slot state — donated through every dispatch
+        self.cache = model.init_cache(batch_size, max_seq)
+        self.state = DecodeState.init(batch_size, jax.random.PRNGKey(seed))
+        self.slots: list[Request | None] = [None] * batch_size
+        self.stats = {"steps": 0, "tokens": 0, "batches": 0, "blocks": 0,
+                      "dispatches": 0, "admitted": 0, "host_syncs": 0}
 
+    # ----- request intake ----------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        # validate HERE so the caller sees the error; a raise mid-admission
+        # would drop an already-dequeued request with done never set
+        if len(prompt) + max(max_new_tokens - 1, 0) > self.max_seq:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens})"
+                f" exceeds max_seq={self.max_seq}")
         self._uid += 1
-        req = Request(self._uid, np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new_tokens)
+        req = Request(self._uid, prompt, max_new_tokens=max_new_tokens)
         self.queue.put(req)
         return req
 
-    def _next_batch(self) -> list[Request]:
-        reqs = [self.queue.get()]
-        while len(reqs) < self.batch:
+    # ----- admission ---------------------------------------------------------
+    def _make_admit_step(self) -> Callable:
+        model, max_seq = self.model, self.max_seq
+        vocab, temperature = self.model.cfg.vocab, self.temperature
+        eos_id = self.eos_id
+
+        def admit_step(params, ptoks, cache, state, slot, max_new):
+            """Prefill ONE request and splice it into the live batch state.
+
+            ptoks: (1, P) left-padded prompt; slot/max_new: traced scalars.
+            Donates (cache, state) — the splice is in place.
+            """
+            key, k = jax.random.split(state.key)
+            fresh = model.init_cache(1, max_seq)
+            logits, fresh = model.prefill(params, ptoks, fresh)
+            nxt = sample_tokens(logits, vocab, temperature, k)   # (1, 1)
+
+            def splice(big, small):
+                """Write the single-request leaf into the batch leaf at
+                ``slot``.  The batch axis is found per leaf (the unique
+                axis where the shapes differ), so non-transformer caches
+                — e.g. recurrent state with batch leading — splice too."""
+                if big.shape == small.shape:  # batch-1 server: whole swap
+                    return small.astype(big.dtype)
+                diff = [i for i, (bs, ss) in enumerate(zip(big.shape,
+                                                           small.shape))
+                        if bs != ss]
+                if len(diff) != 1:
+                    raise ValueError(
+                        f"cannot infer the batch axis of cache leaf "
+                        f"{big.shape} from single-request leaf "
+                        f"{small.shape}")
+                ax = diff[0]
+                starts = (0,) * ax + (slot,) + (0,) * (big.ndim - ax - 1)
+                return jax.lax.dynamic_update_slice(
+                    big, small.astype(big.dtype), starts)
+
+            cache = jax.tree.map(splice, cache, fresh)
+            plen = ptoks.shape[1]
+            active = max_new > 1
+            if eos_id is not None:      # EOS at admission: never activate
+                active = active & (nxt[0, 0] != eos_id)
+            upd1 = lambda buf, val: jax.lax.dynamic_update_slice(
+                buf, jnp.asarray(val, buf.dtype)[None], (slot,))
+            state = DecodeState(
+                tokens=jax.lax.dynamic_update_slice(state.tokens, nxt,
+                                                    (slot, 0)),
+                pos=upd1(state.pos, plen),
+                active=upd1(state.active, active),
+                remaining=upd1(state.remaining, max_new - 1),
+                key=key)
+            return nxt, cache, state
+        return admit_step
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def _admit(self, req: Request, slot: int) -> bool:
+        """Prefill ``req`` into ``slot`` of the live batch; True if the
+        request finished at admission (budget of 1 / immediate EOS).
+
+        Left-pad tokens (id 0) inside the bucket are attended like the
+        seed server attended its batch-wide left-padding — deterministic,
+        but outputs depend on the bucket quantum (see EXPERIMENTS.md).
+        """
+        # the bucketed start position must leave room for every decode
+        # write (pos < max_seq, KV scatter past the cache end is silently
+        # dropped by jit) — fall back to the exact prompt length (one
+        # extra compile) when the bucket would overflow
+        limit = self.max_seq - max(req.max_new_tokens - 1, 0)
+        bucket = _bucket(len(req.prompt))
+        plen = bucket if bucket <= limit else len(req.prompt)
+        toks = np.zeros((1, plen), np.int32)
+        toks[0, plen - len(req.prompt):] = req.prompt        # left-pad
+        nxt, self.cache, self.state = self._admit_step(
+            self.params, jnp.asarray(toks), self.cache, self.state,
+            jnp.asarray(slot, jnp.int32),
+            jnp.asarray(req.max_new_tokens, jnp.int32))
+        first = int(jax.device_get(nxt)[0, 0])
+        req.output.append(first)
+        self.stats["tokens"] += 1
+        self.stats["admitted"] += 1
+        if req.max_new_tokens <= 1 or (self.eos_id is not None
+                                       and first == self.eos_id):
+            req.done.set()
+            return True
+        self.slots[slot] = req
+        return False
+
+    def _admit_from_queue(self, finished: list[Request]) -> None:
+        """Fill free slots from the queue (non-blocking, mid-stream)."""
+        while True:
+            free = self._free_slots()
+            if not free:
+                return
             try:
-                reqs.append(self.queue.get_nowait())
+                req = self.queue.get_nowait()
             except queue.Empty:
-                break
-        return reqs
+                return
+            if self._admit(req, free[0]):
+                finished.append(req)      # done at admission: slot stays free
+
+    # ----- decode ------------------------------------------------------------
+    def run_block(self) -> list[Request]:
+        """One fused dispatch = ``block_size`` decode steps, then ONE host
+        sync to harvest the token block.  Returns requests that finished."""
+        toks, valid, self.cache, self.state = self._decode_loop(
+            self.params, self.cache, self.state)
+        self.stats["dispatches"] += 1
+        self.stats["blocks"] += 1
+        self.stats["steps"] += self.block_size
+        toks_h, valid_h = jax.device_get((toks, valid))      # the one sync
+        self.stats["host_syncs"] += 1
+        finished = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            for t in range(self.block_size):
+                if not valid_h[i, t]:
+                    break                 # active mask is monotone per slot
+                req.output.append(int(toks_h[i, t]))
+                self.stats["tokens"] += 1
+            if (len(req.output) >= req.max_new_tokens
+                    or (self.eos_id is not None and req.output
+                        and req.output[-1] == self.eos_id)):
+                req.done.set()
+                finished.append(req)
+                self.slots[i] = None       # slot recycled for admission
+        return finished
 
     def run_once(self) -> list[Request]:
-        """Serve one batch to completion; returns the finished requests."""
-        reqs = self._next_batch()
-        n = len(reqs)
-        plen = max(len(r.prompt) for r in reqs)
-        toks = np.zeros((self.batch, plen), np.int32)
-        for i, r in enumerate(reqs):
-            toks[i, plen - len(r.prompt):] = r.prompt   # left-pad
-        cache = self.model.init_cache(self.batch, self.max_seq)
-        logits, cache = self.prefill_step(self.params, jnp.asarray(toks),
-                                          cache)
-        self.key, k = jax.random.split(self.key)
-        cur = sample(logits, self.model.cfg.vocab, 0.0, k)
-        for i, r in enumerate(reqs):
-            r.output.append(int(cur[i, 0]))
-        max_new = max(r.max_new_tokens for r in reqs)
-        pos = jnp.full((self.batch,), plen, jnp.int32)
-        for step in range(max_new - 1):
-            self.key, k = jax.random.split(self.key)
-            cur, logits, cache = self.serve_step(self.params, cur, cache,
-                                                 pos, k)
-            pos = pos + 1
-            self.stats["steps"] += 1
-            for i, r in enumerate(reqs):
-                if len(r.output) < r.max_new_tokens:
-                    r.output.append(int(cur[i, 0]))
-                    self.stats["tokens"] += 1
-        for r in reqs:
-            r.done.set()
-        self.stats["batches"] += 1
-        return reqs
+        """Admit queued requests and serve until every admitted request
+        completes; returns the finished ones.  Requests that arrive (or
+        overflow the slot count) while serving are admitted mid-stream.
+        Non-blocking when idle: empty queue + no live slots returns [].
+        """
+        finished: list[Request] = []
+        self._admit_from_queue(finished)
+        while any(r is not None for r in self.slots):
+            finished.extend(self.run_block())
+            self._admit_from_queue(finished)
+        if finished:
+            self.stats["batches"] += 1
+        return finished

@@ -1,0 +1,78 @@
+"""Minimal stand-in for ``hypothesis`` so the tier-1 suite still runs
+where the real package is absent (see requirements-dev.txt for full runs).
+
+Implements just the surface these tests use: ``given`` with keyword
+strategies, ``settings(max_examples=..., deadline=...)``, and
+``strategies.integers/floats/lists``.  Drawing is deterministic (seeded
+PRNG) and always covers the strategy's boundary values first — a fixed
+sample sweep, not property search, but the same assertions execute.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_MAX_EXAMPLES_CAP = 20          # keep the fallback sweep cheap
+
+
+class _Strategy:
+    def __init__(self, edges, draw):
+        self.edges = list(edges)     # boundary examples, tried first
+        self.draw = draw             # draw(rng) -> random example
+
+
+class strategies:  # noqa: N801 - mimics the hypothesis module name
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 16):
+        return _Strategy([min_value, max_value],
+                         lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy([min_value, max_value],
+                         lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10, **_kw):
+        def draw(r):
+            n = r.randint(min_size, max_size)
+            return [elements.draw(r) for _ in range(n)]
+        edge_elem = elements.edges[0] if elements.edges \
+            else elements.draw(random.Random(0))
+        edges = [[edge_elem] * min_size] if min_size else [[]]
+        edges.append([edge_elem] * max_size)
+        return _Strategy(edges, draw)
+
+
+def settings(max_examples=20, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kw):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items()
+                if name not in strategy_kw]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            budget = min(getattr(fn, "_fallback_max_examples", 20),
+                         _MAX_EXAMPLES_CAP)
+            rng = random.Random(0xF36)
+            n_edges = max(len(s.edges) for s in strategy_kw.values())
+            for j in range(min(n_edges, budget)):
+                drawn = {k: s.edges[min(j, len(s.edges) - 1)]
+                         for k, s in strategy_kw.items()}
+                fn(*args, **drawn, **kwargs)
+            for _ in range(budget - min(n_edges, budget)):
+                drawn = {k: s.draw(rng) for k, s in strategy_kw.items()}
+                fn(*args, **drawn, **kwargs)
+
+        # hide strategy params from pytest's fixture resolution
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+    return deco

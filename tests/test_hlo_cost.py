@@ -50,9 +50,11 @@ def test_xla_cost_analysis_undercounts_loops():
     def scanned(a, w):
         return jax.lax.scan(lambda c, wi: (c @ wi, None), a, w)[0]
 
-    xla = jax.jit(scanned).lower(x, ws).compile().cost_analysis()["flops"]
+    ca = jax.jit(scanned).lower(x, ws).compile().cost_analysis()
+    if isinstance(ca, list):     # jax < 0.5 returns one dict per device
+        ca = ca[0]
     walker = _cost(scanned, x, ws)["flops"]
-    assert walker > 5 * xla
+    assert walker > 5 * ca["flops"]
 
 
 def test_bytes_reasonable_for_copy():

@@ -25,8 +25,7 @@ def test_paged_scan_matches_plain(ws):
     c0 = jnp.ones((2, 16))
     ref_c, ref_y = jax.jit(
         lambda c, w: jax.lax.scan(body, c, w))(c0, ws)
-    ws_host = jax.tree.map(
-        lambda x: jax.device_put(x, jax.memory.Space.Host), ws)
+    ws_host = pager.host_put(ws)
     got_c, got_y = jax.jit(
         lambda c, w: pager.paged_scan(body, c, w,
                                       config=pager.PagerConfig(enabled=True))
@@ -57,8 +56,7 @@ def test_grad_through_paging(ws):
             lambda cc, ww: (jnp.tanh(cc @ ww), None), c, w)
         return jnp.sum(out ** 2)
 
-    ws_host = jax.tree.map(
-        lambda x: jax.device_put(x, jax.memory.Space.Host), ws)
+    ws_host = pager.host_put(ws)
     g1 = jax.jit(jax.grad(loss, argnums=1))(c0, ws_host)
     g2 = jax.jit(jax.grad(loss_plain, argnums=1))(c0, ws)
     np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-6)
@@ -86,8 +84,7 @@ def test_paged_scan_cache_matches_loop(ws):
     np.testing.assert_allclose(got_cache, ref_cache, atol=1e-6)
 
     # paged variant agrees too
-    ws_host = jax.tree.map(
-        lambda x: jax.device_put(x, jax.memory.Space.Host), ws)
+    ws_host = pager.host_put(ws)
     got2_c, got2_cache = jax.jit(lambda c, w, ca: pager.paged_scan_cache(
         cbody, c, w, ca, config=pager.PagerConfig(enabled=True)))(
             c0, ws_host, cache)

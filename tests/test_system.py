@@ -59,8 +59,7 @@ def test_paged_model_matches_unpaged():
     paged_model = build_model(paged_cfg)
     # move the stacked layers to the remote tier
     params_paged = dict(params)
-    params_paged["layers"] = jax.tree.map(
-        lambda x: jax.device_put(x, jax.memory.Space.Host), params["layers"])
+    params_paged["layers"] = pager.host_put(params["layers"])
     got = jax.jit(paged_model.forward)(params_paged, tokens)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                atol=1e-5, rtol=1e-5)

@@ -14,17 +14,27 @@ import sys
 sys.path.insert(0, sys.argv[1])
 import functools
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
 from repro.core import tab
 
 n = 8
-mesh = jax.make_mesh((n,), ("model",), axis_types=(AxisType.Auto,))
+try:                                    # jax >= 0.5 axis types
+    from jax.sharding import AxisType
+    mesh = jax.make_mesh((n,), ("model",), axis_types=(AxisType.Auto,))
+except ImportError:
+    mesh = jax.make_mesh((n,), ("model",))
+try:                                    # jax >= 0.5 public shard_map
+    shard_map, _sm_kw = jax.shard_map, {"check_vma": False}
+except AttributeError:
+    from jax.experimental.shard_map import shard_map
+    _sm_kw = {"check_rep": False}
+
 rng = np.random.RandomState(0)
 x = jnp.asarray(rng.randn(n * 4, 16), jnp.float32)
 
 def smap(fn, in_specs, out_specs):
-    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                                 out_specs=out_specs, check_vma=False))
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **_sm_kw))
 
 # allreduce: tab == ring == jnp sum
 want = np.tile(np.asarray(x).reshape(n, 4, 16).sum(0), (n, 1, 1)).reshape(n*4, 16)
