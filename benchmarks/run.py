@@ -10,7 +10,11 @@ Emits ``name,us_per_call,derived`` CSV rows:
   * collectives      — §3.3.2 TAB vs ring on a real device mesh
   * kernels_bench    — Pallas kernels vs oracles
   * roofline         — deliverable (g) per-cell terms (reads dry-run JSONs)
-  * serve_bench      — serving hot path: per-token loop vs fused block decode
+  * serve_bench      — serving hot path: per-token loop vs fused block
+                       decode vs block-pool paged KV; also writes the
+                       machine-readable ``BENCH_serve.json`` (tokens/s,
+                       KV bytes per active token, attention FLOPs/token
+                       vs seq len) that CI tracks
 """
 from __future__ import annotations
 

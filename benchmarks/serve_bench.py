@@ -1,30 +1,33 @@
 """Benchmark: serving hot path — seed-style host-driven per-token decode
-vs the fused on-device block loop (§Perf iteration D).
+vs the fused on-device block loop, and dense-slab KV vs the block-pool
+paged cache (§Perf iterations D + E).
 
 The per-token baseline reproduces the seed ``BatchedServer.run_once``
 anti-pattern exactly: one ``serve_step`` dispatch per token plus a
 ``int(cur[i, 0])`` host sync per slot per step.  The block path is one
-dispatch and one host sync per ``BLOCK`` tokens.  The demo model is the
-1-layer CPU smoke transformer — the decode-dispatch-bound regime the
-paper's §4.2 TPOT claims assume (host overhead, not model math, bounds
-the seed loop).  Deeper stacks shift the ratio toward compute: the
-2-layer smoke config gives ~4x (see EXPERIMENTS.md).
+dispatch and one host sync per ``BLOCK`` tokens.  The paged path serves
+the same requests from the device-resident page pool: identical tokens,
+KV bytes proportional to live tokens instead of ``batch × max_seq``, and
+per-step attention reads that scale with the actual sequence length.
 
-Emits tokens/s, dispatches-per-step and host-syncs-per-token for both
-paths, the speedup, and a continuous-batching row (mid-stream admission,
-no batch restart).
+Emits human-readable CSV rows AND writes ``BENCH_serve.json`` (cwd) with
+machine-readable tokens/s, KV-bytes-per-active-token and attention
+cost-vs-seq-len numbers so CI can track the perf trajectory.
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import build_model, get_config
+from repro.core import pager
 from repro.models.base import DecodeState
-from repro.runtime.serve import (BatchedServer, make_decode_loop,
+from repro.runtime.serve import (BatchedServer, _bucket, make_decode_loop,
                                  make_prefill_step, make_serve_step, sample)
 
 BATCH = 4
@@ -33,6 +36,7 @@ NEW_TOKENS = 64
 BLOCK = 32
 MAX_SEQ = 128
 REPEATS = 3          # timing = min over repeats (dispatch noise)
+JSON_PATH = Path("BENCH_serve.json")
 
 
 def _counted(fn, counter: dict):
@@ -117,6 +121,129 @@ def _block_decode(model, params, prompts) -> tuple[float, int, int, list]:
     return dt, dispatches["n"] // REPEATS, syncs, outs
 
 
+def _serve_requests(model, params, *, paged: bool):
+    """Serve BATCH identical-shape requests through BatchedServer; return
+    (dt, outputs, server).  The server is warmed with one run first so
+    the timing measures the steady-state hot path, not compiles."""
+    def submit_all(server):
+        rng = np.random.RandomState(5)
+        return [server.submit(rng.randint(0, model.cfg.vocab, PROMPT)
+                              .astype(np.int32),
+                              max_new_tokens=NEW_TOKENS)
+                for _ in range(BATCH)]
+
+    server = BatchedServer(model, params, batch_size=BATCH, max_seq=MAX_SEQ,
+                           block_size=BLOCK, paged=paged)
+    submit_all(server)
+    server.run_once()                             # warm every compile
+    reqs = submit_all(server)
+    t0 = time.perf_counter()
+    server.run_once()
+    dt = time.perf_counter() - t0
+    return dt, [tuple(r.output) for r in reqs], server
+
+
+def _attention_scaling(model) -> dict:
+    """Per-decode-step attention read cost at several live sequence
+    lengths: the dense slab always scans max_seq columns; the paged path
+    reads only the (power-of-two bucketed) pages covering the live
+    length.  FLOPs/token = 2 dots x 2 FLOPs/MAC x Hq x hd x columns."""
+    cfg = model.cfg
+    hq, hd, page = cfg.padded_heads, cfg.head_dim, cfg.page_size
+    out = {}
+    for s in (16, 32, 64, 128):
+        if s > MAX_SEQ:
+            continue
+        paged_cols = _bucket(-(-s // page), 1) * page
+        out[str(s)] = {
+            "dense_cols": MAX_SEQ,
+            "paged_cols": paged_cols,
+            "dense_attn_flops_per_tok": 4 * hq * hd * MAX_SEQ,
+            "paged_attn_flops_per_tok": 4 * hq * hd * paged_cols,
+        }
+    return out
+
+
+def run() -> list[str]:
+    model, params, prompts = _setup()
+    cfg = model.cfg
+    total = BATCH * NEW_TOKENS
+
+    dt_old, disp_old, sync_old, outs_old = _per_token(model, params, prompts)
+    dt_new, disp_new, sync_new, outs_new = _block_decode(
+        model, params, prompts)
+    assert outs_old == outs_new, "block decode must match per-token decode"
+    assert disp_old == NEW_TOKENS                  # 1 dispatch / token
+    assert disp_new == NEW_TOKENS // BLOCK         # 1 dispatch / block
+    assert sync_new == NEW_TOKENS // BLOCK         # 1 host sync / block
+
+    dt_dense, out_dense, srv_dense = _serve_requests(model, params,
+                                                     paged=False)
+    dt_paged, out_paged, srv_paged = _serve_requests(model, params,
+                                                     paged=True)
+    assert out_paged == out_dense, \
+        "paged serving must emit identical tokens to the dense cache"
+
+    mgr = srv_paged.manager
+    bytes_per_page = srv_paged.kv_bytes_capacity() // (mgr.num_pages)
+    dense_slab = pager.tree_bytes(srv_dense.cache)
+    hwm_bytes = mgr.hwm * bytes_per_page
+    # every slot was live simultaneously: peak tokens = admitted prompt
+    # length + the full decode budget, per slot
+    peak_tokens = BATCH * (srv_paged._admit_plen(PROMPT, NEW_TOKENS)
+                           + NEW_TOKENS - 1)
+
+    tps_old, tps_new = total / dt_old, total / dt_new
+    tps_dense, tps_paged = total / dt_dense, total / dt_paged
+
+    bench = {
+        "model": cfg.name,
+        "batch": BATCH, "prompt": PROMPT, "new_tokens": NEW_TOKENS,
+        "block_size": BLOCK, "max_seq": MAX_SEQ,
+        "tokens_per_s": {
+            "per_token_dense": round(tps_old, 1),
+            "block_dense": round(tps_new, 1),
+            "server_dense": round(tps_dense, 1),
+            "server_paged": round(tps_paged, 1),
+        },
+        "speedup_block_vs_per_token": round(tps_new / tps_old, 2),
+        "paged_vs_dense_tokens_identical": True,
+        "kv_memory": {
+            "page_size": mgr.page_size,
+            "dense_slab_bytes": dense_slab,
+            "paged_pool_capacity_bytes": srv_paged.kv_bytes_capacity(),
+            "paged_hwm_bytes": hwm_bytes,
+            "peak_live_tokens": peak_tokens,
+            "bytes_per_active_token_dense": round(dense_slab / peak_tokens),
+            "bytes_per_active_token_paged": round(hwm_bytes / peak_tokens),
+            "local_kv_reduction_vs_dense": round(1 - hwm_bytes / dense_slab,
+                                                 3),
+            "fragmentation_hwm_bound": round(
+                1 - peak_tokens / (mgr.hwm * mgr.page_size), 3),
+        },
+        "attention_scaling": _attention_scaling(model),
+    }
+    JSON_PATH.write_text(json.dumps(bench, indent=2) + "\n")
+
+    km = bench["kv_memory"]
+    rows = [
+        f"serve_per_token,{dt_old / NEW_TOKENS * 1e6:.0f},"
+        f"tok_s={tps_old:.0f} dispatches_per_step="
+        f"{disp_old / NEW_TOKENS:.3f} syncs_per_tok={sync_old / total:.3f}",
+        f"serve_block{BLOCK},{dt_new / NEW_TOKENS * 1e6:.0f},"
+        f"tok_s={tps_new:.0f} dispatches_per_step="
+        f"{disp_new / NEW_TOKENS:.3f} syncs_per_tok={sync_new / total:.3f}"
+        f" speedup={tps_new / tps_old:.2f}x",
+        f"serve_paged,{dt_paged / NEW_TOKENS * 1e6:.0f},"
+        f"tok_s={tps_paged:.0f} kv_hwm_bytes={km['paged_hwm_bytes']}"
+        f" dense_slab_bytes={km['dense_slab_bytes']}"
+        f" kv_reduction={km['local_kv_reduction_vs_dense']:.1%}"
+        f" identical_tokens=True json={JSON_PATH.name}",
+        _continuous(model, params),
+    ]
+    return rows
+
+
 def _continuous(model, params) -> str:
     server = BatchedServer(model, params, batch_size=2, max_seq=MAX_SEQ,
                            block_size=8)
@@ -132,32 +259,6 @@ def _continuous(model, params) -> str:
             f"reqs={len(done)} slots=2 batches={s['batches']} "
             f"admitted_mid_stream={s['admitted'] - 2} "
             f"tok_per_dispatch={s['tokens'] / max(s['dispatches'], 1):.1f}")
-
-
-def run() -> list[str]:
-    model, params, prompts = _setup()
-    total = BATCH * NEW_TOKENS
-
-    dt_old, disp_old, sync_old, outs_old = _per_token(model, params, prompts)
-    dt_new, disp_new, sync_new, outs_new = _block_decode(
-        model, params, prompts)
-    assert outs_old == outs_new, "block decode must match per-token decode"
-    assert disp_old == NEW_TOKENS                  # 1 dispatch / token
-    assert disp_new == NEW_TOKENS // BLOCK         # 1 dispatch / block
-    assert sync_new == NEW_TOKENS // BLOCK         # 1 host sync / block
-
-    tps_old, tps_new = total / dt_old, total / dt_new
-    rows = [
-        f"serve_per_token,{dt_old / NEW_TOKENS * 1e6:.0f},"
-        f"tok_s={tps_old:.0f} dispatches_per_step="
-        f"{disp_old / NEW_TOKENS:.3f} syncs_per_tok={sync_old / total:.3f}",
-        f"serve_block{BLOCK},{dt_new / NEW_TOKENS * 1e6:.0f},"
-        f"tok_s={tps_new:.0f} dispatches_per_step="
-        f"{disp_new / NEW_TOKENS:.3f} syncs_per_tok={sync_new / total:.3f}"
-        f" speedup={tps_new / tps_old:.2f}x",
-        _continuous(model, params),
-    ]
-    return rows
 
 
 if __name__ == "__main__":

@@ -26,11 +26,11 @@ PROMPTS = [
 ]
 
 
-def serve_all(model, params, tag):
+def serve_all(model, params, tag, paged=None):
     # 2 slots for 4 requests: the back half is admitted MID-STREAM via
     # continuous batching when the front half's slots free up.
     server = BatchedServer(model, params, batch_size=2, max_seq=96,
-                           block_size=8)
+                           block_size=8, paged=paged)
     t0 = time.perf_counter()
     reqs = [server.submit(p, max_new_tokens=12) for p in PROMPTS]
     while any(not r.done.is_set() for r in reqs):
@@ -41,6 +41,12 @@ def serve_all(model, params, tag):
           f"in {dt:.2f}s — {s['dispatches']} block dispatches "
           f"({s['tokens'] / max(s['dispatches'], 1):.1f} tok/dispatch), "
           f"{s['host_syncs']} host syncs")
+    if server.paged:
+        m = server.manager
+        print(f"[{tag}] block-pool KV: page={m.page_size} tok, peak "
+              f"{m.hwm}/{m.capacity} pages "
+              f"({server.kv_bytes_capacity()/1e3:.0f} KB pool, dense slab "
+              f"would be resident at 100%)")
     return [tuple(r.output) for r in reqs]
 
 
@@ -51,8 +57,15 @@ def main():
     print(f"[serve] model: {cfg.name} "
           f"({sum(x.size for x in jax.tree.leaves(params))/1e6:.1f}M params)")
 
-    # 1) shared-nothing baseline: weights resident in device memory
-    base_out = serve_all(model, params, "baseline ")
+    # 1) shared-nothing baseline: weights AND a dense KV slab in device
+    #    memory
+    base_out = serve_all(model, params, "baseline ", paged=False)
+
+    # 1b) block-pool paged KV (the serving default for dense models):
+    #     fixed-size pages allocated on demand, reclaimed on EOS —
+    #     identical tokens, KV footprint tracking live tokens
+    paged_out = serve_all(model, params, "paged-kv ")
+    assert paged_out == base_out, "paged KV must be semantically invisible"
 
     # 2) FengHuang: stacked layer weights live in the remote tier
     #    (pinned_host); the TensorPager pages them per layer with

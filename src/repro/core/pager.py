@@ -148,6 +148,22 @@ def host_put(tree: Any) -> Any:
                                             resolved_remote_kind()), tree)
 
 
+def place_kv_pool(cache: Any, config: PagerConfig) -> Any:
+    """Residency policy for the block-pool paged KV cache.
+
+    With ``offload_kv`` the stacked ``(L, P, page, Hkv, hd)`` page pools
+    live in the FengHuang remote tier between dispatches — decode pages
+    exactly one layer's pool through local memory at a time (the
+    ``paged_scan_cache`` carry) — while the small leaves (page tables,
+    lengths) stay local.  Without it the pool is device-resident and the
+    call is the identity."""
+    if not (config.enabled and config.offload_kv):
+        return cache
+    pool_keys = ("k_pages", "v_pages")
+    return {k: (host_put(v) if k in pool_keys else v)
+            for k, v in cache.items()}
+
+
 def donating_jit(fn: Callable, *, donate_argnums: tuple[int, ...] = (),
                  config: PagerConfig | None = None, **jit_kwargs) -> Callable:
     """``jax.jit`` with the FengHuang donation contract.

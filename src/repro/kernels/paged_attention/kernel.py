@@ -9,6 +9,13 @@ Mosaic pipeline while the current page is being reduced.
 
 Grid: (batch, kv_heads, pages_per_seq); online-softmax state in VMEM
 scratch across the page dimension.
+
+``extra_kv`` is the serving hot path's contract with the decode layer
+scan: the pool holds strictly-past tokens (masked to ``pos <
+seq_lens[b]``) and the CURRENT token's (k, v) joins as one extra
+online-softmax column folded in at the final grid step — so the pool is
+read-only inside the scan and the new token is written once, batched over
+layers, afterwards.
 """
 from __future__ import annotations
 
@@ -24,9 +31,12 @@ NEG_INF = -1e30
 
 
 def _kernel(page_table_ref, seq_lens_ref,      # scalar-prefetch refs
-            q_ref, k_ref, v_ref, o_ref,
-            m_ref, l_ref, acc_ref, *,
-            page: int, n_pages: int, scale: float):
+            q_ref, k_ref, v_ref, *rest,
+            page: int, n_pages: int, scale: float, has_extra: bool):
+    if has_extra:
+        k0_ref, v0_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     p_idx = pl.program_id(2)
 
@@ -59,32 +69,62 @@ def _kernel(page_table_ref, seq_lens_ref,      # scalar-prefetch refs
 
     @pl.when(p_idx == n_pages - 1)
     def _flush():
-        o_ref[0, 0] = (acc_ref[...] /
-                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+        m_p, l_p, acc_p = m_ref[...], l_ref[...], acc_ref[...]
+        if has_extra:
+            # current token's (k, v): one more online-softmax column.  A
+            # seq_len==0 slot gets alpha = exp(NEG_INF - s0) == 0, which
+            # exactly zeroes the garbage accumulated from masked pages.
+            k0 = k0_ref[0]                        # (1, d)
+            v0 = v0_ref[0]
+            s0 = jax.lax.dot_general(
+                q, k0, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale   # (G, 1)
+            m_f = jnp.maximum(m_p, s0)
+            alpha = jnp.exp(m_p - m_f)
+            p0 = jnp.exp(s0 - m_f)
+            l_p = l_p * alpha + p0
+            acc_p = acc_p * alpha + p0 * v0.astype(jnp.float32)
+        o_ref[0, 0] = (acc_p /
+                       jnp.maximum(l_p, 1e-30)).astype(o_ref.dtype)
 
 
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     page_table: jax.Array, seq_lens: jax.Array, *,
+                    extra_kv: tuple[jax.Array, jax.Array] | None = None,
                     interpret: bool = False) -> jax.Array:
     """q: (B, Hkv, G, d); pages: (P, page, Hkv, d);
-    page_table: (B, n_pages) int32; seq_lens: (B,) int32.
+    page_table: (B, n_pages) int32; seq_lens: (B,) int32;
+    extra_kv: optional current-token (k0, v0), each (B, Hkv, d), attended
+    in addition to the first ``seq_lens`` pooled positions.
     Returns (B, Hkv, G, d)."""
     b, hkv, g, d = q.shape
     n_pages = page_table.shape[1]
+    if n_pages < 1:
+        raise ValueError("page_table must map at least one page per row")
     page = k_pages.shape[1]
     scale = 1.0 / math.sqrt(d)
+    has_extra = extra_kv is not None
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda bb, h, p, pt, sl: (bb, h, 0, 0)),
+        # the page table drives which physical page is DMA'd
+        pl.BlockSpec((1, page, 1, d),
+                     lambda bb, h, p, pt, sl: (pt[bb, p], 0, h, 0)),
+        pl.BlockSpec((1, page, 1, d),
+                     lambda bb, h, p, pt, sl: (pt[bb, p], 0, h, 0)),
+    ]
+    inputs = [page_table, seq_lens, q, k_pages, v_pages]
+    if has_extra:
+        in_specs += [
+            pl.BlockSpec((1, 1, d), lambda bb, h, p, pt, sl: (bb, h, 0)),
+            pl.BlockSpec((1, 1, d), lambda bb, h, p, pt, sl: (bb, h, 0)),
+        ]
+        inputs += [extra_kv[0], extra_kv[1]]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda bb, h, p, pt, sl: (bb, h, 0, 0)),
-            # the page table drives which physical page is DMA'd
-            pl.BlockSpec((1, page, 1, d),
-                         lambda bb, h, p, pt, sl: (pt[bb, p], 0, h, 0)),
-            pl.BlockSpec((1, page, 1, d),
-                         lambda bb, h, p, pt, sl: (pt[bb, p], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, d),
                                lambda bb, h, p, pt, sl: (bb, h, 0, 0)),
         scratch_shapes=[
@@ -94,8 +134,9 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         ],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, page=page, n_pages=n_pages, scale=scale),
+        functools.partial(_kernel, page=page, n_pages=n_pages, scale=scale,
+                          has_extra=has_extra),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
         interpret=interpret,
-    )(page_table, seq_lens, q, k_pages, v_pages)
+    )(*inputs)

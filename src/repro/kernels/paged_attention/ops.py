@@ -1,71 +1,229 @@
-"""jit'd wrapper for paged decode attention + cache pool management."""
+"""jit'd wrappers for paged decode attention + block-pool management.
+
+Two halves of the FengHuang block-pool KV cache:
+
+* :func:`attend` / :func:`attend_ref` — the kernel-side read path.  The
+  Pallas kernel (scalar-prefetched page tables) serves TPU; the gather
+  oracle is the jittable fallback everywhere else.  Pick once per backend
+  with :func:`use_pallas_kernel`.
+* :class:`BlockManager` — the host-side allocator.  It owns ONLY the
+  bookkeeping (free list, per-slot page lists, lengths, accounting); the
+  stacked ``(L, P, page, Hkv, hd)`` device pools live in the serving
+  cache and are donated through every dispatch, with all KV writes done
+  on device as batched scatters (one per decode step covering every
+  layer and slot, one per prefill covering the whole prompt chunk).
+
+Page 0 is the reserved **null page**: table padding and the write slots
+of idle/finished sequences point at it, so garbage reads are masked by
+``seq_lens`` and garbage writes land where no sequence ever looks.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.paged_attention.kernel import paged_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.ref import gather_pages, paged_attention_ref
+
+
+@functools.lru_cache(maxsize=None)
+def use_pallas_kernel() -> bool:
+    """Backend selection for the serving hot path, resolved once: the
+    Mosaic kernel needs a TPU; everywhere else the gather-based oracle is
+    the jittable (and bit-compatible) implementation."""
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover - no backend at all
+        return False
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
-           page_table: jax.Array, seq_lens: jax.Array, *,
+           page_table: jax.Array, seq_lens: jax.Array,
+           extra_kv: tuple[jax.Array, jax.Array] | None = None, *,
            interpret: bool = False) -> jax.Array:
     """q: (B, Hkv, G, d) single decode token -> (B, Hkv, G, d)."""
     return paged_attention(q, k_pages, v_pages, page_table, seq_lens,
-                           interpret=interpret)
+                           extra_kv=extra_kv, interpret=interpret)
 
 
-def attend_ref(q, k_pages, v_pages, page_table, seq_lens):
-    return paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens)
+def attend_ref(q, k_pages, v_pages, page_table, seq_lens, extra_kv=None):
+    return paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens,
+                               extra_kv=extra_kv)
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to map ``tokens`` positions."""
+    return -(-tokens // page_size)
+
+
+class BlockManager:
+    """Host-side page allocator for the device-resident block pool.
+
+    Sequences (keyed by serving slot) own ordered lists of fixed-size
+    pages from a global pool — the FengHuang remote tier holds the pool;
+    per-sequence page tables are the Tensor Prefetcher's routing
+    metadata.  Allocation happens at block boundaries (a slot is grown to
+    cover its next decode block in one call); reclamation returns a
+    finished slot's pages to the free list in LIFO order so hot pages are
+    reused first.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is the null page)")
+        if page_size < 1:
+            raise ValueError("page_size must be positive")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free = list(range(num_pages - 1, 0, -1))  # page 0 = null page
+        self.pages: dict[int, list[int]] = {}
+        self.lens: dict[int, int] = {}
+        self.hwm = 0                    # pages-in-use high-water mark
+
+    # ----- capacity ---------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (the null page is never handed out)."""
+        return self.num_pages - 1
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    def pages_for(self, tokens: int) -> int:
+        return pages_for(tokens, self.page_size)
+
+    def can_fit(self, slot: int, tokens: int) -> bool:
+        """Would :meth:`ensure`'ing ``tokens`` for ``slot`` succeed now?"""
+        have = len(self.pages.get(slot, ()))
+        return self.pages_for(tokens) - have <= len(self._free)
+
+    # ----- allocate / reclaim ----------------------------------------------
+    def ensure(self, slot: int, tokens: int) -> list[int]:
+        """Grow ``slot`` so positions ``[0, tokens)`` are mapped; returns
+        the newly allocated page ids (possibly empty).  Raises
+        ``MemoryError`` when the pool cannot cover the growth."""
+        table = self.pages.setdefault(slot, [])
+        need = self.pages_for(tokens) - len(table)
+        if need > len(self._free):
+            raise MemoryError(
+                f"page pool exhausted: slot {slot} needs {need} more "
+                f"page(s) for {tokens} tokens, {len(self._free)} free of "
+                f"{self.capacity}")
+        new = [self._free.pop() for _ in range(max(need, 0))]
+        table.extend(new)
+        self.hwm = max(self.hwm, self.pages_in_use)
+        return new
+
+    def note_tokens(self, slot: int, tokens: int) -> None:
+        """Record that ``slot`` now holds ``tokens`` written positions
+        (drives the fragmentation accounting; monotone per slot)."""
+        self.lens[slot] = max(self.lens.get(slot, 0), tokens)
+
+    def free_slot(self, slot: int) -> None:
+        """Reclaim every page owned by ``slot`` (EOS / eviction)."""
+        self._free.extend(reversed(self.pages.pop(slot, [])))
+        self.lens.pop(slot, None)
+
+    # ----- tables -----------------------------------------------------------
+    def slot_pages(self, slot: int) -> list[int]:
+        return list(self.pages.get(slot, ()))
+
+    def max_slot_pages(self) -> int:
+        return max((len(t) for t in self.pages.values()), default=0)
+
+    def table(self, slots: list[int], n_pages: int) -> np.ndarray:
+        """(len(slots), n_pages) int32 page table, null-page padded."""
+        out = np.zeros((len(slots), n_pages), np.int32)
+        for i, s in enumerate(slots):
+            t = self.pages.get(s, [])[:n_pages]
+            out[i, : len(t)] = t
+        return out
+
+    # ----- accounting -------------------------------------------------------
+    def bytes_per_page(self, kv_heads: int, head_dim: int,
+                       itemsize: int = 2, num_layers: int = 1) -> int:
+        """Bytes ONE page occupies across both pools and all layers."""
+        return 2 * num_layers * self.page_size * kv_heads * head_dim * itemsize
+
+    def fragmentation(self) -> float:
+        """Fraction of in-use page slots holding no live token (tail
+        waste of partially filled last pages)."""
+        in_use = self.pages_in_use * self.page_size
+        if not in_use:
+            return 0.0
+        live = sum(min(self.lens.get(s, 0), len(t) * self.page_size)
+                   for s, t in self.pages.items())
+        return 1.0 - live / in_use
 
 
 class PagePool:
-    """Host-side page allocator for the paged KV cache.
+    """Deprecated host-driven pool — thin compatibility wrapper.
 
-    Sequences own lists of fixed-size pages from a global pool — the
-    FengHuang remote tier holds the pool; per-sequence page tables are the
-    prefetcher's routing metadata."""
+    The serving hot path now keeps the pools inside the jitted decode
+    dispatch (see :class:`BlockManager` and
+    ``repro.models.transformer.DenseLM._decode_pool``); this wrapper
+    remains for host-side experiments.  ``append_block`` is the fixed
+    write path: ONE scatter per block of tokens instead of the old one
+    ``.at[page, slot].set`` dispatch per token (``append`` now just
+    forwards a 1-token block to it)."""
 
     def __init__(self, num_pages: int, page_size: int, kv_heads: int,
                  head_dim: int, dtype=jnp.bfloat16):
         self.page_size = page_size
         self.k = jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype)
         self.v = jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype)
-        self.free = list(range(num_pages - 1, 0, -1))   # page 0 = null page
-        self.tables: dict[int, list[int]] = {}
-        self.lens: dict[int, int] = {}
+        self.manager = BlockManager(num_pages, page_size)
+
+    @property
+    def free(self) -> list[int]:
+        return list(self.manager._free)
+
+    @property
+    def tables(self) -> dict[int, list[int]]:
+        return self.manager.pages
+
+    @property
+    def lens(self) -> dict[int, int]:
+        return self.manager.lens
 
     def alloc_seq(self, uid: int) -> None:
-        self.tables[uid] = []
-        self.lens[uid] = 0
+        self.manager.pages.setdefault(uid, [])
+        self.manager.lens.setdefault(uid, 0)
+
+    def append_block(self, uid: int, k_blk: jax.Array,
+                     v_blk: jax.Array) -> None:
+        """k_blk/v_blk: (T, kv_heads, head_dim) — T tokens appended with a
+        single batched scatter per pool."""
+        t = k_blk.shape[0]
+        pos0 = self.manager.lens.get(uid, 0)
+        self.manager.ensure(uid, pos0 + t)
+        table = jnp.asarray(self.manager.pages[uid], jnp.int32)
+        pos = pos0 + jnp.arange(t)
+        pids = table[pos // self.page_size]
+        slots = pos % self.page_size
+        self.k = self.k.at[pids, slots].set(k_blk.astype(self.k.dtype))
+        self.v = self.v.at[pids, slots].set(v_blk.astype(self.v.dtype))
+        self.manager.lens[uid] = pos0 + t
 
     def append(self, uid: int, k_tok: jax.Array, v_tok: jax.Array) -> None:
-        """k_tok/v_tok: (kv_heads, head_dim) — one token's KV."""
-        pos = self.lens[uid]
-        if pos % self.page_size == 0:
-            if not self.free:
-                raise MemoryError("page pool exhausted")
-            self.tables[uid].append(self.free.pop())
-        page_id = self.tables[uid][-1]
-        slot = pos % self.page_size
-        self.k = self.k.at[page_id, slot].set(k_tok)
-        self.v = self.v.at[page_id, slot].set(v_tok)
-        self.lens[uid] = pos + 1
+        """One token's KV, (kv_heads, head_dim) — prefer append_block."""
+        self.append_block(uid, k_tok[None], v_tok[None])
 
     def free_seq(self, uid: int) -> None:
-        self.free.extend(self.tables.pop(uid, []))
-        self.lens.pop(uid, None)
+        self.manager.free_slot(uid)
 
     def batch_tables(self, uids: list[int], n_pages: int) -> jax.Array:
-        out = []
-        for u in uids:
-            t = self.tables.get(u, [])
-            out.append(t[:n_pages] + [0] * max(0, n_pages - len(t)))
-        return jnp.asarray(out, jnp.int32)
+        return jnp.asarray(self.manager.table(uids, n_pages), jnp.int32)
 
     def batch_lens(self, uids: list[int]) -> jax.Array:
-        return jnp.asarray([self.lens.get(u, 0) for u in uids], jnp.int32)
+        return jnp.asarray([self.manager.lens.get(u, 0) for u in uids],
+                           jnp.int32)

@@ -9,7 +9,22 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens):
+def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Materialize the per-sequence view of a page pool.
+
+    pages: (P, page, Hkv, d); page_table: (B, n_pages) int32.
+    Returns (B, Hkv, n_pages * page, d) — the cache layout
+    :func:`repro.models.layers.decode_attention` expects, with gathered
+    position ``i`` holding absolute position ``i`` (pages are in order).
+    """
+    b, n_pages = page_table.shape
+    page, hkv, d = pages.shape[1:]
+    g = pages[page_table]                   # (B, n_pages, page, Hkv, d)
+    return g.reshape(b, n_pages * page, hkv, d).transpose(0, 2, 1, 3)
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens,
+                        extra_kv=None):
     """Decode attention over a paged KV cache.
 
     q:          (B, Hkv, G, d)       one query token, grouped heads
@@ -17,6 +32,8 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens):
     v_pages:    (P, page, Hkv, d)
     page_table: (B, pages_per_seq)   int32 page ids
     seq_lens:   (B,)                 valid tokens per sequence
+    extra_kv:   optional current-token (k0, v0), each (B, Hkv, d),
+                attended as one extra column past the pooled positions
     returns     (B, Hkv, G, d)
     """
     b, hkv, g, d = q.shape
@@ -33,8 +50,19 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens):
     pos = jnp.arange(pages_per_seq * page)[None, :]
     valid = pos < seq_lens[:, None]
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    if extra_kv is not None:
+        k0, v0 = extra_kv
+        s0 = jnp.einsum("bhgd,bhd->bhg", q.astype(jnp.float32),
+                        k0.astype(jnp.float32)) / math.sqrt(d)
+        s = jnp.concatenate([s, s0[..., None]], axis=-1)
     m = s.max(axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     p = p / p.sum(axis=-1, keepdims=True)
-    o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    if extra_kv is not None:
+        o = jnp.einsum("bhgs,bshd->bhgd", p[..., :-1],
+                       v.astype(jnp.float32))
+        o = o + p[..., -1][..., None] * extra_kv[1][:, :, None, :].astype(
+            jnp.float32)
+    else:
+        o = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
     return o.astype(q.dtype)

@@ -47,24 +47,33 @@ class DecodeState:
 
     tokens: jax.Array     # (B, 1) int32 — last sampled token per slot
     pos: jax.Array        # (B,)  int32 — absolute position the next decode
-                          #        step writes (== tokens seen so far)
+                          #        step writes (== tokens seen so far; with
+                          #        a paged cache this IS the per-slot
+                          #        seq_lens the page kernel masks against)
     active: jax.Array     # (B,)  bool  — slot is mid-generation
     remaining: jax.Array  # (B,)  int32 — decode tokens still owed
     key: jax.Array        # PRNG key, split once per decode step
+    pages: jax.Array | None = None
+                          # (B, n_pages) int32 — block-pool KV page table
+                          #        (None = dense per-slot cache).  Host-
+                          #        refreshed at block boundaries; column
+                          #        padding and idle slots map the null
+                          #        page 0.
 
     @classmethod
-    def init(cls, batch: int, key: jax.Array) -> "DecodeState":
+    def init(cls, batch: int, key: jax.Array,
+             pages: jax.Array | None = None) -> "DecodeState":
         """All-idle state: every slot is a no-op until admission."""
         return cls(tokens=jnp.zeros((batch, 1), jnp.int32),
                    pos=jnp.zeros((batch,), jnp.int32),
                    active=jnp.zeros((batch,), bool),
                    remaining=jnp.zeros((batch,), jnp.int32),
-                   key=key)
+                   key=key, pages=pages)
 
 
 jax.tree_util.register_dataclass(
     DecodeState,
-    data_fields=["tokens", "pos", "active", "remaining", "key"],
+    data_fields=["tokens", "pos", "active", "remaining", "key", "pages"],
     meta_fields=[])
 
 
@@ -120,6 +129,7 @@ class ModelConfig:
     # numerics / system
     dtype: Any = jnp.bfloat16
     kv_quant: bool = False           # int8 KV cache (per-token-per-head scale)
+    page_size: int = 16              # tokens per KV page (block-pool serving)
     norm_eps: float = 1e-6
     tp: int = DEFAULT_TP             # model-axis size the config targets
     pager: PagerPolicy = dataclasses.field(default_factory=PagerPolicy)

@@ -376,6 +376,69 @@ def to_cache_layout(k: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Block-pool paged decode attention (FengHuang KV paging in the serving hot
+# path).  The pool holds strictly-past tokens; the current token's (k, v)
+# joins as an extra softmax column so the pool stays read-only inside the
+# decode layer scan, exactly like the dense extra_kv path above.
+# ---------------------------------------------------------------------------
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           cur_pos: jax.Array,
+                           extra_kv: tuple[jax.Array, jax.Array], *,
+                           use_kernel: bool | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """Single-token attention against a (P, page, Hkv, hd) page pool.
+
+    q: (B, 1, Hq, hd); page_table: (B, n_pages) int32 (null-page padded);
+    cur_pos: (B,) — pooled positions < cur_pos are live, the current
+    token arrives via ``extra_kv``.  Routed once per backend: the Pallas
+    ``paged_attention`` kernel on TPU (scalar-prefetched page tables),
+    the gather + :func:`decode_attention` composition elsewhere — the
+    fallback reuses the dense decode path verbatim on the gathered view,
+    so paged and dense decode share every floating-point op.
+    """
+    from repro.kernels.paged_attention import ops as paged_ops
+    from repro.kernels.paged_attention.ref import gather_pages
+
+    b, _, hq, hd = q.shape
+    if use_kernel is None:
+        use_kernel = paged_ops.use_pallas_kernel()
+    if use_kernel:
+        hkv = k_pages.shape[2]
+        qg = q.reshape(b, hkv, hq // hkv, hd)
+        from repro.kernels.paged_attention.kernel import paged_attention
+        o = paged_attention(qg, k_pages, v_pages, page_table, cur_pos,
+                            extra_kv=extra_kv, interpret=interpret)
+        return o.reshape(b, 1, hq, hd).astype(q.dtype)
+    k = gather_pages(k_pages, page_table)        # (B, Hkv, n*page, hd)
+    v = gather_pages(v_pages, page_table)
+    return decode_attention(q, k, v, cur_pos, extra_kv=extra_kv)
+
+
+def attn_decode_paged(p: dict, x: jax.Array, k_pages: jax.Array,
+                      v_pages: jax.Array, page_table: jax.Array,
+                      cur_pos: jax.Array, cfg: ModelConfig):
+    """One-token self-attention over this layer's page pool (read-only —
+    the (k, v) returned are written post-scan in one batched scatter).
+
+    x: (B, 1, d); [kv]_pages: (P, page, Hkv, hd); page_table: (B, n);
+    cur_pos: (B,).  Returns (out (B,1,d), k0 (B,Hkv,hd), v0 (B,Hkv,hd)).
+    """
+    q, k, v = _project_qkv(p, x, x, cfg)
+    pos = cur_pos[:, None]                               # (B, 1)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    b = x.shape[0]
+    k0 = k[:, 0]                                         # (B, Hkv, hd)
+    v0 = v[:, 0]
+    o = paged_decode_attention(q, k_pages, v_pages, page_table, cur_pos,
+                               (k0, v0))
+    out = o.reshape(b, 1, -1) @ p["wo"]
+    return out, k0, v0
+
+
+# ---------------------------------------------------------------------------
 # int8 KV-cache quantization (§Perf iteration A3): per-token-per-head
 # absmax scales halve the decode memory term's KV component (the dominant
 # term for batch-128 decode).

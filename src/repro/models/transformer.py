@@ -107,6 +107,16 @@ class DenseLM:
         h = x + a
         return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps)), k0, v0
 
+    def block_decode_paged(self, lp: dict, x: jax.Array, k_pages, v_pages,
+                           pages, cur_pos):
+        """block_decode against this layer's page pool (also read-only)."""
+        cfg = self.cfg
+        a, k0, v0 = L.attn_decode_paged(lp["attn"],
+                                        L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
+                                        k_pages, v_pages, pages, cur_pos, cfg)
+        h = x + a
+        return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps)), k0, v0
+
     # ----- forward passes ----------------------------------------------------
     def _embed(self, params, tokens):
         return L.embed_lookup(params["embed"], tokens)
@@ -166,6 +176,31 @@ class DenseLM:
             return {"k": spec, "v": spec, "k_scale": sc, "v_scale": sc}
         return {"k": spec, "v": spec}
 
+    # ----- block-pool paged KV cache ----------------------------------------
+    def supports_paged_kv(self) -> bool:
+        """Block-pool KV covers full causal attention in bf16/fp32;
+        rolling-window and int8 caches keep the dense per-slot layout."""
+        return self.cfg.sliding_window == 0 and not self.cfg.kv_quant
+
+    def init_paged_cache(self, num_pages: int,
+                         page_size: int | None = None) -> dict:
+        """Stacked multi-layer page pools, (L, P, page, Hkv, hd).  Page 0
+        is the null page (never allocated; absorbs idle-slot writes)."""
+        cfg = self.cfg
+        if not self.supports_paged_kv():
+            raise ValueError(
+                "paged KV cache requires sliding_window == 0 and "
+                "kv_quant == False")
+        page = page_size or cfg.page_size
+        shape = (cfg.num_layers, num_pages, page, cfg.padded_kv_heads,
+                 cfg.head_dim)
+        return {"k_pages": jnp.zeros(shape, cfg.dtype),
+                "v_pages": jnp.zeros(shape, cfg.dtype)}
+
+    def paged_cache_specs(self) -> dict:
+        spec = P(None, None, None, "model", None)
+        return {"k_pages": spec, "v_pages": spec}
+
     def prefill(self, params: dict, tokens: jax.Array, cache: dict,
                 extra: dict | None = None):
         """Process the prompt, fill the cache, return last-position logits."""
@@ -211,12 +246,59 @@ class DenseLM:
         x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
         return L.lm_head(params["embed"], x, cfg), cache
 
-    def decode_step(self, params: dict, tokens: jax.Array, cache: dict,
-                    cur_pos: jax.Array, extra: dict | None = None):
-        """tokens: (B, 1); cur_pos: (B,) absolute position being written."""
+    def prefill_paged(self, params: dict, tokens: jax.Array, cache: dict,
+                      pages: jax.Array, extra: dict | None = None):
+        """Prefill the prompt straight into freshly allocated pages.
+
+        tokens: (B, S); pages: (B, n) page ids with n * page >= S (extra
+        columns may map the null page — they receive only padding).  The
+        whole prompt's KV lands in the pools with ONE scatter per pool
+        covering every layer, page and head — no dense staging buffer, no
+        per-slot splice.  Returns (last-position logits, cache).
+        """
         cfg = self.cfg
         x = self._embed(params, tokens)
-        if cfg.pager.offload_kv and not cfg.kv_quant:
+        if extra and "patches" in extra:
+            x = jnp.concatenate([extra["patches"].astype(x.dtype), x], axis=1)
+        seq = x.shape[1]
+        positions = jnp.arange(seq)
+
+        def body(h, lp):
+            # keep (B, S, Hkv, hd) attention layout: the page reshape
+            # below wants seq-major
+            return self.block_prefill(lp, h, positions)
+
+        x, (k_new, v_new) = pager.paged_scan(body, x, params["layers"],
+                                             config=_pager_cfg(cfg))
+        page = cache["k_pages"].shape[2]
+        n = pages.shape[1]
+        pad = n * page - seq
+        if pad < 0:
+            raise ValueError(f"page table maps {n * page} positions but the "
+                             f"prompt has {seq}")
+
+        def scatter(pool, val):
+            # (L, B, S, Hkv, hd) -> (L, B, n, page, Hkv, hd), one scatter
+            val = jnp.pad(val, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            l_, b_ = val.shape[:2]
+            val = val.reshape(l_, b_, n, page, val.shape[3], val.shape[4])
+            return pool.at[:, pages].set(val.astype(pool.dtype))
+
+        cache = {"k_pages": scatter(cache["k_pages"], k_new),
+                 "v_pages": scatter(cache["v_pages"], v_new)}
+        x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+        return L.lm_head(params["embed"], x, cfg), cache
+
+    def decode_step(self, params: dict, tokens: jax.Array, cache: dict,
+                    cur_pos: jax.Array, extra: dict | None = None,
+                    pages: jax.Array | None = None):
+        """tokens: (B, 1); cur_pos: (B,) absolute position being written;
+        pages: (B, n_pages) block-pool page table (None = dense cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        if pages is not None:
+            x, cache = self._decode_pool(params, x, cache, cur_pos, pages)
+        elif cfg.pager.offload_kv and not cfg.kv_quant:
             x, cache = self._decode_paged_cache(params, x, cache, cur_pos)
         else:
             x, cache = self._decode_scatter(params, x, cache, cur_pos)
@@ -299,6 +381,59 @@ class DenseLM:
             config=_pager_cfg(cfg))
         return x, {"k": ck, "v": cv}
 
+    def _decode_pool(self, params: dict, x: jax.Array, cache: dict,
+                     cur_pos: jax.Array, pages: jax.Array):
+        """Block-pool paged decode: attention reads only the pages the
+        (B, n_pages) table maps, so per-step cost scales with the actual
+        sequence length instead of max_seq, and the new token's KV lands
+        with ONE batched scatter over every layer and slot after the
+        read-only layer scan.  With ``offload_kv`` the pools ride the
+        scan carry instead (one layer's pool device-resident at a time,
+        paged through the FengHuang remote tier)."""
+        cfg = self.cfg
+        b = x.shape[0]
+        page = cache["k_pages"].shape[2]
+        n_pages = pages.shape[1]
+        bidx = jnp.arange(b)
+        pi = cur_pos // page
+        # writes past the mapped table (a finished slot re-feeding its
+        # frozen position) are redirected to the null page 0 — never into
+        # a live page of this or any other sequence
+        pids = jnp.where(pi < n_pages,
+                         pages[bidx, jnp.minimum(pi, n_pages - 1)], 0)
+        slots = cur_pos % page
+
+        if cfg.pager.offload_kv:
+            def body(h, lp, cl):
+                kp, vp = cl
+                h, k0, v0 = self.block_decode_paged(lp, h, kp, vp, pages,
+                                                    cur_pos)
+                kp = kp.at[pids, slots].set(k0.astype(kp.dtype))
+                vp = vp.at[pids, slots].set(v0.astype(vp.dtype))
+                return h, (kp, vp)
+
+            x, (kp, vp) = pager.paged_scan_cache(
+                body, x, params["layers"],
+                (cache["k_pages"], cache["v_pages"]), config=_pager_cfg(cfg))
+            return x, {"k_pages": kp, "v_pages": vp}
+
+        def body(h, lp, cl):
+            h, k0, v0 = self.block_decode_paged(lp, h, cl[0], cl[1], pages,
+                                                cur_pos)
+            return h, (k0, v0)
+
+        x, (k_new, v_new) = pager.paged_scan(
+            body, x, params["layers"],
+            xs=(cache["k_pages"], cache["v_pages"]),
+            config=_pager_cfg(cfg), unroll=cfg.decode_unroll)
+        # one scatter per pool for all L layers and B slots — the fix for
+        # the old host-side PagePool.append's dispatch-per-token writes
+        cache = {"k_pages": cache["k_pages"].at[:, pids, slots].set(
+                     k_new.astype(cache["k_pages"].dtype)),
+                 "v_pages": cache["v_pages"].at[:, pids, slots].set(
+                     v_new.astype(cache["v_pages"].dtype))}
+        return x, cache
+
     def decode_loop(self, params: dict, cache: dict, state: DecodeState, *,
                     num_steps: int, temperature: float = 0.0,
                     eos_id: int | None = None):
@@ -349,7 +484,12 @@ def decode_loop(model, params: dict, cache: dict, state: DecodeState, *,
     def step(carry, _):
         cache, st = carry
         key, k = jax.random.split(st.key)
-        logits, cache = model.decode_step(params, st.tokens, cache, st.pos)
+        if st.pages is None:
+            logits, cache = model.decode_step(params, st.tokens, cache,
+                                              st.pos)
+        else:   # block-pool paged cache: st.pos doubles as seq_lens
+            logits, cache = model.decode_step(params, st.tokens, cache,
+                                              st.pos, pages=st.pages)
         nxt = sample_tokens(logits, vocab, temperature, k)
         # freeze finished slots: keep re-feeding the last token in place
         nxt = jnp.where(st.active[:, None], nxt, st.tokens)
@@ -360,7 +500,7 @@ def decode_loop(model, params: dict, cache: dict, state: DecodeState, *,
         if eos_id is not None:
             active = active & (nxt[:, 0] != eos_id)
         new_state = DecodeState(tokens=nxt, pos=pos, active=active,
-                                remaining=remaining, key=key)
+                                remaining=remaining, key=key, pages=st.pages)
         return (cache, new_state), (nxt[:, 0], emitted)
 
     (cache, state), (toks, valid) = jax.lax.scan(

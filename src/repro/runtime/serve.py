@@ -1,4 +1,5 @@
-"""Serving runtime: fused on-device block decode + continuous batching.
+"""Serving runtime: fused on-device block decode + continuous batching
+over a block-pool paged KV cache.
 
 The decode hot path is ONE dispatch per ``block_size`` tokens: a
 ``lax.scan`` decode loop (:func:`repro.models.transformer.decode_loop`)
@@ -6,9 +7,20 @@ emits a ``(B, block)`` token block with per-slot ``active``/``remaining``
 masks, the KV cache and decode state are **donated** into every dispatch
 (updated in place, never copied), and the host syncs once per block to
 harvest tokens.  On top of it, :class:`BatchedServer` does continuous
-batching: requests are admitted into individual slots between blocks via
-``dynamic_update_slice`` into the *live* cache/state — no batch restart —
-and slots are recycled the moment a sequence hits EOS or its token budget.
+batching: requests are admitted into individual slots between blocks —
+no batch restart — and slots are recycled the moment a sequence hits EOS
+or its token budget.
+
+For models that support it (dense-family transformers with full causal
+attention) the KV cache is a **device-resident block page pool** instead
+of a dense ``(L, B, Hkv, max_seq, hd)`` slab: fixed-size pages allocated
+on demand at block boundaries by a host-side :class:`BlockManager` and
+reclaimed on EOS/eviction, with prefill writing straight into freshly
+allocated pages and decode attention reading only the pages each slot's
+table maps (the Pallas ``paged_attention`` kernel on TPU, its gather
+oracle elsewhere).  KV memory then scales with live tokens rather than
+``batch × max_seq``, and per-step attention cost with the actual
+sequence length — while emitting bit-identical tokens to the dense path.
 
 ``serve_step`` (one per-token dispatch) is kept for dry-run lowering and
 as the baseline the serving benchmark measures against.
@@ -25,9 +37,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pager
+from repro.kernels.paged_attention.ops import BlockManager
 from repro.models.base import DecodeState
 from repro.models.transformer import (decode_loop, sample_tokens,
                                       vocab_mask_logits)
+
+# Single source of truth for the logits -> token step; the old
+# ``serve.sample`` duplicate of ``transformer.sample_tokens`` is gone.
+sample = sample_tokens
 
 
 @dataclasses.dataclass
@@ -38,12 +55,6 @@ class Request:
     temperature: float = 0.0
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
     output: list = dataclasses.field(default_factory=list)
-
-
-def sample(logits: jax.Array, vocab: int, temperature: float,
-           key: jax.Array) -> jax.Array:
-    """logits: (B, 1, V) -> (B, 1) token ids."""
-    return sample_tokens(logits, vocab, temperature, key)
 
 
 def make_prefill_step(model) -> Callable:
@@ -77,7 +88,7 @@ def make_decode_loop(model, *, block_size: int, temperature: float = 0.0,
 
 
 def _bucket(n: int, quantum: int = 8) -> int:
-    """Pad prompt lengths to a bucket so admission compiles O(log) shapes."""
+    """Pad lengths to a bucket so admission compiles O(log) shapes."""
     b = quantum
     while b < n:
         b *= 2
@@ -92,11 +103,20 @@ class BatchedServer:
     requests are admitted into the live cache — mid-stream, without
     restarting or re-prefilling the rest of the batch.  Exactly one host
     transfer happens per decoded block (the token-block harvest).
+
+    ``paged`` (default: auto) selects the block-pool paged KV cache when
+    the model supports it.  ``num_pages`` sizes the pool — the default
+    matches dense capacity (``batch × ceil(max_seq/page)`` plus the null
+    page), so admission never blocks; smaller pools oversubscribe: queued
+    requests wait at admission until reclamation frees enough pages, and
+    mid-decode exhaustion raises ``MemoryError`` (no preemption yet).
     """
 
     def __init__(self, model, params, *, batch_size: int = 4,
                  max_seq: int = 256, temperature: float = 0.0, seed: int = 0,
-                 block_size: int = 8, eos_id: int | None = None):
+                 block_size: int = 8, eos_id: int | None = None,
+                 paged: bool | None = None, page_size: int | None = None,
+                 num_pages: int | None = None):
         self.model = model
         self.params = params
         self.batch = batch_size
@@ -105,18 +125,39 @@ class BatchedServer:
         self.temperature = temperature
         self.eos_id = eos_id
         self.queue: "queue.Queue[Request]" = queue.Queue()
+        self._backlog: list[Request] = []
         self._uid = 0
+        if paged is None:
+            paged = getattr(model, "supports_paged_kv", lambda: False)()
+        self.paged = bool(paged)
         self._decode_loop = make_decode_loop(
             model, block_size=block_size, temperature=temperature,
             eos_id=eos_id)
         self._admit_step = pager.donating_jit(self._make_admit_step(),
                                               donate_argnums=(2, 3))
         # live slot state — donated through every dispatch
-        self.cache = model.init_cache(batch_size, max_seq)
-        self.state = DecodeState.init(batch_size, jax.random.PRNGKey(seed))
+        if self.paged:
+            self.page_size = page_size or model.cfg.page_size
+            per_seq = -(-max_seq // self.page_size)
+            self.num_pages = num_pages or batch_size * per_seq + 1
+            self.manager = BlockManager(self.num_pages, self.page_size)
+            self.cache = pager.place_kv_pool(
+                model.init_paged_cache(self.num_pages, self.page_size),
+                pager.PagerConfig(enabled=model.cfg.pager.enabled,
+                                  offload_kv=model.cfg.pager.offload_kv))
+            init_pages = self._idle_pages()
+        else:
+            self.manager = None
+            self.cache = model.init_cache(batch_size, max_seq)
+            init_pages = None
+        self.state = DecodeState.init(batch_size, jax.random.PRNGKey(seed),
+                                      pages=init_pages)
         self.slots: list[Request | None] = [None] * batch_size
+        self._slot_pos = [0] * batch_size      # host mirror of state.pos
+        self._reserved: dict[int, int] = {}    # slot -> worst-case pages
         self.stats = {"steps": 0, "tokens": 0, "batches": 0, "blocks": 0,
-                      "dispatches": 0, "admitted": 0, "host_syncs": 0}
+                      "dispatches": 0, "admitted": 0, "host_syncs": 0,
+                      "kv_pages_in_use": 0, "kv_pages_hwm": 0}
 
     # ----- request intake ----------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
@@ -127,13 +168,39 @@ class BatchedServer:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens})"
                 f" exceeds max_seq={self.max_seq}")
+        if self.paged:
+            worst = self._worst_pages(len(prompt), max_new_tokens)
+            if worst > self.manager.capacity:
+                raise ValueError(
+                    f"request needs up to {worst} KV pages but the pool "
+                    f"only has {self.manager.capacity}")
         self._uid += 1
         req = Request(self._uid, prompt, max_new_tokens=max_new_tokens)
         self.queue.put(req)
         return req
 
+    def _idle_pages(self) -> jax.Array:
+        """Canonical width-1 null page table carried OUTSIDE decode
+        blocks: _prepare_block swaps the real table in right before each
+        dispatch and run_block swaps an idle one back in afterwards, so
+        admission always sees ONE page-table shape — no admit_step
+        recompiles keyed on however long the longest live sequence
+        happens to be.  Freshly allocated every time because the state
+        (pages included) is donated into each dispatch."""
+        return jnp.zeros((self.batch, 1), jnp.int32)
+
     # ----- admission ---------------------------------------------------------
+    def _admit_plen(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Bucketed admission prompt length (see _admit)."""
+        limit = self.max_seq - max(max_new_tokens - 1, 0)
+        bucket = _bucket(prompt_len)
+        return bucket if bucket <= limit else prompt_len
+
     def _make_admit_step(self) -> Callable:
+        return (self._make_admit_step_paged() if self.paged
+                else self._make_admit_step_dense())
+
+    def _make_admit_step_dense(self) -> Callable:
         model, max_seq = self.model, self.max_seq
         vocab, temperature = self.model.cfg.vocab, self.temperature
         eos_id = self.eos_id
@@ -171,23 +238,62 @@ class BatchedServer:
 
             cache = jax.tree.map(splice, cache, fresh)
             plen = ptoks.shape[1]
-            active = max_new > 1
-            if eos_id is not None:      # EOS at admission: never activate
-                active = active & (nxt[0, 0] != eos_id)
-            upd1 = lambda buf, val: jax.lax.dynamic_update_slice(
-                buf, jnp.asarray(val, buf.dtype)[None], (slot,))
-            state = DecodeState(
-                tokens=jax.lax.dynamic_update_slice(state.tokens, nxt,
-                                                    (slot, 0)),
-                pos=upd1(state.pos, plen),
-                active=upd1(state.active, active),
-                remaining=upd1(state.remaining, max_new - 1),
-                key=key)
+            state = self._spliced_state(state, nxt, plen, slot, max_new, key)
             return nxt, cache, state
         return admit_step
 
+    def _make_admit_step_paged(self) -> Callable:
+        model = self.model
+        vocab, temperature = self.model.cfg.vocab, self.temperature
+
+        def admit_step(params, ptoks, cache, state, slot, max_new, ptable):
+            """Prefill ONE request straight into its freshly allocated
+            pages — no dense staging cache, no splice.  ptable: (1, n)
+            page ids covering the bucketed prompt.  Donates (cache,
+            state): the page writes and slot activation are in place."""
+            key, k = jax.random.split(state.key)
+            logits, cache = model.prefill_paged(params, ptoks, cache, ptable)
+            nxt = sample_tokens(logits, vocab, temperature, k)   # (1, 1)
+            plen = ptoks.shape[1]
+            state = self._spliced_state(state, nxt, plen, slot, max_new, key)
+            return nxt, cache, state
+        return admit_step
+
+    def _spliced_state(self, state, nxt, plen, slot, max_new, key):
+        """Activate ``slot`` in the decode state (shared by both admit
+        paths).  The page table is NOT touched here — the host refreshes
+        it at every block boundary."""
+        active = max_new > 1
+        if self.eos_id is not None:   # EOS at admission: never activate
+            active = active & (nxt[0, 0] != self.eos_id)
+        upd1 = lambda buf, val: jax.lax.dynamic_update_slice(
+            buf, jnp.asarray(val, buf.dtype)[None], (slot,))
+        return DecodeState(
+            tokens=jax.lax.dynamic_update_slice(state.tokens, nxt,
+                                                (slot, 0)),
+            pos=upd1(state.pos, plen),
+            active=upd1(state.active, active),
+            remaining=upd1(state.remaining, max_new - 1),
+            key=key, pages=state.pages)
+
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
+
+    def _worst_pages(self, prompt_len: int, max_new_tokens: int) -> int:
+        """Worst-case page need of a request over its whole lifetime."""
+        plen = self._admit_plen(prompt_len, max_new_tokens)
+        return self.manager.pages_for(
+            min(plen + max(max_new_tokens - 1, 0), self.max_seq))
+
+    def _admission_pages_ready(self, req: Request) -> bool:
+        """Page-accounting gate: every admitted request RESERVES its
+        worst-case page count (allocation itself stays on-demand, so the
+        live footprint still tracks actual tokens) — mid-decode pool
+        exhaustion is then impossible without preemption machinery, and
+        queued requests simply wait for reclamation."""
+        reserved = sum(self._reserved.values())
+        worst = self._worst_pages(len(req.prompt), req.max_new_tokens)
+        return worst <= self.manager.capacity - reserved
 
     def _admit(self, req: Request, slot: int) -> bool:
         """Prefill ``req`` into ``slot`` of the live batch; True if the
@@ -201,43 +307,83 @@ class BatchedServer:
         # write (pos < max_seq, KV scatter past the cache end is silently
         # dropped by jit) — fall back to the exact prompt length (one
         # extra compile) when the bucket would overflow
-        limit = self.max_seq - max(req.max_new_tokens - 1, 0)
-        bucket = _bucket(len(req.prompt))
-        plen = bucket if bucket <= limit else len(req.prompt)
+        plen = self._admit_plen(len(req.prompt), req.max_new_tokens)
         toks = np.zeros((1, plen), np.int32)
         toks[0, plen - len(req.prompt):] = req.prompt        # left-pad
-        nxt, self.cache, self.state = self._admit_step(
-            self.params, jnp.asarray(toks), self.cache, self.state,
-            jnp.asarray(slot, jnp.int32),
-            jnp.asarray(req.max_new_tokens, jnp.int32))
+        if self.paged:
+            self._reserved[slot] = self._worst_pages(len(req.prompt),
+                                                     req.max_new_tokens)
+            page_ids = self.manager.ensure(slot, plen)   # fresh slot: all new
+            ptable = jnp.asarray([page_ids], jnp.int32)
+            nxt, self.cache, self.state = self._admit_step(
+                self.params, jnp.asarray(toks), self.cache, self.state,
+                jnp.asarray(slot, jnp.int32),
+                jnp.asarray(req.max_new_tokens, jnp.int32), ptable)
+            self.manager.note_tokens(slot, plen)
+        else:
+            nxt, self.cache, self.state = self._admit_step(
+                self.params, jnp.asarray(toks), self.cache, self.state,
+                jnp.asarray(slot, jnp.int32),
+                jnp.asarray(req.max_new_tokens, jnp.int32))
+        self._slot_pos[slot] = plen
         first = int(jax.device_get(nxt)[0, 0])
         req.output.append(first)
         self.stats["tokens"] += 1
         self.stats["admitted"] += 1
         if req.max_new_tokens <= 1 or (self.eos_id is not None
                                        and first == self.eos_id):
+            if self.paged:
+                self.manager.free_slot(slot)   # reclaim at once
+                self._reserved.pop(slot, None)
             req.done.set()
             return True
         self.slots[slot] = req
         return False
 
     def _admit_from_queue(self, finished: list[Request]) -> None:
-        """Fill free slots from the queue (non-blocking, mid-stream)."""
+        """Fill free slots from the queue (non-blocking, mid-stream).
+        With a paged pool, admission is page-gated: the head request
+        waits (FIFO order preserved) until reclamation frees enough."""
         while True:
             free = self._free_slots()
             if not free:
                 return
-            try:
-                req = self.queue.get_nowait()
-            except queue.Empty:
-                return
+            if not self._backlog:
+                try:
+                    self._backlog.append(self.queue.get_nowait())
+                except queue.Empty:
+                    return
+            req = self._backlog[0]
+            if self.paged and not self._admission_pages_ready(req):
+                return                # blocked on pages, not on slots
+            self._backlog.pop(0)
             if self._admit(req, free[0]):
                 finished.append(req)      # done at admission: slot stays free
 
     # ----- decode ------------------------------------------------------------
+    def _prepare_block(self) -> None:
+        """Block-boundary page allocation + table refresh: every live slot
+        gets pages covering its next ``block_size`` writes (capped by its
+        remaining budget), and the decode state's (B, n_pages) table is
+        rebuilt at a power-of-two bucketed width so attention cost tracks
+        the longest LIVE sequence, not max_seq."""
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            budget = req.max_new_tokens - len(req.output)
+            need = min(self._slot_pos[i] + min(self.block_size, budget),
+                       self.max_seq)
+            self.manager.ensure(i, need)
+        n_dec = _bucket(max(self.manager.max_slot_pages(), 1), 1)
+        table = self.manager.table(list(range(self.batch)), n_dec)
+        self.state = dataclasses.replace(self.state,
+                                         pages=jnp.asarray(table))
+
     def run_block(self) -> list[Request]:
         """One fused dispatch = ``block_size`` decode steps, then ONE host
         sync to harvest the token block.  Returns requests that finished."""
+        if self.paged:
+            self._prepare_block()
         toks, valid, self.cache, self.state = self._decode_loop(
             self.params, self.cache, self.state)
         self.stats["dispatches"] += 1
@@ -249,17 +395,30 @@ class BatchedServer:
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
+            emitted = 0
             for t in range(self.block_size):
                 if not valid_h[i, t]:
                     break                 # active mask is monotone per slot
                 req.output.append(int(toks_h[i, t]))
+                emitted += 1
                 self.stats["tokens"] += 1
+            self._slot_pos[i] += emitted
+            if self.paged:
+                self.manager.note_tokens(i, self._slot_pos[i])
             if (len(req.output) >= req.max_new_tokens
                     or (self.eos_id is not None and req.output
                         and req.output[-1] == self.eos_id)):
                 req.done.set()
                 finished.append(req)
                 self.slots[i] = None       # slot recycled for admission
+                if self.paged:
+                    self.manager.free_slot(i)   # pages back to the pool
+                    self._reserved.pop(i, None)
+        if self.paged:
+            self.stats["kv_pages_in_use"] = self.manager.pages_in_use
+            self.stats["kv_pages_hwm"] = self.manager.hwm
+            self.state = dataclasses.replace(self.state,
+                                             pages=self._idle_pages())
         return finished
 
     def run_once(self) -> list[Request]:
@@ -276,3 +435,18 @@ class BatchedServer:
         if finished:
             self.stats["batches"] += 1
         return finished
+
+    # ----- accounting --------------------------------------------------------
+    def kv_bytes_in_use(self) -> int:
+        """Live KV footprint: allocated pages only (paged) or the whole
+        dense slab (which is resident regardless of occupancy)."""
+        if not self.paged:
+            return pager.tree_bytes(self.cache)
+        kp = self.cache["k_pages"]
+        per_page = self.manager.bytes_per_page(
+            kp.shape[3], kp.shape[4], kp.dtype.itemsize,
+            num_layers=kp.shape[0])
+        return self.manager.pages_in_use * per_page
+
+    def kv_bytes_capacity(self) -> int:
+        return pager.tree_bytes(self.cache)

@@ -83,11 +83,12 @@ def test_flash_matches_model_layer_path():
 # paged attention
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("extra", [False, True])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("b,hkv,g,npages,page", [(2, 2, 2, 4, 8),
                                                  (3, 1, 4, 3, 16),
                                                  (1, 4, 1, 6, 4)])
-def test_paged_attention_sweep(b, hkv, g, npages, page, dtype):
+def test_paged_attention_sweep(b, hkv, g, npages, page, dtype, extra):
     d = 32
     pool = npages * b + 1
     kp = jnp.asarray(RNG.randn(pool, page, hkv, d), dtype) * 0.3
@@ -97,8 +98,12 @@ def test_paged_attention_sweep(b, hkv, g, npages, page, dtype):
         1 + np.arange(b * npages).reshape(b, npages), jnp.int32)
     lens = jnp.asarray(RNG.randint(1, npages * page + 1, size=(b,)),
                        jnp.int32)
-    out = pa.attend(q, kp, vp, table, lens, interpret=True)
-    ref = pa.attend_ref(q, kp, vp, table, lens)
+    # extra_kv = the serving hot path's current-token column (the pool is
+    # read-only in the decode scan; the new token joins at the flush step)
+    kv0 = (jnp.asarray(RNG.randn(b, hkv, d), dtype) * 0.3,
+           jnp.asarray(RNG.randn(b, hkv, d), dtype)) if extra else None
+    out = pa.attend(q, kp, vp, table, lens, kv0, interpret=True)
+    ref = pa.attend_ref(q, kp, vp, table, lens, kv0)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **_tol(dtype))
 
