@@ -1,0 +1,84 @@
+"""Schema assertion for ``BENCH_serve.json`` — keeps the serving perf
+record machine-readable as the benchmark evolves (CI gate).
+
+    python benchmarks/check_bench_schema.py [path]
+
+Asserts the top-level keys, the ``kv_memory`` sub-schema, and the
+per-tier residency block (every tier must carry ``in_use_bytes`` /
+``hwm_bytes`` / ``by_class``).  Exits nonzero with a readable message on
+any violation.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+TOP_KEYS = {
+    "model", "batch", "prompt", "new_tokens", "block_size", "max_seq",
+    "tokens_per_s", "speedup_block_vs_per_token",
+    "paged_vs_dense_tokens_identical", "kv_memory", "tiers",
+    "attention_scaling",
+}
+TOKENS_PER_S_KEYS = {"per_token_dense", "block_dense", "server_dense",
+                     "server_paged"}
+KV_MEMORY_KEYS = {
+    "page_size", "dense_slab_bytes", "paged_pool_capacity_bytes",
+    "paged_hwm_bytes", "peak_live_tokens", "bytes_per_active_token_dense",
+    "bytes_per_active_token_paged", "local_kv_reduction_vs_dense",
+    "fragmentation_hwm_bound",
+}
+TIER_KEYS = {"in_use_bytes", "hwm_bytes", "capacity_bytes", "by_class"}
+
+
+def check(path: Path) -> list[str]:
+    errors: list[str] = []
+    try:
+        bench = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"cannot load {path}: {e}"]
+
+    missing = TOP_KEYS - bench.keys()
+    if missing:
+        errors.append(f"missing top-level keys: {sorted(missing)}")
+    if not TOKENS_PER_S_KEYS <= bench.get("tokens_per_s", {}).keys():
+        errors.append(
+            f"tokens_per_s must contain {sorted(TOKENS_PER_S_KEYS)}, got "
+            f"{sorted(bench.get('tokens_per_s', {}))}")
+    km_missing = KV_MEMORY_KEYS - bench.get("kv_memory", {}).keys()
+    if km_missing:
+        errors.append(f"missing kv_memory keys: {sorted(km_missing)}")
+
+    tiers = bench.get("tiers", {})
+    if not isinstance(tiers, dict) or not tiers:
+        errors.append("tiers must be a non-empty per-tier mapping")
+    for name, t in (tiers.items() if isinstance(tiers, dict) else ()):
+        tk_missing = TIER_KEYS - (t.keys() if isinstance(t, dict) else set())
+        if tk_missing:
+            errors.append(f"tier '{name}' missing {sorted(tk_missing)}")
+        elif not isinstance(t["by_class"], dict):
+            errors.append(f"tier '{name}' by_class must be a mapping")
+        else:
+            for field in ("in_use_bytes", "hwm_bytes", "capacity_bytes"):
+                if not isinstance(t[field], int) or t[field] < 0:
+                    errors.append(
+                        f"tier '{name}' {field} must be a non-negative "
+                        f"int, got {t[field]!r}")
+    if isinstance(tiers, dict) and "local" not in tiers:
+        errors.append("tiers must include the 'local' tier")
+    return errors
+
+
+def main() -> None:
+    path = Path(sys.argv[1] if len(sys.argv) > 1 else "BENCH_serve.json")
+    errors = check(path)
+    if errors:
+        for e in errors:
+            print(f"BENCH schema violation: {e}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"{path}: schema OK "
+          f"(tiers: {sorted(json.loads(path.read_text())['tiers'])})")
+
+
+if __name__ == "__main__":
+    main()

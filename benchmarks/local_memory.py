@@ -1,6 +1,11 @@
 """Benchmark: Table 4.3 — FengHuang local-memory capacity requirement per
 workload (paper: GPT-3 10 GB, Grok-1 18 GB, Qwen3 20 GB, Qwen3-R 20 GB vs
 144 GB resident on Baseline8 — the '93% local memory reduction' headline).
+
+The reduction is computed through ``repro.memory.accounting`` — the SAME
+``capacity_reduction`` the serving runtime's measured numbers go through
+(see ``benchmarks/serve_bench.py``), so simulated and measured claims
+are comparable by construction.
 """
 from __future__ import annotations
 
@@ -8,6 +13,7 @@ import time
 
 from repro.core import graphs as G
 from repro.core import hw, simulator as S
+from repro.memory import accounting
 
 PAPER_TABLE_4_3_GB = {"gpt3-175b": 10, "grok-1": 18,
                       "qwen3-235b": 20, "qwen3-235b-R": 20}
@@ -24,7 +30,8 @@ def run() -> list[str]:
         us = (time.perf_counter() - t0) * 1e6
         paper = PAPER_TABLE_4_3_GB[name if task is S.QA_TASK or
                                    name.endswith("-R") else name]
-        reduction = (1 - r["peak_local_gb"] / hw.PAPER_H200_HBM_CAP_GB) * 100
+        reduction = accounting.capacity_reduction(
+            r["peak_local_gb"], hw.PAPER_H200_HBM_CAP_GB) * 100
         rows.append(
             f"table43_{name},{us:.0f},peak_local={r['peak_local_gb']:.1f}GB"
             f" (paper {paper}GB; vs 144GB resident: -{reduction:.1f}%)")

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import build_model, get_config
-from repro.core import pager
+from repro.memory import capacity_reduction, tree_bytes
 from repro.models.base import DecodeState
 from repro.runtime.serve import (BatchedServer, _bucket, make_decode_loop,
                                  make_prefill_step, make_serve_step, sample)
@@ -124,7 +124,10 @@ def _block_decode(model, params, prompts) -> tuple[float, int, int, list]:
 def _serve_requests(model, params, *, paged: bool):
     """Serve BATCH identical-shape requests through BatchedServer; return
     (dt, outputs, server).  The server is warmed with one run first so
-    the timing measures the steady-state hot path, not compiles."""
+    the timing measures the steady-state hot path, not compiles.
+    Callers pass a FRESH model per server: a server reports through its
+    model's orchestrator ledger, and two live servers on one model would
+    share (and overwrite) one kv_pool residency class."""
     def submit_all(server):
         rng = np.random.RandomState(5)
         return [server.submit(rng.randint(0, model.cfg.vocab, PROMPT)
@@ -177,16 +180,16 @@ def run() -> list[str]:
     assert disp_new == NEW_TOKENS // BLOCK         # 1 dispatch / block
     assert sync_new == NEW_TOKENS // BLOCK         # 1 host sync / block
 
-    dt_dense, out_dense, srv_dense = _serve_requests(model, params,
-                                                     paged=False)
-    dt_paged, out_paged, srv_paged = _serve_requests(model, params,
-                                                     paged=True)
+    dt_dense, out_dense, srv_dense = _serve_requests(build_model(cfg),
+                                                     params, paged=False)
+    dt_paged, out_paged, srv_paged = _serve_requests(build_model(cfg),
+                                                     params, paged=True)
     assert out_paged == out_dense, \
         "paged serving must emit identical tokens to the dense cache"
 
     mgr = srv_paged.manager
     bytes_per_page = srv_paged.kv_bytes_capacity() // (mgr.num_pages)
-    dense_slab = pager.tree_bytes(srv_dense.cache)
+    dense_slab = tree_bytes(srv_dense.cache)
     hwm_bytes = mgr.hwm * bytes_per_page
     # every slot was live simultaneously: peak tokens = admitted prompt
     # length + the full decode budget, per slot
@@ -216,11 +219,15 @@ def run() -> list[str]:
             "peak_live_tokens": peak_tokens,
             "bytes_per_active_token_dense": round(dense_slab / peak_tokens),
             "bytes_per_active_token_paged": round(hwm_bytes / peak_tokens),
-            "local_kv_reduction_vs_dense": round(1 - hwm_bytes / dense_slab,
-                                                 3),
+            # same capacity_reduction the Table 4.3 simulator reports
+            "local_kv_reduction_vs_dense": round(
+                capacity_reduction(hwm_bytes, dense_slab), 3),
             "fragmentation_hwm_bound": round(
                 1 - peak_tokens / (mgr.hwm * mgr.page_size), 3),
         },
+        # per-tier residency from the orchestrator's ledger: every tier
+        # carries in_use_bytes / hwm_bytes / by_class (schema-checked in CI)
+        "tiers": srv_paged.tier_stats(),
         "attention_scaling": _attention_scaling(model),
     }
     JSON_PATH.write_text(json.dumps(bench, indent=2) + "\n")

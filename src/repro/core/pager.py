@@ -1,340 +1,39 @@
-"""TensorPager — FengHuang two-tier memory orchestration in JAX (§3.2).
+"""DEPRECATED shim — the TensorPager moved to :mod:`repro.memory`.
 
-Maps the paper's local/remote split onto JAX memory spaces:
+The FengHuang memory orchestration that used to live here is now a
+subsystem with a policy seam:
 
-* **remote tier**  = ``memory_kind="pinned_host"`` (host DRAM behind the
-  DMA engine — the TAB-attached LPDDR6 pool in the paper's node),
-* **local tier**   = ``memory_kind="device"`` (HBM).
+* tier resolution + placement  -> :mod:`repro.memory.tiers`
+* paged scans + donation       -> :mod:`repro.memory.orchestrator`
+* residency policies           -> :mod:`repro.memory.policies`
+* byte accounting              -> :mod:`repro.memory.accounting`
 
-The *Tensor Prefetcher* becomes :func:`paged_scan`: a scan over stacked
-per-layer weights whose carry holds a **double buffer** — iteration *i*
-computes layer *i* from the already-fetched buffer while the fetch of layer
-*i+1* is issued *before* the compute, so XLA's async copy-start/copy-done
-pair (the "paging stream") overlaps the transfer with layer *i*'s compute.
-Peak device residency is 2 layers of weights + activations, which is the
-paper's Table 4.3 result (10–20 GB instead of 144 GB).
-
-Everything degrades gracefully: with ``enabled=False`` (or on backends
-without host memory spaces) the transform is a plain ``lax.scan`` over
-device-resident weights, so models are paging-agnostic.
+This module re-exports the old names for one release so downstream code
+keeps importing ``repro.core.pager``; new code should use
+``repro.memory`` (most callers want
+``MemoryOrchestrator.plan(model_config)``).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Any
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-REMOTE_KIND = "pinned_host"
-LOCAL_KIND = "device"
-
-# Host-side kinds that can back the FengHuang remote tier, best first.
-# GPU/TPU expose "pinned_host"; the CPU backend only has "unpinned_host"
-# (where local == remote, so paging degenerates to the identity — the
-# semantics stay intact and tests exercise the full transform).
-_HOST_KINDS = ("pinned_host", "unpinned_host")
-
-try:  # public since jax 0.5
-    from jax.sharding import TransferToMemoryKind as _TransferToMemoryKind
-except ImportError:  # pragma: no cover - version specific
-    try:
-        from jax._src.sharding_impls import (
-            TransferToMemoryKind as _TransferToMemoryKind)
-    except ImportError:
-        _TransferToMemoryKind = None
-
-
-@functools.lru_cache(maxsize=None)
-def _memory_kinds() -> frozenset:
-    try:
-        dev = jax.devices()[0]
-        return frozenset(m.kind for m in dev.addressable_memories())
-    except Exception:  # pragma: no cover - platform specific
-        return frozenset()
-
-
-def resolved_remote_kind() -> str | None:
-    """The memory kind backing the remote tier on this backend."""
-    for kind in _HOST_KINDS:
-        if kind in _memory_kinds():
-            return kind
-    return None
-
-
-def resolved_local_kind() -> str | None:
-    """The memory kind backing the local tier on this backend."""
-    if LOCAL_KIND in _memory_kinds():
-        return LOCAL_KIND
-    try:
-        return jax.devices()[0].default_memory().kind
-    except Exception:  # pragma: no cover - platform specific
-        return None
-
-
-@dataclasses.dataclass(frozen=True)
-class PagerConfig:
-    """FengHuang paging policy.
-
-    enabled          — page weights through the remote tier.
-    lookahead        — prefetch window in layers (paper w=1).  Only w=1 is
-                       materialized as an explicit double buffer; deeper
-                       windows are left to XLA's scheduler, which may hoist
-                       further copy-starts.
-    offload_kv       — keep the KV cache in the remote tier between steps,
-                       paging per-layer pages in during attention.
-    donate_evicted   — donate the consumed buffer (eviction is implicit:
-                       the buffer is dead after the layer computes).
-    """
-
-    enabled: bool = False
-    lookahead: int = 1
-    offload_kv: bool = False
-    donate_evicted: bool = True
-
-
-def supports_memory_spaces() -> bool:
-    """True if the backend exposes a host memory kind the remote tier can
-    live in (distinct from HBM on GPU/TPU; aliased with it on CPU)."""
-    return resolved_remote_kind() is not None
-
-
-def remote_sharding(mesh, pspec: P) -> NamedSharding:
-    """NamedSharding in the FengHuang remote tier."""
-    return NamedSharding(mesh, pspec, memory_kind=REMOTE_KIND)
-
-
-def local_sharding(mesh, pspec: P) -> NamedSharding:
-    return NamedSharding(mesh, pspec, memory_kind=LOCAL_KIND)
-
-
-def to_remote(tree: Any, mesh, pspec_tree: Any) -> Any:
-    """Move a pytree of arrays into the remote tier (sharded)."""
-    return jax.tree.map(
-        lambda x, ps: jax.device_put(x, remote_sharding(mesh, ps)),
-        tree, pspec_tree)
-
-
-def _put_kind(x: jax.Array, kind: str | None) -> jax.Array:
-    if kind is None:
-        return x
-    if isinstance(x, jax.core.Tracer):
-        if _TransferToMemoryKind is None:  # pragma: no cover - old jax
-            return x
-        return jax.device_put(x, _TransferToMemoryKind(kind))
-    return jax.device_put(x, x.sharding.with_memory_kind(kind))
-
-
-def page_in(tree: Any) -> Any:
-    """Fetch a pytree from the remote tier into local (device) memory.
-
-    Traceable: inside jit this lowers to an async H2D copy that XLA
-    schedules concurrently with unrelated compute (the paging stream).
-    """
-    return jax.tree.map(lambda x: _put_kind(x, resolved_local_kind()), tree)
-
-
-def page_out(tree: Any) -> Any:
-    """Evict a pytree to the remote tier (write-back)."""
-    return jax.tree.map(lambda x: _put_kind(x, resolved_remote_kind()), tree)
-
-
-def host_put(tree: Any) -> Any:
-    """Eagerly place a pytree in the remote tier (single-device helper for
-    examples/tests; sharded placement goes through :func:`to_remote`)."""
-    return jax.tree.map(lambda x: _put_kind(jnp.asarray(x),
-                                            resolved_remote_kind()), tree)
+from repro.memory.accounting import (resident_window_bytes,  # noqa: F401
+                                     tree_bytes)
+from repro.memory.orchestrator import (MemoryOrchestrator,  # noqa: F401
+                                       donating_jit, paged_map, paged_scan,
+                                       paged_scan_cache)
+from repro.memory.policies import OffloadBetweenSteps, PagerConfig  # noqa: F401
+from repro.memory.tiers import (LOCAL_KIND, REMOTE_KIND,  # noqa: F401
+                                host_put, local_sharding, page_in, page_out,
+                                remote_sharding, resolved_local_kind,
+                                resolved_remote_kind, supports_memory_spaces,
+                                to_remote)
 
 
 def place_kv_pool(cache: Any, config: PagerConfig) -> Any:
-    """Residency policy for the block-pool paged KV cache.
-
-    With ``offload_kv`` the stacked ``(L, P, page, Hkv, hd)`` page pools
-    live in the FengHuang remote tier between dispatches — decode pages
-    exactly one layer's pool through local memory at a time (the
-    ``paged_scan_cache`` carry) — while the small leaves (page tables,
-    lengths) stay local.  Without it the pool is device-resident and the
-    call is the identity."""
+    """Deprecated: use ``MemoryOrchestrator.place_kv_pool`` (the policy
+    seam decides residency; this free function re-derives it from the
+    config for old callers)."""
     if not (config.enabled and config.offload_kv):
         return cache
-    pool_keys = ("k_pages", "v_pages")
-    return {k: (host_put(v) if k in pool_keys else v)
-            for k, v in cache.items()}
-
-
-def donating_jit(fn: Callable, *, donate_argnums: tuple[int, ...] = (),
-                 config: PagerConfig | None = None, **jit_kwargs) -> Callable:
-    """``jax.jit`` with the FengHuang donation contract.
-
-    The serving hot path hands its KV cache and decode state to every
-    dispatch and never touches the old buffers again — exactly the
-    "consumed double buffer" the pager's eviction policy describes.
-    Donating them lets XLA alias input and output so the cache is updated
-    in place instead of copied once per dispatch.  ``config.donate_evicted
-    = False`` turns the aliasing off (debug mode: old buffers stay live).
-    """
-    if config is not None and not config.donate_evicted:
-        donate_argnums = ()
-    return jax.jit(fn, donate_argnums=donate_argnums, **jit_kwargs)
-
-
-def _index_layer(stacked: Any, i) -> Any:
-    """Slice layer ``i`` out of a stacked (L, ...) pytree (stays in its
-    current memory space)."""
-    return jax.tree.map(
-        lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
-        stacked)
-
-
-def paged_scan(
-    body: Callable[..., tuple[Any, Any]],
-    carry: Any,
-    stacked_weights: Any,
-    xs: Any = None,
-    *,
-    config: PagerConfig,
-    length: int | None = None,
-    unroll: int = 1,
-    page_xs: bool = False,
-) -> tuple[Any, Any]:
-    """FengHuang-paged scan over layers.
-
-    ``body(carry, layer_weights[, x]) -> (carry, out)`` — layer weights
-    arrive in the local tier.  With paging enabled, ``stacked_weights`` is
-    expected to live in the remote tier; the double-buffered carry implements
-    the lookahead-1 Tensor Prefetcher.  Differentiable (the transfers are
-    linear), so the same transform serves training.
-
-    ``xs`` is an optional extra per-layer input (e.g. the KV-cache slice for
-    this layer).  With ``page_xs=True`` it is paged in alongside the weights
-    and the per-layer output ``out`` is written back to the remote tier
-    (FengHuang KV paging).
-    """
-    if length is None:
-        length = jax.tree.leaves(stacked_weights)[0].shape[0]
-
-    if not config.enabled:
-        if xs is None:
-            return jax.lax.scan(body, carry, stacked_weights, unroll=unroll)
-        return jax.lax.scan(lambda c, wx: body(c, wx[0], wx[1]), carry,
-                            (stacked_weights, xs), unroll=unroll)
-
-    def fetch(i):
-        return page_in(_index_layer(stacked_weights, i))
-
-    last = length - 1
-    w0 = fetch(0)
-
-    def step(state, i):
-        inner_carry, w_cur = state
-        # Issue the prefetch of layer i+1 BEFORE the compute of layer i so
-        # the copy-start precedes the matmuls in program order; XLA overlaps.
-        w_next = fetch(jnp.minimum(i + 1, last))
-        if xs is None:
-            inner_carry, out = body(inner_carry, w_cur)
-        else:
-            x = _index_layer(xs, i)
-            if page_xs:
-                x = page_in(x)
-            inner_carry, out = body(inner_carry, w_cur, x)
-            if page_xs:
-                out = page_out(out)
-        return (inner_carry, w_next), out
-
-    (carry, _), outs = jax.lax.scan(step, (carry, w0), jnp.arange(length),
-                                    unroll=unroll)
-    return carry, outs
-
-
-def paged_scan_cache(
-    body: Callable[..., tuple[Any, Any]],
-    carry: Any,
-    stacked_weights: Any,
-    cache: Any,
-    *,
-    config: PagerConfig,
-    length: int | None = None,
-) -> tuple[Any, Any]:
-    """Layer scan with the (stacked) cache threaded through the CARRY.
-
-    ``body(carry, layer_weights, cache_layer) -> (carry, new_cache_layer)``.
-
-    Unlike passing the cache as scan xs/ys — which makes XLA materialize a
-    second full-size stacked buffer and copy the untouched layers every
-    iteration — the carried buffer is updated in place with a
-    dynamic-update-slice (while-loop state aliases input/output), so
-    per-layer traffic is just that layer's slice.  With
-    ``config.offload_kv`` the slice pages through the FengHuang remote
-    tier (page-in before attention, write-back after).
-    """
-    if length is None:
-        length = jax.tree.leaves(stacked_weights)[0].shape[0]
-    last = length - 1
-
-    def fetch(i):
-        w = _index_layer(stacked_weights, i)
-        return page_in(w) if config.enabled else w
-
-    def update(buf, i, new_layer):
-        return jax.tree.map(
-            lambda b, u: jax.lax.dynamic_update_index_in_dim(
-                b, u.astype(b.dtype), i, 0),
-            buf, new_layer)
-
-    if not config.enabled:
-        def step(state, i):
-            inner, cache_buf = state
-            cl = _index_layer(cache_buf, i)
-            inner, new_cl = body(inner, fetch(i), cl)
-            return (inner, update(cache_buf, i, new_cl)), None
-
-        (carry, cache), _ = jax.lax.scan(step, (carry, cache),
-                                         jnp.arange(length))
-        return carry, cache
-
-    w0 = fetch(0)
-
-    def step(state, i):
-        inner, cache_buf, w_cur = state
-        w_next = fetch(jnp.minimum(i + 1, last))    # lookahead-1 prefetch
-        cl = _index_layer(cache_buf, i)
-        if config.offload_kv:
-            cl = page_in(cl)
-        inner, new_cl = body(inner, w_cur, cl)
-        if config.offload_kv:
-            new_cl = page_out(new_cl)
-        return (inner, update(cache_buf, i, new_cl), w_next), None
-
-    (carry, cache, _), _ = jax.lax.scan(step, (carry, cache, w0),
-                                        jnp.arange(length))
-    return carry, cache
-
-
-def paged_map(fn: Callable[[Any], Any], stacked: Any, *,
-              config: PagerConfig) -> Any:
-    """Apply ``fn`` per layer with paging (utility for cache init etc.)."""
-    def body(carry, w):
-        return carry, fn(w)
-    _, outs = paged_scan(body, (), stacked, config=config)
-    return outs
-
-
-# ---------------------------------------------------------------------------
-# Host-side memory accounting (mirrors the simulator's Table 4.3 logic for
-# real pytrees).
-# ---------------------------------------------------------------------------
-
-def tree_bytes(tree: Any) -> int:
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
-
-
-def resident_window_bytes(stacked_weights: Any, lookahead: int = 1) -> int:
-    """Peak local bytes the pager keeps resident: (1 + lookahead) layers."""
-    leaves = jax.tree.leaves(stacked_weights)
-    if not leaves:
-        return 0
-    num_layers = leaves[0].shape[0]
-    per_layer = tree_bytes(stacked_weights) // max(num_layers, 1)
-    return (1 + max(lookahead, 0)) * per_layer
+    return OffloadBetweenSteps().place(cache)

@@ -26,6 +26,7 @@ from typing import Sequence
 
 from repro.core import hw, latency
 from repro.core.graphs import Node
+from repro.memory import accounting
 
 GB = 1e9
 TB = 1e12
@@ -231,7 +232,10 @@ def simulate(nodes: Sequence[Node], sys: SystemConfig,
         collective_s=collective_t,
         paging_exposed_s=paging_exposed,
         peak_paged_window_bytes=peak_window,
-        peak_local_bytes=peak_window + pinned_bytes + activation_bytes,
+        # shared with the live runtime's ledger math (repro.memory):
+        # simulated and measured Table 4.3 numbers use one formula
+        peak_local_bytes=accounting.peak_local_bytes(
+            peak_window, pinned_bytes, activation_bytes),
         num_nodes=n,
     )
 

@@ -22,7 +22,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.paged_attention.kernel import paged_attention
@@ -165,65 +164,7 @@ class BlockManager:
         return 1.0 - live / in_use
 
 
-class PagePool:
-    """Deprecated host-driven pool — thin compatibility wrapper.
-
-    The serving hot path now keeps the pools inside the jitted decode
-    dispatch (see :class:`BlockManager` and
-    ``repro.models.transformer.DenseLM._decode_pool``); this wrapper
-    remains for host-side experiments.  ``append_block`` is the fixed
-    write path: ONE scatter per block of tokens instead of the old one
-    ``.at[page, slot].set`` dispatch per token (``append`` now just
-    forwards a 1-token block to it)."""
-
-    def __init__(self, num_pages: int, page_size: int, kv_heads: int,
-                 head_dim: int, dtype=jnp.bfloat16):
-        self.page_size = page_size
-        self.k = jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype)
-        self.v = jnp.zeros((num_pages, page_size, kv_heads, head_dim), dtype)
-        self.manager = BlockManager(num_pages, page_size)
-
-    @property
-    def free(self) -> list[int]:
-        return list(self.manager._free)
-
-    @property
-    def tables(self) -> dict[int, list[int]]:
-        return self.manager.pages
-
-    @property
-    def lens(self) -> dict[int, int]:
-        return self.manager.lens
-
-    def alloc_seq(self, uid: int) -> None:
-        self.manager.pages.setdefault(uid, [])
-        self.manager.lens.setdefault(uid, 0)
-
-    def append_block(self, uid: int, k_blk: jax.Array,
-                     v_blk: jax.Array) -> None:
-        """k_blk/v_blk: (T, kv_heads, head_dim) — T tokens appended with a
-        single batched scatter per pool."""
-        t = k_blk.shape[0]
-        pos0 = self.manager.lens.get(uid, 0)
-        self.manager.ensure(uid, pos0 + t)
-        table = jnp.asarray(self.manager.pages[uid], jnp.int32)
-        pos = pos0 + jnp.arange(t)
-        pids = table[pos // self.page_size]
-        slots = pos % self.page_size
-        self.k = self.k.at[pids, slots].set(k_blk.astype(self.k.dtype))
-        self.v = self.v.at[pids, slots].set(v_blk.astype(self.v.dtype))
-        self.manager.lens[uid] = pos0 + t
-
-    def append(self, uid: int, k_tok: jax.Array, v_tok: jax.Array) -> None:
-        """One token's KV, (kv_heads, head_dim) — prefer append_block."""
-        self.append_block(uid, k_tok[None], v_tok[None])
-
-    def free_seq(self, uid: int) -> None:
-        self.manager.free_slot(uid)
-
-    def batch_tables(self, uids: list[int], n_pages: int) -> jax.Array:
-        return jnp.asarray(self.manager.table(uids, n_pages), jnp.int32)
-
-    def batch_lens(self, uids: list[int]) -> jax.Array:
-        return jnp.asarray([self.manager.lens.get(u, 0) for u in uids],
-                           jnp.int32)
+# The deprecated host-driven ``PagePool`` wrapper that used to live here
+# is gone; host-side pool experiments go through
+# ``repro.memory.policies.BlockPoolResidency`` (same BlockManager
+# bookkeeping, batched ``append_block`` writes, ledger accounting).

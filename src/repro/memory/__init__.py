@@ -1,0 +1,48 @@
+"""repro.memory — the FengHuang memory-orchestration subsystem.
+
+One place for everything the paper calls *memory orchestration*:
+
+* :mod:`repro.memory.tiers` — backend-resolved tier registry (local HBM /
+  host / remote pool) and the placement primitives (``page_in`` /
+  ``page_out`` / ``host_put`` / sharded variants).
+* :mod:`repro.memory.policies` — the :class:`ResidencyPolicy` seam and
+  its concrete policies (``PinLocal``, ``DoubleBufferPrefetch``,
+  ``BlockPoolResidency``, ``OffloadBetweenSteps``,
+  ``TopKExpertPrefetch``) plus :class:`PagerConfig`.
+* :mod:`repro.memory.orchestrator` — :class:`MemoryOrchestrator`, which
+  binds tensor classes to policies and owns the paged scan transforms
+  and the donation contract; ``MemoryOrchestrator.plan(cfg)`` is the one
+  entry point models, the server, benchmarks and examples use.
+* :mod:`repro.memory.accounting` — per-tier byte accounting (ledger,
+  high-water marks, fragmentation) shared between the live runtime and
+  the Table 4.3 simulator, so measured and simulated capacity reduction
+  go through one code path.
+
+``repro.core.pager`` remains as a thin re-export shim for one release;
+new code should import from here.
+"""
+from repro.memory.accounting import (MemoryLedger, capacity_reduction,
+                                     paged_window_bytes, peak_local_bytes,
+                                     resident_window_bytes, tree_bytes)
+from repro.memory.orchestrator import (MemoryOrchestrator, donating_jit,
+                                       paged_map, paged_scan,
+                                       paged_scan_cache)
+from repro.memory.policies import (BlockPoolResidency, DoubleBufferPrefetch,
+                                   OffloadBetweenSteps, PagerConfig, PinLocal,
+                                   ResidencyPolicy, TopKExpertPrefetch)
+from repro.memory.tiers import (LOCAL, REMOTE, host_put, local_sharding,
+                                page_in, page_out, remote_sharding, reset,
+                                resolved_local_kind, resolved_remote_kind,
+                                supports_memory_spaces, to_remote)
+
+__all__ = [
+    "MemoryLedger", "capacity_reduction", "paged_window_bytes",
+    "peak_local_bytes", "resident_window_bytes", "tree_bytes",
+    "MemoryOrchestrator", "donating_jit", "paged_map", "paged_scan",
+    "paged_scan_cache",
+    "BlockPoolResidency", "DoubleBufferPrefetch", "OffloadBetweenSteps",
+    "PagerConfig", "PinLocal", "ResidencyPolicy", "TopKExpertPrefetch",
+    "LOCAL", "REMOTE", "host_put", "local_sharding", "page_in", "page_out",
+    "remote_sharding", "reset", "resolved_local_kind",
+    "resolved_remote_kind", "supports_memory_spaces", "to_remote",
+]

@@ -1,0 +1,118 @@
+"""Per-tier byte accounting: one code path for measured AND simulated
+local-capacity numbers (the paper's Table 4.3 / §4.2 claim).
+
+Two halves:
+
+* **Formulas** — :func:`paged_window_bytes` (the (1 + lookahead)-deep
+  prefetch window), :func:`peak_local_bytes` (window + pinned +
+  activations, exactly what the discrete-event simulator accounts per
+  stream) and :func:`capacity_reduction` (the "93% less local memory"
+  headline).  ``core.simulator`` and ``benchmarks/local_memory.py``
+  compute Table 4.3 through these; the serving runtime computes its
+  measured reduction through the same :func:`capacity_reduction`, so the
+  two numbers are comparable by construction.
+* **Ledger** — :class:`MemoryLedger`, the live-runtime side: current and
+  high-water residency per (tier, tensor class), fed by the
+  orchestrator's placements, the block-pool manager and the expert
+  pager, and dumped into ``BENCH_serve.json`` per tier.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def paged_window_bytes(per_layer_bytes: float, lookahead: int = 1) -> float:
+    """Bytes the Tensor Prefetcher keeps resident for a stream of
+    equal-size pageable units: the executing unit + ``lookahead``
+    prefetched ones.  The simulator's per-node window reduces to this
+    for equal nodes; the live pager's double buffer IS this for w=1."""
+    return (1 + max(lookahead, 0)) * per_layer_bytes
+
+
+def resident_window_bytes(stacked_weights: Any, lookahead: int = 1) -> int:
+    """Peak local bytes the pager keeps resident of a stacked (L, ...)
+    pytree: (1 + lookahead) layers."""
+    leaves = jax.tree.leaves(stacked_weights)
+    if not leaves:
+        return 0
+    num_layers = leaves[0].shape[0]
+    per_layer = tree_bytes(stacked_weights) // max(num_layers, 1)
+    return int(paged_window_bytes(per_layer, lookahead))
+
+
+def peak_local_bytes(window_bytes: float, pinned_bytes: float = 0.0,
+                     activation_bytes: float = 0.0) -> float:
+    """Peak local-tier footprint: paged window + pinned tensors +
+    activations (Table 4.3's per-GPU requirement)."""
+    return window_bytes + pinned_bytes + activation_bytes
+
+
+def capacity_reduction(peak_bytes: float, baseline_bytes: float) -> float:
+    """Fractional local-capacity reduction vs a fully resident baseline
+    (0.93 == the paper's 93% headline).  Negative if paging *costs*."""
+    if baseline_bytes <= 0:
+        return 0.0
+    return 1.0 - peak_bytes / baseline_bytes
+
+
+class MemoryLedger:
+    """Current + high-water residency per (tier, tensor class).
+
+    ``record`` sets the **current** bytes a tensor class occupies in a
+    tier (residency is state, not a counter — policies re-record as
+    their footprint changes); per-tier totals and high-water marks fall
+    out.  Shape-derived residency recorded at trace time is fine: it
+    re-records identically on every retrace of the same shapes.
+
+    Residency (``record``) and provisioned capacity (``record_capacity``)
+    are tracked separately so a pre-allocated slab is never
+    double-counted: a block pool's *capacity* is the slab, its
+    *residency* is the live pages inside it — only residency sums into
+    ``in_use``/``hwm``.
+    """
+
+    def __init__(self) -> None:
+        self._now: dict[str, dict[str, int]] = {}
+        self._hwm: dict[str, int] = {}
+        self._cap: dict[str, dict[str, int]] = {}
+
+    def record(self, tier: str, tensor_class: str, nbytes: int) -> None:
+        self._now.setdefault(tier, {})[tensor_class] = int(nbytes)
+        self._hwm[tier] = max(self._hwm.get(tier, 0), self.in_use(tier))
+
+    def record_capacity(self, tier: str, tensor_class: str,
+                        nbytes: int) -> None:
+        """Provisioned (not necessarily live) bytes, e.g. a pool slab."""
+        self._cap.setdefault(tier, {})[tensor_class] = int(nbytes)
+
+    def release(self, tier: str, tensor_class: str) -> None:
+        self._now.get(tier, {}).pop(tensor_class, None)
+
+    def in_use(self, tier: str) -> int:
+        return sum(self._now.get(tier, {}).values())
+
+    def hwm(self, tier: str) -> int:
+        return self._hwm.get(tier, 0)
+
+    def capacity(self, tier: str) -> int:
+        return sum(self._cap.get(tier, {}).values())
+
+    def classes(self, tier: str) -> dict[str, int]:
+        return dict(self._now.get(tier, {}))
+
+    def tiers(self) -> list[str]:
+        return sorted(set(self._now) | set(self._hwm) | set(self._cap))
+
+    def snapshot(self) -> dict:
+        """Machine-readable per-tier view (the BENCH_serve.json shape)."""
+        return {t: {"in_use_bytes": self.in_use(t),
+                    "hwm_bytes": self.hwm(t),
+                    "capacity_bytes": self.capacity(t),
+                    "by_class": self.classes(t)}
+                for t in self.tiers()}

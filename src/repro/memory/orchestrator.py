@@ -1,0 +1,402 @@
+"""MemoryOrchestrator: tensor classes -> residency policies, plus the
+paged execution transforms they ride.
+
+The *Tensor Prefetcher* becomes :func:`paged_scan`: a scan over stacked
+per-layer weights whose carry holds a **double buffer** — iteration *i*
+computes layer *i* from the already-fetched buffer while the fetch of
+layer *i+1* is issued *before* the compute, so XLA's async
+copy-start/copy-done pair (the "paging stream") overlaps the transfer
+with layer *i*'s compute.  Peak device residency is 2 layers of weights
++ activations, which is the paper's Table 4.3 result (10–20 GB instead
+of 144 GB).
+
+Everything degrades gracefully: with ``enabled=False`` (or on backends
+without host memory spaces) the transforms are plain ``lax.scan``s over
+device-resident weights, so models are paging-agnostic.
+
+:class:`MemoryOrchestrator` is the subsystem's front door:
+``MemoryOrchestrator.plan(model_config)`` resolves the policy matrix
+from the config's :class:`~repro.memory.policies.PagerConfig`, and the
+instance then owns placement (``place_layer_weights`` /
+``place_kv_pool`` / ``block_pool``), the layer scans (with the expert
+banks automatically pinned out of the prefetch window when expert
+paging is on), the donation contract, and the shared ledger.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.memory import tiers
+from repro.memory.accounting import (MemoryLedger, paged_window_bytes,
+                                     tree_bytes)
+from repro.memory.policies import (BlockPoolResidency, DoubleBufferPrefetch,
+                                   OffloadBetweenSteps, PagerConfig, PinLocal,
+                                   TopKExpertPrefetch)
+
+
+def donating_jit(fn: Callable, *, donate_argnums: tuple[int, ...] = (),
+                 config: PagerConfig | None = None, **jit_kwargs) -> Callable:
+    """``jax.jit`` with the FengHuang donation contract.
+
+    The serving hot path hands its KV cache and decode state to every
+    dispatch and never touches the old buffers again — exactly the
+    "consumed double buffer" the pager's eviction policy describes.
+    Donating them lets XLA alias input and output so the cache is updated
+    in place instead of copied once per dispatch.  ``config.donate_evicted
+    = False`` turns the aliasing off (debug mode: old buffers stay live).
+    """
+    if config is not None and not config.donate_evicted:
+        donate_argnums = ()
+    return jax.jit(fn, donate_argnums=donate_argnums, **jit_kwargs)
+
+
+def _index_layer(stacked: Any, i) -> Any:
+    """Slice layer ``i`` out of a stacked (L, ...) pytree (stays in its
+    current memory space)."""
+    return jax.tree.map(
+        lambda x: jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
+        stacked)
+
+
+def _page_in_filtered(layer: Any, fetch_filter: Callable | None) -> Any:
+    """page_in the layer, leaving leaves the filter rejects at rest
+    (expert banks under TopKExpertPrefetch stay remote — their rows are
+    gathered on demand inside the layer body instead)."""
+    if fetch_filter is None:
+        return tiers.page_in(layer)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: (tiers.page_in(x)
+                      if fetch_filter(jax.tree_util.keystr(p)) else x),
+        layer)
+
+
+def paged_scan(
+    body: Callable[..., tuple[Any, Any]],
+    carry: Any,
+    stacked_weights: Any,
+    xs: Any = None,
+    *,
+    config: PagerConfig,
+    length: int | None = None,
+    unroll: int = 1,
+    page_xs: bool = False,
+    fetch_filter: Callable[[str], bool] | None = None,
+) -> tuple[Any, Any]:
+    """FengHuang-paged scan over layers.
+
+    ``body(carry, layer_weights[, x]) -> (carry, out)`` — layer weights
+    arrive in the local tier.  With paging enabled, ``stacked_weights`` is
+    expected to live in the remote tier; the double-buffered carry implements
+    the lookahead-1 Tensor Prefetcher.  Differentiable (the transfers are
+    linear), so the same transform serves training.
+
+    ``xs`` is an optional extra per-layer input (e.g. the KV-cache slice for
+    this layer).  With ``page_xs=True`` it is paged in alongside the weights
+    and the per-layer output ``out`` is written back to the remote tier
+    (FengHuang KV paging).  ``fetch_filter(leaf_path) -> bool`` excludes
+    weight leaves from the prefetch window (False = leaf stays at rest).
+    """
+    if length is None:
+        length = jax.tree.leaves(stacked_weights)[0].shape[0]
+
+    if not config.enabled:
+        if fetch_filter is None:
+            if xs is None:
+                return jax.lax.scan(body, carry, stacked_weights,
+                                    unroll=unroll)
+            return jax.lax.scan(lambda c, wx: body(c, wx[0], wx[1]), carry,
+                                (stacked_weights, xs), unroll=unroll)
+
+        # at-rest leaves (expert banks) must not stream through the scan
+        # xs — index the layer inside the body so they stay in their tier
+        # and only the rows the body gathers cross it
+        def step(c, i):
+            w = _index_layer(stacked_weights, i)
+            if xs is None:
+                return body(c, w)
+            return body(c, w, _index_layer(xs, i))
+
+        return jax.lax.scan(step, carry, jnp.arange(length), unroll=unroll)
+
+    def fetch(i):
+        return _page_in_filtered(_index_layer(stacked_weights, i),
+                                 fetch_filter)
+
+    last = length - 1
+    w0 = fetch(0)
+
+    def step(state, i):
+        inner_carry, w_cur = state
+        # Issue the prefetch of layer i+1 BEFORE the compute of layer i so
+        # the copy-start precedes the matmuls in program order; XLA overlaps.
+        w_next = fetch(jnp.minimum(i + 1, last))
+        if xs is None:
+            inner_carry, out = body(inner_carry, w_cur)
+        else:
+            x = _index_layer(xs, i)
+            if page_xs:
+                x = tiers.page_in(x)
+            inner_carry, out = body(inner_carry, w_cur, x)
+            if page_xs:
+                out = tiers.page_out(out)
+        return (inner_carry, w_next), out
+
+    (carry, _), outs = jax.lax.scan(step, (carry, w0), jnp.arange(length),
+                                    unroll=unroll)
+    return carry, outs
+
+
+def paged_scan_cache(
+    body: Callable[..., tuple[Any, Any]],
+    carry: Any,
+    stacked_weights: Any,
+    cache: Any,
+    *,
+    config: PagerConfig,
+    length: int | None = None,
+    fetch_filter: Callable[[str], bool] | None = None,
+) -> tuple[Any, Any]:
+    """Layer scan with the (stacked) cache threaded through the CARRY.
+
+    ``body(carry, layer_weights, cache_layer) -> (carry, new_cache_layer)``.
+
+    Unlike passing the cache as scan xs/ys — which makes XLA materialize a
+    second full-size stacked buffer and copy the untouched layers every
+    iteration — the carried buffer is updated in place with a
+    dynamic-update-slice (while-loop state aliases input/output), so
+    per-layer traffic is just that layer's slice.  With
+    ``config.offload_kv`` the slice pages through the FengHuang remote
+    tier (page-in before attention, write-back after).
+    """
+    if length is None:
+        length = jax.tree.leaves(stacked_weights)[0].shape[0]
+    last = length - 1
+
+    def fetch(i):
+        w = _index_layer(stacked_weights, i)
+        return (_page_in_filtered(w, fetch_filter) if config.enabled else w)
+
+    def update(buf, i, new_layer):
+        return jax.tree.map(
+            lambda b, u: jax.lax.dynamic_update_index_in_dim(
+                b, u.astype(b.dtype), i, 0),
+            buf, new_layer)
+
+    if not config.enabled:
+        def step(state, i):
+            inner, cache_buf = state
+            cl = _index_layer(cache_buf, i)
+            inner, new_cl = body(inner, fetch(i), cl)
+            return (inner, update(cache_buf, i, new_cl)), None
+
+        (carry, cache), _ = jax.lax.scan(step, (carry, cache),
+                                         jnp.arange(length))
+        return carry, cache
+
+    w0 = fetch(0)
+
+    def step(state, i):
+        inner, cache_buf, w_cur = state
+        w_next = fetch(jnp.minimum(i + 1, last))    # lookahead-1 prefetch
+        cl = _index_layer(cache_buf, i)
+        if config.offload_kv:
+            cl = tiers.page_in(cl)
+        inner, new_cl = body(inner, w_cur, cl)
+        if config.offload_kv:
+            new_cl = tiers.page_out(new_cl)
+        return (inner, update(cache_buf, i, new_cl), w_next), None
+
+    (carry, cache, _), _ = jax.lax.scan(step, (carry, cache, w0),
+                                        jnp.arange(length))
+    return carry, cache
+
+
+def paged_map(fn: Callable[[Any], Any], stacked: Any, *,
+              config: PagerConfig) -> Any:
+    """Apply ``fn`` per layer with paging (utility for cache init etc.)."""
+    def body(carry, w):
+        return carry, fn(w)
+    _, outs = paged_scan(body, (), stacked, config=config)
+    return outs
+
+
+class MemoryOrchestrator:
+    """Binds tensor classes to residency policies for one model/server.
+
+    Tensor classes: ``layer_weights`` (stacked per-layer params),
+    ``kv_pool`` (dense slab or block pool), ``expert_weights`` (MoE
+    banks).  ``plan`` resolves the policy matrix from a
+    :class:`PagerConfig`; everything downstream — placement, layer
+    scans, donation, block-pool bookkeeping, accounting — goes through
+    the instance, so the server, benchmarks and examples never hand-wire
+    pager calls.
+    """
+
+    def __init__(self, config: PagerConfig,
+                 policies: dict[str, Any] | None = None,
+                 ledger: MemoryLedger | None = None):
+        self.config = config
+        self.ledger = ledger if ledger is not None else MemoryLedger()
+        self.policies = dict(policies or {})
+        self.policies.setdefault("layer_weights", PinLocal())
+        self.policies.setdefault("kv_pool", PinLocal())
+
+    # ----- planning ---------------------------------------------------------
+    @classmethod
+    def plan(cls, model_config: Any = None,
+             pager_config: PagerConfig | None = None,
+             ledger: MemoryLedger | None = None) -> "MemoryOrchestrator":
+        """The one entry point: resolve the policy matrix.
+
+        ``model_config`` is a :class:`repro.models.base.ModelConfig` (its
+        ``pager`` policy supplies the knobs unless ``pager_config``
+        overrides) or None for a bare default orchestrator.
+        """
+        if pager_config is None:
+            pp = getattr(model_config, "pager", None)
+            pager_config = PagerConfig(
+                enabled=getattr(pp, "enabled", False),
+                lookahead=getattr(pp, "lookahead", 1),
+                offload_kv=getattr(pp, "offload_kv", False),
+                page_experts=getattr(pp, "page_experts", False))
+        ledger = ledger if ledger is not None else MemoryLedger()
+        policies: dict[str, Any] = {}
+        policies["layer_weights"] = (
+            DoubleBufferPrefetch(lookahead=pager_config.lookahead)
+            if pager_config.enabled else PinLocal())
+        policies["kv_pool"] = (
+            OffloadBetweenSteps()
+            if pager_config.enabled and pager_config.offload_kv
+            else PinLocal())
+        num_experts = getattr(model_config, "num_experts", 0)
+        if pager_config.page_experts and num_experts:
+            policies["expert_weights"] = TopKExpertPrefetch(
+                num_experts=num_experts,
+                top_k=getattr(model_config, "top_k", 1),
+                ledger=ledger)
+        return cls(pager_config, policies, ledger)
+
+    @property
+    def expert_policy(self) -> TopKExpertPrefetch | None:
+        return self.policies.get("expert_weights")
+
+    def weights_fetch_filter(self) -> Callable[[str], bool] | None:
+        """Leaf filter for the layer scans: expert banks stay at rest
+        when an expert policy owns them (their rows are gathered on
+        demand), everything else rides the prefetch window."""
+        ep = self.expert_policy
+        if ep is None:
+            return None
+        return lambda path: not ep.matches(path)
+
+    # ----- placement --------------------------------------------------------
+    def place(self, tensor_class: str, tree: Any) -> Any:
+        """Place a whole tensor class in its policy's home tier and
+        record the residency."""
+        policy = self.policies.get(tensor_class, PinLocal())
+        placed = policy.place(tree)
+        self.ledger.record(policy.tier, tensor_class, tree_bytes(tree))
+        return placed
+
+    def place_layer_weights(self, stacked: Any) -> Any:
+        """Place stacked per-layer params: expert-bank leaves go to the
+        expert policy's tier, the rest to the layer-weights policy's.
+        Records both residencies plus the local prefetch window."""
+        wp = self.policies["layer_weights"]
+        ep = self.expert_policy
+        if ep is None:
+            placed = wp.place(stacked)
+            expert_bytes = 0
+        else:
+            def put(path, x):
+                p = jax.tree_util.keystr(path)
+                if ep.matches(p):
+                    return tiers.host_put(x)
+                return x if isinstance(wp, PinLocal) else tiers.host_put(x)
+            placed = jax.tree_util.tree_map_with_path(put, stacked)
+            expert_bytes = sum(
+                x.size * x.dtype.itemsize
+                for p, x in jax.tree_util.tree_leaves_with_path(stacked)
+                if ep.matches(jax.tree_util.keystr(p)))
+            self.ledger.record(ep.tier, ep.tensor_class, expert_bytes)
+        total = tree_bytes(stacked)
+        if wp.tier == tiers.REMOTE:
+            self.ledger.record(tiers.REMOTE, "layer_weights",
+                               total - expert_bytes)
+            # the prefetch window covers only leaves the scan fetches —
+            # expert banks stay at rest (rows gather on demand instead)
+            num_layers = jax.tree.leaves(stacked)[0].shape[0]
+            per_layer = (total - expert_bytes) // max(num_layers, 1)
+            self.ledger.record(
+                tiers.LOCAL, "layer_weights_window",
+                int(paged_window_bytes(per_layer, self.config.lookahead)))
+        else:
+            self.ledger.record(tiers.LOCAL, "layer_weights",
+                               total - expert_bytes)
+        return placed
+
+    def place_kv_pool(self, cache: Any) -> Any:
+        """Residency for the serving KV cache (dense slab or block
+        pool): parked in the remote tier under ``offload_kv`` (only one
+        layer's slice local at a time), device-resident otherwise."""
+        policy = self.policies["kv_pool"]
+        placed = policy.place(cache)
+        # capacity, not residency: a pool slab is provisioned at full
+        # size while only live pages count as in-use (no double count)
+        self.ledger.record_capacity(policy.tier, "kv_pool",
+                                    tree_bytes(cache))
+        return placed
+
+    # ----- block pool -------------------------------------------------------
+    def block_pool(self, num_pages: int, page_size: int,
+                   **kwargs) -> BlockPoolResidency:
+        """A ledger-connected block-pool residency (see
+        :class:`BlockPoolResidency`); home tier follows the kv_pool
+        policy."""
+        kwargs.setdefault("tier", self.policies["kv_pool"].tier)
+        return BlockPoolResidency(num_pages, page_size,
+                                  ledger=self.ledger, **kwargs)
+
+    # ----- execution --------------------------------------------------------
+    def layer_scan(self, body, carry, stacked_weights, xs=None, **kw):
+        kw.setdefault("fetch_filter", self.weights_fetch_filter())
+        return paged_scan(body, carry, stacked_weights, xs,
+                          config=self.config, **kw)
+
+    def layer_scan_cache(self, body, carry, stacked_weights, cache, **kw):
+        kw.setdefault("fetch_filter", self.weights_fetch_filter())
+        return paged_scan_cache(body, carry, stacked_weights, cache,
+                                config=self.config, **kw)
+
+    def layer_map(self, fn, stacked):
+        return paged_map(fn, stacked, config=self.config)
+
+    def donating_jit(self, fn: Callable, *,
+                     donate_argnums: tuple[int, ...] = (),
+                     **jit_kwargs) -> Callable:
+        return donating_jit(fn, donate_argnums=donate_argnums,
+                            config=self.config, **jit_kwargs)
+
+    def gather_experts(self, banks: dict, ids: jax.Array) -> dict:
+        """Routed-expert row gather: through the expert policy when one
+        is planned (remote banks, residency recorded), a plain local
+        take otherwise."""
+        ep = self.expert_policy
+        if ep is not None:
+            return ep.gather(banks, ids)
+        keys = ("wi", "wg", "wo")
+        return {k: jnp.take(banks[k], ids, axis=0) for k in keys}
+
+    # ----- introspection ----------------------------------------------------
+    def describe(self) -> dict:
+        """Policy matrix, for logs and docs."""
+        return {cls: type(p).__name__ for cls, p in self.policies.items()}
+
+    def with_config(self, **overrides) -> "MemoryOrchestrator":
+        return MemoryOrchestrator(
+            dataclasses.replace(self.config, **overrides),
+            self.policies, self.ledger)

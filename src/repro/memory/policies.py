@@ -1,0 +1,272 @@
+"""Residency policies: the pluggable seam between tensor classes and the
+tier hierarchy.
+
+A :class:`ResidencyPolicy` answers two questions for one *tensor class*
+(stacked layer weights, a dense KV cache, a block-pool KV pool, expert
+banks): **where does it live at rest** (``tier`` + ``place``) and **how
+does it move through local memory while computing** (policy-specific:
+the double-buffered prefetch window, the scan-carry offload, the
+block-pool page tables, the routed-expert gather).  The
+:class:`~repro.memory.orchestrator.MemoryOrchestrator` binds classes to
+policies and owns the scan transforms the policies ride.
+
+Concrete policies:
+
+* :class:`PinLocal` — default; tensors stay in local HBM.
+* :class:`DoubleBufferPrefetch` — stacked layer weights at rest in the
+  remote tier, paged per layer with a lookahead-w double buffer (the
+  paper's Tensor Prefetcher, w=1 materialized).
+* :class:`OffloadBetweenSteps` — KV pools parked in the remote tier
+  between dispatches, one layer's slice local at a time in the scan
+  carry.
+* :class:`BlockPoolResidency` — block-pool paged KV: wraps
+  :class:`~repro.kernels.paged_attention.ops.BlockManager` bookkeeping
+  (free list / tables / lengths / hwm / fragmentation) and reports
+  through the shared ledger; optionally owns host-side pools for
+  host-driven experiments (the role the deleted ``PagePool`` played).
+* :class:`TopKExpertPrefetch` — MoE expert banks at rest in the remote
+  tier; only the rows routing selects are paged in per decode block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.ops import BlockManager
+from repro.memory import tiers
+from repro.memory.accounting import MemoryLedger, tree_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class PagerConfig:
+    """FengHuang paging policy knobs (the per-model policy matrix).
+
+    enabled          — page stacked layer weights through the remote tier.
+    lookahead        — prefetch window in layers (paper w=1).  Only w=1 is
+                       materialized as an explicit double buffer; deeper
+                       windows are left to XLA's scheduler, which may hoist
+                       further copy-starts.
+    offload_kv       — keep the KV cache in the remote tier between steps,
+                       paging per-layer pages in during attention.
+    page_experts     — MoE expert banks live in the remote tier; decode
+                       pages in only the routed (top-k) expert rows.
+    donate_evicted   — donate the consumed buffer (eviction is implicit:
+                       the buffer is dead after the layer computes).
+    """
+
+    enabled: bool = False
+    lookahead: int = 1
+    offload_kv: bool = False
+    page_experts: bool = False
+    donate_evicted: bool = True
+
+
+@runtime_checkable
+class ResidencyPolicy(Protocol):
+    """Where a tensor class lives at rest, and how it is placed there."""
+
+    tier: str
+
+    def place(self, tree: Any) -> Any:
+        """Move ``tree`` into the policy's home tier (eager)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class PinLocal:
+    """Default policy: device-resident, placement is the identity."""
+
+    tier: str = tiers.LOCAL
+
+    def place(self, tree: Any) -> Any:
+        return tree
+
+
+@dataclasses.dataclass(frozen=True)
+class DoubleBufferPrefetch:
+    """Stacked layer weights at rest in the remote tier, streamed through
+    a (1 + lookahead)-layer local window by the paged layer scan."""
+
+    lookahead: int = 1
+    tier: str = tiers.REMOTE
+
+    def place(self, tree: Any) -> Any:
+        return tiers.host_put(tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadBetweenSteps:
+    """KV pools at rest in the remote tier between dispatches; decode
+    pages one layer's pool through local memory at a time (the scan
+    carry of ``paged_scan_cache``).  Small leaves (page tables, lengths)
+    stay local — only ``pool_keys`` move."""
+
+    pool_keys: tuple[str, ...] = ("k_pages", "v_pages")
+    tier: str = tiers.REMOTE
+
+    def place(self, tree: Any) -> Any:
+        return {k: (tiers.host_put(v) if k in self.pool_keys else v)
+                for k, v in tree.items()}
+
+
+class BlockPoolResidency:
+    """Block-pool paged KV residency.
+
+    Wraps the host-side :class:`BlockManager` (allocation happens at
+    block boundaries, reclamation on EOS/eviction) and reports live
+    pool bytes into the shared :class:`MemoryLedger`.  The stacked
+    device pools normally live in the serving cache and are donated
+    through every dispatch; pass ``kv_heads``/``head_dim`` to own small
+    host-side pools instead (host-driven experiments and tests), written
+    with :meth:`append_block` — ONE batched scatter per block of tokens.
+    """
+
+    tensor_class = "kv_pool"
+
+    def __init__(self, num_pages: int, page_size: int, *,
+                 kv_heads: int | None = None, head_dim: int | None = None,
+                 dtype=jnp.bfloat16, bytes_per_page: int | None = None,
+                 tier: str = tiers.LOCAL,
+                 ledger: MemoryLedger | None = None):
+        self.manager = BlockManager(num_pages, page_size)
+        self.page_size = page_size
+        self.tier = tier
+        self.ledger = ledger
+        self._bytes_per_page = bytes_per_page
+        self.k = self.v = None
+        if kv_heads is not None and head_dim is not None:
+            self.k = jnp.zeros((num_pages, page_size, kv_heads, head_dim),
+                               dtype)
+            self.v = jnp.zeros((num_pages, page_size, kv_heads, head_dim),
+                               dtype)
+            if bytes_per_page is None:
+                self._bytes_per_page = self.manager.bytes_per_page(
+                    kv_heads, head_dim, jnp.dtype(dtype).itemsize)
+
+    def place(self, tree: Any) -> Any:
+        return tree
+
+    def bind_kv_shape(self, kv_heads: int, head_dim: int, itemsize: int,
+                      num_layers: int = 1) -> None:
+        """Derive per-page bytes from the served cache's shape (single
+        source: :meth:`BlockManager.bytes_per_page`)."""
+        self._bytes_per_page = self.manager.bytes_per_page(
+            kv_heads, head_dim, itemsize, num_layers=num_layers)
+
+    # ----- bookkeeping (delegated) -----------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.manager.capacity
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.manager.pages_in_use
+
+    @property
+    def hwm(self) -> int:
+        return self.manager.hwm
+
+    def fragmentation(self) -> float:
+        return self.manager.fragmentation()
+
+    def record(self) -> None:
+        """Push the pool's live footprint into the ledger."""
+        if self.ledger is not None and self._bytes_per_page:
+            self.ledger.record(self.tier, self.tensor_class,
+                               self.manager.pages_in_use
+                               * self._bytes_per_page)
+
+    # ----- host-side pools (experiments/tests) ------------------------------
+    def alloc_seq(self, uid: int) -> None:
+        self.manager.pages.setdefault(uid, [])
+        self.manager.lens.setdefault(uid, 0)
+
+    def append_block(self, uid: int, k_blk: jax.Array,
+                     v_blk: jax.Array) -> None:
+        """k_blk/v_blk: (T, kv_heads, head_dim) — T tokens appended with a
+        single batched scatter per pool."""
+        if self.k is None:
+            raise ValueError("host-side pools not initialised; construct "
+                             "with kv_heads/head_dim")
+        t = k_blk.shape[0]
+        pos0 = self.manager.lens.get(uid, 0)
+        self.manager.ensure(uid, pos0 + t)
+        table = jnp.asarray(self.manager.pages[uid], jnp.int32)
+        pos = pos0 + jnp.arange(t)
+        pids = table[pos // self.page_size]
+        slots = pos % self.page_size
+        self.k = self.k.at[pids, slots].set(k_blk.astype(self.k.dtype))
+        self.v = self.v.at[pids, slots].set(v_blk.astype(self.v.dtype))
+        self.manager.lens[uid] = pos0 + t
+        self.record()
+
+    def free_seq(self, uid: int) -> None:
+        self.manager.free_slot(uid)
+        self.record()
+
+    def batch_tables(self, uids: list[int], n_pages: int) -> jax.Array:
+        return jnp.asarray(self.manager.table(uids, n_pages), jnp.int32)
+
+    def batch_lens(self, uids: list[int]) -> jax.Array:
+        return jnp.asarray([self.manager.lens.get(u, 0) for u in uids],
+                           jnp.int32)
+
+
+@dataclasses.dataclass
+class TopKExpertPrefetch:
+    """MoE expert paging: banks at rest in the remote tier, only routed
+    rows local.
+
+    The expert banks (``wi``/``wg``/``wo``, each with a leading expert
+    axis) are the workload class where disaggregated memory pays off
+    most: a top-k router touches k of E experts per token, so decode
+    needs only ``tokens x k`` rows (+ one in-flight staging row per
+    bank) in local memory — ``(top_k + 1) / num_experts`` of the dense
+    footprint for single-slot decode.  Routing is data-dependent, so
+    unlike layer weights there is no lookahead window: the gather *is*
+    the prefetch, issued as soon as the router's top-k lands.
+    """
+
+    num_experts: int
+    top_k: int
+    bank_keys: tuple[str, ...] = ("wi", "wg", "wo")
+    tier: str = tiers.REMOTE
+    ledger: MemoryLedger | None = None
+    tensor_class = "expert_weights"
+
+    def matches(self, path: str) -> bool:
+        """Leaf-path selector for expert-bank leaves inside a stacked
+        layer pytree (``...['moe']['wi']`` etc.)."""
+        return "moe" in path and any(path.endswith(f"['{k}']")
+                                     for k in self.bank_keys)
+
+    def place(self, tree: Any) -> Any:
+        if self.ledger is not None:
+            self.ledger.record(self.tier, self.tensor_class,
+                               tree_bytes(tree))
+        return tiers.host_put(tree)
+
+    def resident_bytes(self, banks: dict, num_rows: int) -> int:
+        """Local bytes the gather keeps resident: ``num_rows`` routed
+        rows + 1 staging row per bank (the in-flight fetch)."""
+        total = 0
+        for k in self.bank_keys:
+            bank = banks[k]
+            row = tree_bytes(bank) // max(bank.shape[0], 1)
+            total += (min(num_rows, bank.shape[0]) + 1) * row
+        return total
+
+    def gather(self, banks: dict, ids: jax.Array) -> dict:
+        """Page in the routed expert rows: ``ids`` (N,) expert indices
+        (duplicates fine — XLA gathers each row once per reference).
+        Returns ``{key: (N, ...)}`` local-resident rows.  Residency is
+        shape-derived, so it is recorded at trace time."""
+        n = int(ids.shape[0])
+        if self.ledger is not None:
+            self.ledger.record(tiers.LOCAL, self.tensor_class,
+                               self.resident_bytes(banks, n))
+        return {k: tiers.page_in(jnp.take(banks[k], ids, axis=0))
+                for k in self.bank_keys}

@@ -1,0 +1,187 @@
+"""Memory-tier registry: the FengHuang hierarchy resolved per backend.
+
+Maps the paper's multi-tier shared-memory hierarchy onto JAX memory
+kinds:
+
+* **local tier**  = ``memory_kind="device"`` (HBM),
+* **remote tier** = the best host-side kind the backend exposes —
+  ``pinned_host`` (host DRAM behind the DMA engine; the TAB-attached
+  LPDDR6 pool in the paper's node) on GPU/TPU, ``unpinned_host`` on the
+  CPU backend (where local == remote, so paging degenerates to the
+  identity while keeping every transform's semantics intact).
+
+Resolution is cached **per backend** in a :class:`TierRegistry` — unlike
+the old module-level ``lru_cache`` in ``core.pager`` it is invalidated
+by :func:`reset` (used by tests and by anything that swaps the default
+backend mid-process, e.g. ``jax.config.update("jax_platform_name", …)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Canonical tier names used across policies, the ledger and BENCH JSON.
+LOCAL = "local"
+REMOTE = "remote"
+
+LOCAL_KIND = "device"
+REMOTE_KIND = "pinned_host"
+
+# Host-side kinds that can back the FengHuang remote tier, best first.
+_HOST_KINDS = ("pinned_host", "unpinned_host")
+
+try:  # public since jax 0.5
+    from jax.sharding import TransferToMemoryKind as _TransferToMemoryKind
+except ImportError:  # pragma: no cover - version specific
+    try:
+        from jax._src.sharding_impls import (
+            TransferToMemoryKind as _TransferToMemoryKind)
+    except ImportError:
+        _TransferToMemoryKind = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Tier:
+    """One level of the hierarchy: a logical name bound to the memory
+    kind that backs it on the current backend (None = unavailable)."""
+
+    name: str
+    kind: str | None
+
+    @property
+    def available(self) -> bool:
+        return self.kind is not None
+
+
+class TierRegistry:
+    """Backend-scoped tier resolution.
+
+    ``registry().local`` / ``.remote`` resolve lazily against the
+    *current* default backend and are re-resolved after :func:`reset`
+    or when the default backend changes — fixing the stale module-level
+    ``lru_cache`` the old ``core.pager`` carried."""
+
+    def __init__(self) -> None:
+        self._tiers: dict[str, dict[str, Tier]] = {}
+
+    def _backend(self) -> str:
+        try:
+            return jax.default_backend()
+        except Exception:  # pragma: no cover - no backend at all
+            return "<none>"
+
+    def _resolve(self, backend: str) -> dict[str, Tier]:
+        try:
+            kinds = frozenset(
+                m.kind for m in jax.devices()[0].addressable_memories())
+        except Exception:  # pragma: no cover - platform specific
+            kinds = frozenset()
+        local = LOCAL_KIND if LOCAL_KIND in kinds else None
+        if local is None:
+            try:
+                local = jax.devices()[0].default_memory().kind
+            except Exception:  # pragma: no cover - platform specific
+                local = None
+        remote = next((k for k in _HOST_KINDS if k in kinds), None)
+        return {LOCAL: Tier(LOCAL, local), REMOTE: Tier(REMOTE, remote)}
+
+    def tiers(self) -> dict[str, Tier]:
+        backend = self._backend()
+        if backend not in self._tiers:
+            self._tiers[backend] = self._resolve(backend)
+        return self._tiers[backend]
+
+    @property
+    def local(self) -> Tier:
+        return self.tiers()[LOCAL]
+
+    @property
+    def remote(self) -> Tier:
+        return self.tiers()[REMOTE]
+
+    def reset(self) -> None:
+        """Drop every cached resolution (tests; backend swaps)."""
+        self._tiers.clear()
+
+
+_REGISTRY = TierRegistry()
+
+
+def registry() -> TierRegistry:
+    return _REGISTRY
+
+
+def reset() -> None:
+    """Invalidate the process-wide tier registry."""
+    _REGISTRY.reset()
+
+
+def resolved_local_kind() -> str | None:
+    """The memory kind backing the local tier on this backend."""
+    return _REGISTRY.local.kind
+
+
+def resolved_remote_kind() -> str | None:
+    """The memory kind backing the remote tier on this backend."""
+    return _REGISTRY.remote.kind
+
+
+def supports_memory_spaces() -> bool:
+    """True if the backend exposes a host memory kind the remote tier can
+    live in (distinct from HBM on GPU/TPU; aliased with it on CPU)."""
+    return _REGISTRY.remote.available
+
+
+# ---------------------------------------------------------------------------
+# Placement primitives
+# ---------------------------------------------------------------------------
+
+def remote_sharding(mesh, pspec: P) -> NamedSharding:
+    """NamedSharding in the FengHuang remote tier."""
+    return NamedSharding(mesh, pspec, memory_kind=REMOTE_KIND)
+
+
+def local_sharding(mesh, pspec: P) -> NamedSharding:
+    return NamedSharding(mesh, pspec, memory_kind=LOCAL_KIND)
+
+
+def to_remote(tree: Any, mesh, pspec_tree: Any) -> Any:
+    """Move a pytree of arrays into the remote tier (sharded)."""
+    return jax.tree.map(
+        lambda x, ps: jax.device_put(x, remote_sharding(mesh, ps)),
+        tree, pspec_tree)
+
+
+def _put_kind(x: jax.Array, kind: str | None) -> jax.Array:
+    if kind is None:
+        return x
+    if isinstance(x, jax.core.Tracer):
+        if _TransferToMemoryKind is None:  # pragma: no cover - old jax
+            return x
+        return jax.device_put(x, _TransferToMemoryKind(kind))
+    return jax.device_put(x, x.sharding.with_memory_kind(kind))
+
+
+def page_in(tree: Any) -> Any:
+    """Fetch a pytree from the remote tier into local (device) memory.
+
+    Traceable: inside jit this lowers to an async H2D copy that XLA
+    schedules concurrently with unrelated compute (the paging stream).
+    """
+    return jax.tree.map(lambda x: _put_kind(x, resolved_local_kind()), tree)
+
+
+def page_out(tree: Any) -> Any:
+    """Evict a pytree to the remote tier (write-back)."""
+    return jax.tree.map(lambda x: _put_kind(x, resolved_remote_kind()), tree)
+
+
+def host_put(tree: Any) -> Any:
+    """Eagerly place a pytree in the remote tier (single-device helper for
+    examples/tests; sharded placement goes through :func:`to_remote`)."""
+    return jax.tree.map(lambda x: _put_kind(jnp.asarray(x),
+                                            resolved_remote_kind()), tree)

@@ -40,7 +40,7 @@ class DecodeState:
 
     Donation contract: a decode loop *consumes* its ``(cache, state)``
     arguments.  Callers jit the loop with ``donate_argnums`` on both (see
-    :func:`repro.core.pager.donating_jit`) so XLA aliases the KV cache and
+    :func:`repro.memory.donating_jit`) so XLA aliases the KV cache and
     state buffers in place; the donated inputs are dead after the call and
     must not be reused.
     """
@@ -79,10 +79,16 @@ jax.tree_util.register_dataclass(
 
 @dataclasses.dataclass(frozen=True)
 class PagerPolicy:
-    """FengHuang paging policy carried in the model config."""
+    """FengHuang paging policy carried in the model config (resolved into
+    a residency-policy matrix by ``repro.memory.MemoryOrchestrator.plan``).
+
+    ``page_experts`` keeps MoE expert banks at rest in the remote tier
+    and pages in only the routed (top-k) rows per decode block — no-op
+    for families without experts."""
     enabled: bool = False
     lookahead: int = 1
     offload_kv: bool = False
+    page_experts: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

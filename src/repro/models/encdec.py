@@ -16,15 +16,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import pager
 from repro.models import layers as L
 from repro.models.base import BATCH_AXES, ModelConfig, split_keys
-from repro.models.transformer import _pager_cfg
+from repro.memory import MemoryOrchestrator
 
 
 class EncDecLM:
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
+        self.mem = MemoryOrchestrator.plan(cfg)
 
     # ----- params -------------------------------------------------------
     def _enc_layer(self, key) -> dict:
@@ -87,8 +87,8 @@ class EncDecLM:
                                    L.rmsnorm(h, lp["ln2"], cfg.norm_eps))
             return h, None
 
-        h, _ = pager.paged_scan(body, frames.astype(cfg.dtype),
-                                params["enc_layers"], config=_pager_cfg(cfg))
+        h, _ = self.mem.layer_scan(body, frames.astype(cfg.dtype),
+                                params["enc_layers"])
         return L.rmsnorm(h, params["enc_ln"], cfg.norm_eps)
 
     # ----- decoder blocks ---------------------------------------------------
@@ -123,8 +123,7 @@ class EncDecLM:
                 run = jax.checkpoint(run)
             return run(h), None
 
-        x, _ = pager.paged_scan(body, x, params["dec_layers"],
-                                config=_pager_cfg(cfg))
+        x, _ = self.mem.layer_scan(body, x, params["dec_layers"])
         return L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
 
     def forward(self, params: dict, tokens: jax.Array,
@@ -168,8 +167,8 @@ class EncDecLM:
                        L.to_cache_layout(enc_kv[0]),
                        L.to_cache_layout(enc_kv[1]))
 
-        x, (k, v, xk, xv) = pager.paged_scan(
-            body, x, params["dec_layers"], config=_pager_cfg(cfg))
+        x, (k, v, xk, xv) = self.mem.layer_scan(
+            body, x, params["dec_layers"])
         cache = {
             "k": jax.lax.dynamic_update_slice_in_dim(
                 cache["k"], k.astype(cache["k"].dtype), 0, axis=3),
@@ -206,10 +205,10 @@ class EncDecLM:
             return h, (k0, v0)
 
         # caches read-only in the scan; one batched write afterwards.
-        x, (k_new, v_new) = pager.paged_scan(
+        x, (k_new, v_new) = self.mem.layer_scan(
             body, x, params["dec_layers"],
             xs=(cache["k"], cache["v"], cache["xk"], cache["xv"]),
-            config=_pager_cfg(cfg), page_xs=cfg.pager.offload_kv)
+            page_xs=cfg.pager.offload_kv)
         bidx = jnp.arange(b)
         cache = {
             "k": cache["k"].at[:, bidx, :, cur_pos].set(

@@ -18,10 +18,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import pager
 from repro.models import layers as L
 from repro.models.base import ModelConfig, dense_init, split_keys
-from repro.models.transformer import _pager_cfg
+from repro.memory import MemoryOrchestrator
 
 RGLRU_C = 8.0
 
@@ -276,6 +275,7 @@ class GroupedLM:
 
     def __init__(self, cfg: ModelConfig, kinds: BlockKinds | None = None):
         self.cfg = cfg
+        self.mem = MemoryOrchestrator.plan(cfg)
         self.kinds = kinds or BlockKinds(cfg)
         plen = len(cfg.block_pattern)
         assert plen > 0, "GroupedLM needs cfg.block_pattern"
@@ -369,8 +369,7 @@ class GroupedLM:
                 run = jax.checkpoint(run)
             return run(h), None
 
-        x, _ = pager.paged_scan(body, x, params["groups"],
-                                config=_pager_cfg(cfg))
+        x, _ = self.mem.layer_scan(body, x, params["groups"])
         for i, kind in enumerate(self.tail):
             x = self.kinds.train(kind, params["tail"][f"t{i}"], x, positions)
         return L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
@@ -395,9 +394,8 @@ class GroupedLM:
             return h, new_states
 
         group_cache = {k: v for k, v in cache.items() if k.startswith("b")}
-        x, new_group_cache = pager.paged_scan(
-            body, x, params["groups"], xs=group_cache,
-            config=_pager_cfg(cfg))
+        x, new_group_cache = self.mem.layer_scan(
+            body, x, params["groups"], xs=group_cache)
         new_cache = dict(new_group_cache)
         for i, kind in enumerate(self.tail):
             x, st = self.kinds.prefill(kind, params["tail"][f"t{i}"], x,
@@ -422,9 +420,9 @@ class GroupedLM:
         group_cache = {k: v for k, v in cache.items() if k.startswith("b")}
         # caches are READ-ONLY inside the scan; token updates come out as
         # small ys and are merged in batched post-scan writes (§Perf A').
-        x, updates = pager.paged_scan(
+        x, updates = self.mem.layer_scan(
             body, x, params["groups"], xs=group_cache,
-            config=_pager_cfg(cfg), page_xs=cfg.pager.offload_kv)
+            page_xs=cfg.pager.offload_kv)
         new_cache = {}
         for i, kind in enumerate(cfg.block_pattern):
             key = f"b{i}"

@@ -15,6 +15,13 @@ those are single shared-memory hops (tab schedule).
 FengHuang fit (DESIGN.md §4): inactive experts never leave the remote tier;
 with paging enabled the per-layer expert bank pages through local memory
 while other layers compute — the paper's §2.1 motivation verbatim.
+
+With ``PagerPolicy.page_experts`` the banks go one step further: they
+stay at rest in the remote tier even while their layer computes, and
+:func:`moe_ffn_topk` pages in only the rows the router selects (the
+``TopKExpertPrefetch`` residency policy) — resident expert bytes drop to
+``(tokens·top_k + 1) / num_experts`` of the dense bank, the
+capacity-bound regime where disaggregated-memory designs pay off most.
 """
 from __future__ import annotations
 
@@ -201,6 +208,54 @@ def moe_ffn_ep(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
 L_NEG = -1e30
 
 
+# ---------------------------------------------------------------------------
+# Expert-tier paging (repro.memory TopKExpertPrefetch policy): banks at
+# rest in the remote tier, only routed rows paged in.
+# ---------------------------------------------------------------------------
+
+def moe_ffn_topk(p: dict, x: jax.Array, cfg: ModelConfig, mem) -> jax.Array:
+    """MoE FFN that touches only the routed experts.
+
+    x: (B, S, d).  Routing (logits -> softmax -> top-k -> capacity keep)
+    is identical to :func:`moe_ffn`; the expert GEMMs are computed
+    per-(token, choice) against ``tokens x k`` gathered bank rows
+    (``mem.gather_experts`` — a page-in of just those rows when the
+    banks live in the remote tier) instead of dense (E, C, d) buffers.
+    Single-device path: expert parallelism keeps the EP all-to-all
+    route; this one exists so expert weights can stay remote.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.padded_experts, cfg.top_k
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    col = jnp.arange(e)
+    logits = jnp.where(col[None, :] < cfg.num_experts, logits, L.NEG_INF)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_g, top_i = jax.lax.top_k(gates, k)                   # (T, k)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    # capacity keep — bit-compatible with the dense dispatch's dropping
+    cap = capacity(t, cfg.num_experts, k, cfg.capacity_factor)
+    oh = jax.nn.one_hot(top_i, e, dtype=jnp.int32)
+    pos = jnp.cumsum(oh.reshape(t * k, e), axis=0) - 1
+    pos_in_e = jnp.take_along_axis(
+        pos.reshape(t, k, e), top_i[..., None], axis=-1)[..., 0]
+    keep = pos_in_e < cap                                     # (T, k)
+
+    ids = top_i.reshape(-1)                                   # (T*k,)
+    rows = mem.gather_experts(p, ids)      # each (T*k, d, f) / (T*k, f, d)
+    x_rep = jnp.repeat(xt, k, axis=0)                         # (T*k, d)
+    h = jax.nn.silu(jnp.einsum("td,tdf->tf", x_rep, rows["wg"])) * \
+        jnp.einsum("td,tdf->tf", x_rep, rows["wi"])
+    out_tok = jnp.einsum("tf,tfd->td", h, rows["wo"])         # (T*k, d)
+    w = (top_g.reshape(-1) * keep.reshape(-1)).astype(x.dtype)
+    combined = (out_tok.astype(x.dtype) * w[:, None]).reshape(t, k, d) \
+        .sum(axis=1)
+    return combined.reshape(b, s, d)
+
+
 class MoELM(DenseLM):
     """DenseLM with the FFN swapped for a top-k expert bank."""
 
@@ -222,6 +277,13 @@ class MoELM(DenseLM):
         }
 
     def ffn(self, lp: dict, x: jax.Array) -> jax.Array:
+        # expert paging first: banks are at rest in the remote tier, so
+        # the dense (E, C, d) dispatch would drag the whole bank through
+        # local memory — gather only the routed rows instead.  (EP over a
+        # live mesh supersedes it: sharded banks ARE distributed memory.)
+        if self.mem.expert_policy is not None \
+                and not _moe_ep_available(self.cfg, x.shape[1]):
+            return moe_ffn_topk(lp["moe"], x, self.cfg, self.mem)
         if _moe_ep_available(self.cfg, x.shape[1]):
             return moe_ffn_ep(lp["moe"], x, self.cfg)
         return moe_ffn(lp["moe"], x, self.cfg)

@@ -2,30 +2,26 @@
 and the llava backbone) with FengHuang paging as a first-class option.
 
 Layers are stacked on a leading L axis and executed with
-:func:`repro.core.pager.paged_scan`, so the same model definition runs
-shared-nothing (weights resident in HBM) or FengHuang-paged (weights and
-optionally KV in the remote tier, double-buffered prefetch).
+:func:`repro.memory.orchestrator.paged_scan`, so the same model
+definition runs shared-nothing (weights resident in HBM) or
+FengHuang-paged (weights and optionally KV in the remote tier,
+double-buffered prefetch).  Every model owns a
+:class:`repro.memory.MemoryOrchestrator` (``self.mem``) planned from its
+config's pager policy; all layer scans route through it.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import pager
+from repro.memory import MemoryOrchestrator
 from repro.models import layers as L
 from repro.models.base import (ModelConfig, BATCH_AXES, DecodeState,
                                split_keys)
 from repro.runtime.sharding import SEQ_SHARDED_ACTS, maybe_constraint
-
-
-def _pager_cfg(cfg: ModelConfig) -> pager.PagerConfig:
-    return pager.PagerConfig(enabled=cfg.pager.enabled,
-                             lookahead=cfg.pager.lookahead,
-                             offload_kv=cfg.pager.offload_kv)
 
 
 class DenseLM:
@@ -33,6 +29,7 @@ class DenseLM:
 
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
+        self.mem = MemoryOrchestrator.plan(cfg)
 
     # ----- params -----------------------------------------------------------
     def init_layer(self, key) -> dict:
@@ -139,8 +136,7 @@ class DenseLM:
                 fn = jax.checkpoint(fn)
             return fn(lp, h, positions), None
 
-        x, _ = pager.paged_scan(body, x, params["layers"],
-                                config=_pager_cfg(cfg))
+        x, _ = self.mem.layer_scan(body, x, params["layers"])
         return L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
 
     def forward(self, params: dict, tokens: jax.Array,
@@ -217,8 +213,7 @@ class DenseLM:
             return h, (L.to_cache_layout(k[:, -cs:]),
                        L.to_cache_layout(v[:, -cs:]))
 
-        x, kv = pager.paged_scan(body, x, params["layers"],
-                                 config=_pager_cfg(cfg))
+        x, kv = self.mem.layer_scan(body, x, params["layers"])
         k_new, v_new = kv
         if cfg.sliding_window > 0 and cs == cfg.sliding_window:
             # rolling cache: position p lives at slot p % W.  The last cs
@@ -268,8 +263,7 @@ class DenseLM:
             # below wants seq-major
             return self.block_prefill(lp, h, positions)
 
-        x, (k_new, v_new) = pager.paged_scan(body, x, params["layers"],
-                                             config=_pager_cfg(cfg))
+        x, (k_new, v_new) = self.mem.layer_scan(body, x, params["layers"])
         page = cache["k_pages"].shape[2]
         n = pages.shape[1]
         pad = n * page - seq
@@ -329,10 +323,9 @@ class DenseLM:
         # no per-layer slice copies / write-back round trips (§Perf A').
         xs = ((cache["k"], cache["v"], cache["k_scale"], cache["v_scale"])
               if cfg.kv_quant else (cache["k"], cache["v"]))
-        x, (k_new, v_new) = pager.paged_scan(
+        x, (k_new, v_new) = self.mem.layer_scan(
             body, x, params["layers"], xs=xs,
-            config=_pager_cfg(cfg), page_xs=cfg.pager.offload_kv,
-            unroll=cfg.decode_unroll)
+            page_xs=cfg.pager.offload_kv, unroll=cfg.decode_unroll)
         slot = self._cache_slot(cache["k"].shape[3], cur_pos)
         bidx = jnp.arange(b)
         # advanced-index set: value layout (B, L, Hkv, hd)
@@ -376,9 +369,8 @@ class DenseLM:
             cv = cv.at[bidx, :, slot].set(v0.astype(cv.dtype))
             return h, (ck, cv)
 
-        x, (ck, cv) = pager.paged_scan_cache(
-            body, x, params["layers"], (cache["k"], cache["v"]),
-            config=_pager_cfg(cfg))
+        x, (ck, cv) = self.mem.layer_scan_cache(
+            body, x, params["layers"], (cache["k"], cache["v"]))
         return x, {"k": ck, "v": cv}
 
     def _decode_pool(self, params: dict, x: jax.Array, cache: dict,
@@ -412,9 +404,9 @@ class DenseLM:
                 vp = vp.at[pids, slots].set(v0.astype(vp.dtype))
                 return h, (kp, vp)
 
-            x, (kp, vp) = pager.paged_scan_cache(
+            x, (kp, vp) = self.mem.layer_scan_cache(
                 body, x, params["layers"],
-                (cache["k_pages"], cache["v_pages"]), config=_pager_cfg(cfg))
+                (cache["k_pages"], cache["v_pages"]))
             return x, {"k_pages": kp, "v_pages": vp}
 
         def body(h, lp, cl):
@@ -422,10 +414,10 @@ class DenseLM:
                                                 cur_pos)
             return h, (k0, v0)
 
-        x, (k_new, v_new) = pager.paged_scan(
+        x, (k_new, v_new) = self.mem.layer_scan(
             body, x, params["layers"],
             xs=(cache["k_pages"], cache["v_pages"]),
-            config=_pager_cfg(cfg), unroll=cfg.decode_unroll)
+            unroll=cfg.decode_unroll)
         # one scatter per pool for all L layers and B slots — the fix for
         # the old host-side PagePool.append's dispatch-per-token writes
         cache = {"k_pages": cache["k_pages"].at[:, pids, slots].set(
@@ -475,7 +467,7 @@ def decode_loop(model, params: dict, cache: dict, state: DecodeState, *,
 
     Returns ``(tokens (B, num_steps), valid (B, num_steps), cache,
     state)``.  Callers should jit this with the cache and state donated
-    (:func:`repro.core.pager.donating_jit`) so the KV cache is aliased in
+    (:func:`repro.memory.donating_jit`) so the KV cache is aliased in
     place across dispatches — the decode-side donation contract of
     :class:`repro.models.base.DecodeState`.
     """

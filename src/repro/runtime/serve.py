@@ -36,8 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pager
-from repro.kernels.paged_attention.ops import BlockManager
+from repro import memory
+from repro.memory import MemoryOrchestrator
 from repro.models.base import DecodeState
 from repro.models.transformer import (decode_loop, sample_tokens,
                                       vocab_mask_logits)
@@ -84,7 +84,7 @@ def make_decode_loop(model, *, block_size: int, temperature: float = 0.0,
     def loop(params, cache, state):
         return decode_loop(model, params, cache, state, num_steps=block_size,
                            temperature=temperature, eos_id=eos_id)
-    return pager.donating_jit(loop, donate_argnums=(1, 2) if donate else ())
+    return memory.donating_jit(loop, donate_argnums=(1, 2) if donate else ())
 
 
 def _bucket(n: int, quantum: int = 8) -> int:
@@ -130,25 +130,40 @@ class BatchedServer:
         if paged is None:
             paged = getattr(model, "supports_paged_kv", lambda: False)()
         self.paged = bool(paged)
+        # the model's orchestrator (shared ledger: weight windows, expert
+        # residency and KV pool report into one per-tier accounting);
+        # models without one get a fresh plan from their config.
+        self.mem: MemoryOrchestrator = (
+            getattr(model, "mem", None) or MemoryOrchestrator.plan(model.cfg))
         self._decode_loop = make_decode_loop(
             model, block_size=block_size, temperature=temperature,
             eos_id=eos_id)
-        self._admit_step = pager.donating_jit(self._make_admit_step(),
-                                              donate_argnums=(2, 3))
+        self._admit_step = self.mem.donating_jit(self._make_admit_step(),
+                                                 donate_argnums=(2, 3))
         # live slot state — donated through every dispatch
         if self.paged:
-            self.page_size = page_size or model.cfg.page_size
+            cfg = model.cfg
+            self.page_size = page_size or cfg.page_size
             per_seq = -(-max_seq // self.page_size)
             self.num_pages = num_pages or batch_size * per_seq + 1
-            self.manager = BlockManager(self.num_pages, self.page_size)
-            self.cache = pager.place_kv_pool(
-                model.init_paged_cache(self.num_pages, self.page_size),
-                pager.PagerConfig(enabled=model.cfg.pager.enabled,
-                                  offload_kv=model.cfg.pager.offload_kv))
+            self.kv = self.mem.block_pool(self.num_pages, self.page_size)
+            self.manager = self.kv.manager
+            self.kv.bind_kv_shape(cfg.padded_kv_heads, cfg.head_dim,
+                                  jnp.dtype(cfg.dtype).itemsize,
+                                  cfg.num_layers)
+            self.cache = self.mem.place_kv_pool(
+                model.init_paged_cache(self.num_pages, self.page_size))
             init_pages = self._idle_pages()
         else:
+            self.kv = None
             self.manager = None
-            self.cache = model.init_cache(batch_size, max_seq)
+            # dense slab: resident at full size regardless of occupancy
+            # (capacity == residency), in the kv_pool policy's tier
+            self.cache = self.mem.place_kv_pool(
+                model.init_cache(batch_size, max_seq))
+            self.mem.ledger.record(
+                self.mem.policies["kv_pool"].tier, "kv_pool",
+                memory.tree_bytes(self.cache))
             init_pages = None
         self.state = DecodeState.init(batch_size, jax.random.PRNGKey(seed),
                                       pages=init_pages)
@@ -417,6 +432,7 @@ class BatchedServer:
         if self.paged:
             self.stats["kv_pages_in_use"] = self.manager.pages_in_use
             self.stats["kv_pages_hwm"] = self.manager.hwm
+            self.kv.record()               # per-tier ledger accounting
             self.state = dataclasses.replace(self.state,
                                              pages=self._idle_pages())
         return finished
@@ -441,7 +457,7 @@ class BatchedServer:
         """Live KV footprint: allocated pages only (paged) or the whole
         dense slab (which is resident regardless of occupancy)."""
         if not self.paged:
-            return pager.tree_bytes(self.cache)
+            return memory.tree_bytes(self.cache)
         kp = self.cache["k_pages"]
         per_page = self.manager.bytes_per_page(
             kp.shape[3], kp.shape[4], kp.dtype.itemsize,
@@ -449,4 +465,8 @@ class BatchedServer:
         return self.manager.pages_in_use * per_page
 
     def kv_bytes_capacity(self) -> int:
-        return pager.tree_bytes(self.cache)
+        return memory.tree_bytes(self.cache)
+
+    def tier_stats(self) -> dict:
+        """Per-tier residency snapshot (feeds ``BENCH_serve.json``)."""
+        return self.mem.ledger.snapshot()

@@ -19,7 +19,7 @@ from typing import Any
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.pager import REMOTE_KIND
+from repro.memory.tiers import REMOTE_KIND
 from repro.models.base import BATCH_AXES
 
 PAGEABLE_GROUPS = ("layers", "groups", "dec_layers", "enc_layers")

@@ -108,17 +108,19 @@ def test_paged_attention_sweep(b, hkv, g, npages, page, dtype, extra):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
-def test_page_pool_lifecycle():
-    pool = pa.PagePool(num_pages=8, page_size=4, kv_heads=2, head_dim=8)
+def test_block_pool_lifecycle():
+    from repro.memory import BlockPoolResidency
+    pool = BlockPoolResidency(num_pages=8, page_size=4, kv_heads=2,
+                              head_dim=8)
     pool.alloc_seq(1)
-    for i in range(6):   # crosses a page boundary
-        pool.append(1, jnp.full((2, 8), float(i)), jnp.full((2, 8), -float(i)))
-    assert pool.lens[1] == 6
-    assert len(pool.tables[1]) == 2
+    k_blk = jnp.stack([jnp.full((2, 8), float(i)) for i in range(6)])
+    pool.append_block(1, k_blk, -k_blk)   # 6 tokens cross a page boundary
+    assert pool.manager.lens[1] == 6
+    assert len(pool.manager.pages[1]) == 2
     t = pool.batch_tables([1], 3)
     assert t.shape == (1, 3)
     pool.free_seq(1)
-    assert 1 not in pool.tables
+    assert 1 not in pool.manager.pages
 
 
 # ---------------------------------------------------------------------------

@@ -12,6 +12,7 @@ from repro.configs import build_model, get_config
 from repro.kernels.paged_attention import ops as pa
 from repro.kernels.paged_attention.ops import BlockManager
 from repro.kernels.paged_attention.ref import gather_pages
+from repro.memory import BlockPoolResidency
 from repro.models.base import DecodeState
 from repro.models.layers import decode_attention, paged_decode_attention
 from repro.models.transformer import decode_loop
@@ -178,21 +179,27 @@ def test_block_manager_exhaustion_and_null_page():
     assert tab[0, 2] == 0                   # width padding -> null page
 
 
-def test_page_pool_wrapper_batched_append():
-    """The compat PagePool: append_block == N appends, one scatter."""
+def test_block_pool_residency_batched_append():
+    """Host-side BlockPoolResidency pools (the deleted PagePool's role):
+    chunked append_block == one append_block, page-boundary crossing."""
     kw = dict(num_pages=8, page_size=4, kv_heads=2, head_dim=8)
-    a, b = pa.PagePool(**kw), pa.PagePool(**kw)
+    a = BlockPoolResidency(**kw)
+    b = BlockPoolResidency(**kw)
     a.alloc_seq(1)
     b.alloc_seq(1)
     blk_k = jnp.asarray(RNG.randn(6, 2, 8), jnp.bfloat16)
     blk_v = jnp.asarray(RNG.randn(6, 2, 8), jnp.bfloat16)
-    for i in range(6):
-        a.append(1, blk_k[i], blk_v[i])
+    for lo, hi in ((0, 2), (2, 3), (3, 6)):      # three uneven chunks
+        a.append_block(1, blk_k[lo:hi], blk_v[lo:hi])
     b.append_block(1, blk_k, blk_v)
-    assert a.lens[1] == b.lens[1] == 6
-    assert a.tables[1] == b.tables[1]
+    assert a.manager.lens[1] == b.manager.lens[1] == 6
+    assert a.manager.pages[1] == b.manager.pages[1]
     np.testing.assert_array_equal(np.asarray(a.k, np.float32),
                                   np.asarray(b.k, np.float32))
+    assert a.batch_lens([1]).tolist() == [6]
+    assert a.batch_tables([1], 3).shape == (1, 3)
+    a.free_seq(1)
+    assert 1 not in a.manager.pages
 
 
 # ---------------------------------------------------------------------------
