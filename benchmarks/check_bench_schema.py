@@ -1,12 +1,21 @@
-"""Schema assertion for ``BENCH_serve.json`` — keeps the serving perf
-record machine-readable as the benchmark evolves (CI gate).
+"""Schema + regression assertions for ``BENCH_serve.json`` — keeps the
+serving perf record machine-readable as the benchmark evolves (CI gate).
 
     python benchmarks/check_bench_schema.py [path]
 
-Asserts the top-level keys, the ``kv_memory`` sub-schema, and the
-per-tier residency block (every tier must carry ``in_use_bytes`` /
-``hwm_bytes`` / ``by_class``).  Exits nonzero with a readable message on
-any violation.
+Asserts the top-level keys, the ``kv_memory`` / ``pipeline`` /
+``prefix_cache`` sub-schemas, and the per-tier residency blocks (every
+tier must carry ``in_use_bytes`` / ``hwm_bytes`` / ``by_class``; the
+``tiers_peak`` mid-flight snapshot must be non-degenerate — a live
+``kv_pool`` class).  On top of the schema it gates the tentpole's
+headline numbers so they cannot silently rot:
+
+* ``server_paged`` tokens/s must stay >= 0.95x ``server_dense``;
+* ``bytes_per_active_token_paged`` must not exceed the dense value;
+* the prefix-cache row must show a real residency reduction with
+  bit-identical tokens.
+
+Exits nonzero with a readable message on any violation.
 """
 from __future__ import annotations
 
@@ -17,8 +26,8 @@ from pathlib import Path
 TOP_KEYS = {
     "model", "batch", "prompt", "new_tokens", "block_size", "max_seq",
     "tokens_per_s", "speedup_block_vs_per_token",
-    "paged_vs_dense_tokens_identical", "kv_memory", "tiers",
-    "attention_scaling",
+    "paged_vs_dense_tokens_identical", "kv_memory", "pipeline",
+    "prefix_cache", "tiers", "tiers_peak", "attention_scaling",
 }
 TOKENS_PER_S_KEYS = {"per_token_dense", "block_dense", "server_dense",
                      "server_paged"}
@@ -28,7 +37,19 @@ KV_MEMORY_KEYS = {
     "bytes_per_active_token_paged", "local_kv_reduction_vs_dense",
     "fragmentation_hwm_bound",
 }
+PIPELINE_KEYS = {"enabled", "max_inflight", "compiles", "host_syncs",
+                 "dispatches", "table_rebuilds", "table_delta_entries"}
+PREFIX_KEYS = {
+    "sys_prompt", "user_prompt", "new_tokens", "prefix_hits",
+    "shared_pages", "tokens_per_s_shared", "tokens_per_s_unshared",
+    "kv_hwm_bytes_shared", "kv_hwm_bytes_unshared",
+    "bytes_per_active_token_shared", "bytes_per_active_token_unshared",
+    "residency_reduction_vs_unshared", "tokens_identical_to_unshared",
+}
 TIER_KEYS = {"in_use_bytes", "hwm_bytes", "capacity_bytes", "by_class"}
+# server_paged may not drop below this fraction of server_dense (the
+# tentpole claim; headroom for CI timing noise)
+PAGED_VS_DENSE_FLOOR = 0.95
 
 
 def check(path: Path) -> list[str]:
@@ -48,24 +69,88 @@ def check(path: Path) -> list[str]:
     km_missing = KV_MEMORY_KEYS - bench.get("kv_memory", {}).keys()
     if km_missing:
         errors.append(f"missing kv_memory keys: {sorted(km_missing)}")
+    pl_missing = PIPELINE_KEYS - bench.get("pipeline", {}).keys()
+    if pl_missing:
+        errors.append(f"missing pipeline keys: {sorted(pl_missing)}")
+    px_missing = PREFIX_KEYS - bench.get("prefix_cache", {}).keys()
+    if px_missing:
+        errors.append(f"missing prefix_cache keys: {sorted(px_missing)}")
 
-    tiers = bench.get("tiers", {})
-    if not isinstance(tiers, dict) or not tiers:
-        errors.append("tiers must be a non-empty per-tier mapping")
-    for name, t in (tiers.items() if isinstance(tiers, dict) else ()):
-        tk_missing = TIER_KEYS - (t.keys() if isinstance(t, dict) else set())
-        if tk_missing:
-            errors.append(f"tier '{name}' missing {sorted(tk_missing)}")
-        elif not isinstance(t["by_class"], dict):
-            errors.append(f"tier '{name}' by_class must be a mapping")
-        else:
-            for field in ("in_use_bytes", "hwm_bytes", "capacity_bytes"):
-                if not isinstance(t[field], int) or t[field] < 0:
-                    errors.append(
-                        f"tier '{name}' {field} must be a non-negative "
-                        f"int, got {t[field]!r}")
-    if isinstance(tiers, dict) and "local" not in tiers:
-        errors.append("tiers must include the 'local' tier")
+    for block in ("tiers", "tiers_peak"):
+        tiers = bench.get(block, {})
+        if not isinstance(tiers, dict) or not tiers:
+            errors.append(f"{block} must be a non-empty per-tier mapping")
+        for name, t in (tiers.items() if isinstance(tiers, dict) else ()):
+            tk_missing = TIER_KEYS - (t.keys() if isinstance(t, dict)
+                                      else set())
+            if tk_missing:
+                errors.append(
+                    f"{block} tier '{name}' missing {sorted(tk_missing)}")
+            elif not isinstance(t["by_class"], dict):
+                errors.append(f"{block} tier '{name}' by_class must be a "
+                              f"mapping")
+            else:
+                for field in ("in_use_bytes", "hwm_bytes", "capacity_bytes"):
+                    if not isinstance(t[field], int) or t[field] < 0:
+                        errors.append(
+                            f"{block} tier '{name}' {field} must be a "
+                            f"non-negative int, got {t[field]!r}")
+        if isinstance(tiers, dict) and "local" not in tiers:
+            errors.append(f"{block} must include the 'local' tier")
+    errors.extend(_check_peak_snapshot(bench))
+    errors.extend(_check_regressions(bench))
+    return errors
+
+
+def _check_peak_snapshot(bench: dict) -> list[str]:
+    """The mid-flight snapshot must capture live kv_pool residency —
+    the end-of-run ``tiers`` block legitimately drains to 0, so only
+    ``tiers_peak`` is gated for non-degeneracy."""
+    errors: list[str] = []
+    local = bench.get("tiers_peak", {}).get("local")
+    if not isinstance(local, dict):
+        return errors                       # shape errors reported above
+    if not isinstance(local.get("by_class"), dict):
+        return errors
+    kv = local["by_class"].get("kv_pool", 0)
+    if not isinstance(kv, int) or kv <= 0:
+        errors.append(
+            f"tiers_peak local.by_class.kv_pool must be > 0 (peak "
+            f"occupancy snapshot is degenerate), got {kv!r}")
+    if local.get("in_use_bytes", 0) <= 0:
+        errors.append("tiers_peak local.in_use_bytes must be > 0")
+    return errors
+
+
+def _check_regressions(bench: dict) -> list[str]:
+    """Perf guards for the tentpole's headline numbers."""
+    errors: list[str] = []
+    tps = bench.get("tokens_per_s", {})
+    paged, dense = tps.get("server_paged"), tps.get("server_dense")
+    if isinstance(paged, (int, float)) and isinstance(dense, (int, float)) \
+            and dense > 0 and paged < PAGED_VS_DENSE_FLOOR * dense:
+        errors.append(
+            f"server_paged ({paged} tok/s) dropped below "
+            f"{PAGED_VS_DENSE_FLOOR}x server_dense ({dense} tok/s): the "
+            f"paged serving hot path regressed")
+    km = bench.get("kv_memory", {})
+    bp, bd = (km.get("bytes_per_active_token_paged"),
+              km.get("bytes_per_active_token_dense"))
+    if isinstance(bp, (int, float)) and isinstance(bd, (int, float)) \
+            and bp > bd:
+        errors.append(
+            f"bytes_per_active_token_paged ({bp}) exceeds the dense value "
+            f"({bd}): the paged pool lost its memory advantage")
+    px = bench.get("prefix_cache", {})
+    if px:
+        if px.get("tokens_identical_to_unshared") is not True:
+            errors.append("prefix_cache tokens_identical_to_unshared must "
+                          "be true")
+        red = px.get("residency_reduction_vs_unshared", 0)
+        if not isinstance(red, (int, float)) or red <= 0:
+            errors.append(
+                f"prefix_cache residency_reduction_vs_unshared must be "
+                f"> 0, got {red!r}")
     return errors
 
 

@@ -10,13 +10,22 @@ the same requests from the device-resident page pool: identical tokens,
 KV bytes proportional to live tokens instead of ``batch × max_seq``, and
 per-step attention reads that scale with the actual sequence length.
 
+The paged server row exercises the full pipeline: device-resident page
+tables updated by per-block deltas, double-buffered dispatch (up to two
+blocks in flight), and the prefix-cache row serves a shared-system-prompt
+batch where leading prompt pages are physically shared across requests.
+
 Emits human-readable CSV rows AND writes ``BENCH_serve.json`` (cwd) with
-machine-readable tokens/s, KV-bytes-per-active-token and attention
-cost-vs-seq-len numbers so CI can track the perf trajectory.
+machine-readable tokens/s, KV-bytes-per-active-token, pipeline counters
+(``compiles`` / ``host_syncs`` / ``table_rebuilds``), a peak-occupancy
+per-tier residency snapshot and attention cost-vs-seq-len numbers so CI
+can track the perf trajectory.  ``SERVE_BENCH_SMOKE=1`` trims the repeat
+count for CI smoke runs.
 """
 from __future__ import annotations
 
 import json
+import os
 import time
 from pathlib import Path
 
@@ -34,8 +43,12 @@ BATCH = 4
 PROMPT = 8
 NEW_TOKENS = 64
 BLOCK = 32
-MAX_SEQ = 128
-REPEATS = 3          # timing = min over repeats (dispatch noise)
+MAX_SEQ = 384
+SMOKE = os.environ.get("SERVE_BENCH_SMOKE", "") == "1"
+REPEATS = 3 if SMOKE else 7   # timing = min over repeats (dispatch noise)
+SYS_PROMPT = 48               # shared system-prompt tokens (prefix bench)
+USER_PROMPT = 8               # per-request unique suffix tokens
+PREFIX_NEW_TOKENS = 32
 JSON_PATH = Path("BENCH_serve.json")
 
 
@@ -121,29 +134,98 @@ def _block_decode(model, params, prompts) -> tuple[float, int, int, list]:
     return dt, dispatches["n"] // REPEATS, syncs, outs
 
 
-def _serve_requests(model, params, *, paged: bool):
-    """Serve BATCH identical-shape requests through BatchedServer; return
-    (dt, outputs, server).  The server is warmed with one run first so
-    the timing measures the steady-state hot path, not compiles.
-    Callers pass a FRESH model per server: a server reports through its
-    model's orchestrator ledger, and two live servers on one model would
-    share (and overwrite) one kv_pool residency class."""
+def _measure_rounds(servers: list, submit_all) -> tuple[list[float], list]:
+    """Warm every server, then run REPEATS measurement rounds with the
+    servers INTERLEAVED (a noisy scheduling window hits every variant
+    instead of biasing whichever happened to be measured then); per
+    server, the timing is the min over rounds and the outputs come from
+    the last round."""
+    for s in servers:
+        submit_all(s)
+        s.run_once()                              # warm every compile
+    dts = [float("inf")] * len(servers)
+    outs: list = [None] * len(servers)
+    for _ in range(REPEATS):
+        for i, s in enumerate(servers):
+            reqs = submit_all(s)
+            t0 = time.perf_counter()
+            s.run_once()
+            dts[i] = min(dts[i], time.perf_counter() - t0)
+            outs[i] = [tuple(r.output) for r in reqs]
+    return dts, outs
+
+
+def _serve_requests(cfg, params):
+    """Serve BATCH identical-shape requests through a dense-slab and a
+    block-pool server; returns (dt_dense, dt_paged, out_dense, out_paged,
+    server_dense, server_paged).  Each server gets a FRESH model: a
+    server reports through its model's orchestrator ledger, and two live
+    servers on one model would share (and overwrite) one kv_pool
+    residency class."""
     def submit_all(server):
         rng = np.random.RandomState(5)
-        return [server.submit(rng.randint(0, model.cfg.vocab, PROMPT)
+        return [server.submit(rng.randint(0, cfg.vocab, PROMPT)
                               .astype(np.int32),
                               max_new_tokens=NEW_TOKENS)
                 for _ in range(BATCH)]
 
-    server = BatchedServer(model, params, batch_size=BATCH, max_seq=MAX_SEQ,
-                           block_size=BLOCK, paged=paged)
-    submit_all(server)
-    server.run_once()                             # warm every compile
-    reqs = submit_all(server)
-    t0 = time.perf_counter()
-    server.run_once()
-    dt = time.perf_counter() - t0
-    return dt, [tuple(r.output) for r in reqs], server
+    dense, paged = (BatchedServer(build_model(cfg), params,
+                                  batch_size=BATCH, max_seq=MAX_SEQ,
+                                  block_size=BLOCK, paged=p)
+                    for p in (False, True))
+    (dt_d, dt_p), (out_d, out_p) = _measure_rounds([dense, paged],
+                                                   submit_all)
+    return dt_d, dt_p, out_d, out_p, dense, paged
+
+
+def _serve_prefix(cfg, params):
+    """Shared-system-prompt scenario: BATCH requests whose padded
+    prompts agree on their leading whole pages.  With the prefix cache
+    on, those pages are physically shared (refcounted) and admission
+    prefills only each request's suffix; tokens must stay bit-identical
+    to the unshared server.  Returns the machine-readable comparison."""
+    sys_toks = np.random.RandomState(11).randint(
+        0, cfg.vocab, SYS_PROMPT).astype(np.int32)
+
+    def submit_all(server):
+        return [server.submit(
+            np.concatenate([sys_toks,
+                            np.full(USER_PROMPT, 100 + i, np.int32)]),
+            max_new_tokens=PREFIX_NEW_TOKENS) for i in range(BATCH)]
+
+    srv_s, srv_u = (BatchedServer(build_model(cfg), params,
+                                  batch_size=BATCH, max_seq=MAX_SEQ,
+                                  block_size=BLOCK, paged=True,
+                                  prefix_cache=pc)
+                    for pc in (True, False))
+    (dt_s, dt_u), (out_s, out_u) = _measure_rounds([srv_s, srv_u],
+                                                   submit_all)
+    assert out_s == out_u, \
+        "prefix-cached serving must emit identical tokens to unshared"
+    assert srv_s.stats["prefix_hits"] > 0, "prefix cache never hit"
+
+    per_page = srv_s.kv_bytes_capacity() // srv_s.num_pages
+    plen = srv_s._admit_plen(SYS_PROMPT + USER_PROMPT, PREFIX_NEW_TOKENS)
+    peak_tokens = BATCH * (plen + PREFIX_NEW_TOKENS - 1)
+    hwm_s, hwm_u = srv_s.manager.hwm, srv_u.manager.hwm
+    total = BATCH * PREFIX_NEW_TOKENS
+    return {
+        "sys_prompt": SYS_PROMPT, "user_prompt": USER_PROMPT,
+        "new_tokens": PREFIX_NEW_TOKENS,
+        "prefix_hits": srv_s.stats["prefix_hits"],
+        "shared_pages": srv_s.stats["prefix_shared_pages"],
+        "tokens_per_s_shared": round(total / dt_s, 1),
+        "tokens_per_s_unshared": round(total / dt_u, 1),
+        "kv_hwm_bytes_shared": hwm_s * per_page,
+        "kv_hwm_bytes_unshared": hwm_u * per_page,
+        "bytes_per_active_token_shared": round(hwm_s * per_page
+                                               / peak_tokens),
+        "bytes_per_active_token_unshared": round(hwm_u * per_page
+                                                 / peak_tokens),
+        "residency_reduction_vs_unshared": round(
+            capacity_reduction(hwm_s, hwm_u), 3),
+        "tokens_identical_to_unshared": True,
+    }
 
 
 def _attention_scaling(model) -> dict:
@@ -154,7 +236,7 @@ def _attention_scaling(model) -> dict:
     cfg = model.cfg
     hq, hd, page = cfg.padded_heads, cfg.head_dim, cfg.page_size
     out = {}
-    for s in (16, 32, 64, 128):
+    for s in (16, 32, 64, 128, 256, 384):
         if s > MAX_SEQ:
             continue
         paged_cols = _bucket(-(-s // page), 1) * page
@@ -180,12 +262,11 @@ def run() -> list[str]:
     assert disp_new == NEW_TOKENS // BLOCK         # 1 dispatch / block
     assert sync_new == NEW_TOKENS // BLOCK         # 1 host sync / block
 
-    dt_dense, out_dense, srv_dense = _serve_requests(build_model(cfg),
-                                                     params, paged=False)
-    dt_paged, out_paged, srv_paged = _serve_requests(build_model(cfg),
-                                                     params, paged=True)
+    (dt_dense, dt_paged, out_dense, out_paged,
+     srv_dense, srv_paged) = _serve_requests(cfg, params)
     assert out_paged == out_dense, \
         "paged serving must emit identical tokens to the dense cache"
+    prefix = _serve_prefix(cfg, params)
 
     mgr = srv_paged.manager
     bytes_per_page = srv_paged.kv_bytes_capacity() // (mgr.num_pages)
@@ -225,14 +306,33 @@ def run() -> list[str]:
             "fragmentation_hwm_bound": round(
                 1 - peak_tokens / (mgr.hwm * mgr.page_size), 3),
         },
+        # serving-pipeline counters: executables compiled across the hot
+        # path's jit entry points (the O(log) bucketing claim), host
+        # syncs (one per harvested block), and page-table maintenance
+        # traffic (full rebuilds vs steady-state delta entries)
+        "pipeline": {
+            "enabled": srv_paged.pipeline,
+            "max_inflight": srv_paged.max_inflight,
+            "compiles": srv_paged.stats["compiles"],
+            "host_syncs": srv_paged.stats["host_syncs"],
+            "dispatches": srv_paged.stats["dispatches"],
+            "table_rebuilds": srv_paged.stats["table_rebuilds"],
+            "table_delta_entries": srv_paged.stats["table_delta_entries"],
+        },
+        "prefix_cache": prefix,
         # per-tier residency from the orchestrator's ledger: every tier
-        # carries in_use_bytes / hwm_bytes / by_class (schema-checked in CI)
+        # carries in_use_bytes / hwm_bytes / by_class (schema-checked in
+        # CI).  ``tiers`` is the drained end state; ``tiers_peak`` is the
+        # mid-flight snapshot at peak pool occupancy, where the kv_pool
+        # class is non-degenerate.
         "tiers": srv_paged.tier_stats(),
+        "tiers_peak": srv_paged.tier_stats_peak(),
         "attention_scaling": _attention_scaling(model),
     }
     JSON_PATH.write_text(json.dumps(bench, indent=2) + "\n")
 
     km = bench["kv_memory"]
+    pl = bench["pipeline"]
     rows = [
         f"serve_per_token,{dt_old / NEW_TOKENS * 1e6:.0f},"
         f"tok_s={tps_old:.0f} dispatches_per_step="
@@ -242,10 +342,21 @@ def run() -> list[str]:
         f"{disp_new / NEW_TOKENS:.3f} syncs_per_tok={sync_new / total:.3f}"
         f" speedup={tps_new / tps_old:.2f}x",
         f"serve_paged,{dt_paged / NEW_TOKENS * 1e6:.0f},"
-        f"tok_s={tps_paged:.0f} kv_hwm_bytes={km['paged_hwm_bytes']}"
+        f"tok_s={tps_paged:.0f} vs_dense={tps_paged / tps_dense:.2f}x"
+        f" kv_hwm_bytes={km['paged_hwm_bytes']}"
         f" dense_slab_bytes={km['dense_slab_bytes']}"
         f" kv_reduction={km['local_kv_reduction_vs_dense']:.1%}"
+        f" compiles={pl['compiles']} table_rebuilds={pl['table_rebuilds']}"
         f" identical_tokens=True json={JSON_PATH.name}",
+        f"serve_prefix_cache,"
+        f"{BATCH / prefix['tokens_per_s_shared'] * 1e6:.0f},"
+        f"tok_s={prefix['tokens_per_s_shared']:.0f}"
+        f" shared_pages={prefix['shared_pages']}"
+        f" kv_hwm_shared={prefix['kv_hwm_bytes_shared']}"
+        f" kv_hwm_unshared={prefix['kv_hwm_bytes_unshared']}"
+        f" residency_reduction="
+        f"{prefix['residency_reduction_vs_unshared']:.1%}"
+        f" identical_tokens=True",
         _continuous(model, params),
     ]
     return rows

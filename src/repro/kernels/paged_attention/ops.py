@@ -82,6 +82,13 @@ class BlockManager:
         self.pages: dict[int, list[int]] = {}
         self.lens: dict[int, int] = {}
         self.hwm = 0                    # pages-in-use high-water mark
+        # prefix caching: pages shared across slots carry a refcount and
+        # (for prompt-prefix pages) an entry in the prefix index keyed by
+        # the exact token bytes they cover.  A page returns to the free
+        # list only when its last owner releases it.
+        self.refcount: dict[int, int] = {}
+        self._prefix_index: dict[bytes, int] = {}
+        self._page_key: dict[int, bytes] = {}
 
     # ----- capacity ---------------------------------------------------------
     @property
@@ -118,9 +125,27 @@ class BlockManager:
                 f"page(s) for {tokens} tokens, {len(self._free)} free of "
                 f"{self.capacity}")
         new = [self._free.pop() for _ in range(max(need, 0))]
+        for p in new:
+            self.refcount[p] = 1
         table.extend(new)
         self.hwm = max(self.hwm, self.pages_in_use)
         return new
+
+    def adopt(self, slot: int, page_ids: list[int]) -> None:
+        """Map ``slot``'s leading table entries onto already-allocated
+        pages (prompt-prefix sharing): each adopted page's refcount rises
+        by one and NO pool page is consumed.  Only valid on a fresh slot
+        — adopted pages must precede any privately allocated ones so the
+        table stays position-ordered."""
+        table = self.pages.setdefault(slot, [])
+        if table:
+            raise ValueError(
+                f"slot {slot} already owns pages; prefix pages must lead")
+        for p in page_ids:
+            if self.refcount.get(p, 0) < 1:
+                raise ValueError(f"page {p} is not live; cannot adopt")
+            self.refcount[p] += 1
+        table.extend(page_ids)
 
     def note_tokens(self, slot: int, tokens: int) -> None:
         """Record that ``slot`` now holds ``tokens`` written positions
@@ -128,9 +153,43 @@ class BlockManager:
         self.lens[slot] = max(self.lens.get(slot, 0), tokens)
 
     def free_slot(self, slot: int) -> None:
-        """Reclaim every page owned by ``slot`` (EOS / eviction)."""
-        self._free.extend(reversed(self.pages.pop(slot, [])))
+        """Release every page owned by ``slot`` (EOS / eviction).  Pages
+        still referenced by another sharer survive; a page whose last
+        reference drops returns to the free list (LIFO) and leaves the
+        prefix index."""
+        for p in reversed(self.pages.pop(slot, [])):
+            rc = self.refcount.get(p, 1) - 1
+            if rc > 0:
+                self.refcount[p] = rc
+                continue
+            self.refcount.pop(p, None)
+            self._free.append(p)
+            key = self._page_key.pop(p, None)
+            if key is not None:
+                self._prefix_index.pop(key, None)
         self.lens.pop(slot, None)
+
+    # ----- prompt-prefix index ----------------------------------------------
+    def register_prefix(self, key: bytes, page_id: int) -> None:
+        """Publish a fully written prompt page under the exact token
+        bytes it covers (position-dependent: the key is the whole padded
+        prompt up to and including this page).  First writer wins; the
+        entry lives exactly as long as the page has owners."""
+        if key in self._prefix_index:
+            return
+        if self.refcount.get(page_id, 0) < 1:
+            raise ValueError(f"page {page_id} is not live; cannot index")
+        self._prefix_index[key] = page_id
+        self._page_key[page_id] = key
+
+    def lookup_prefix(self, key: bytes) -> int | None:
+        return self._prefix_index.get(key)
+
+    @property
+    def shared_pages(self) -> int:
+        """Logical pages served by sharing beyond their physical count
+        (sum of refcount - 1 over multiply-owned pages)."""
+        return sum(rc - 1 for rc in self.refcount.values() if rc > 1)
 
     # ----- tables -----------------------------------------------------------
     def slot_pages(self, slot: int) -> list[int]:
@@ -155,13 +214,15 @@ class BlockManager:
 
     def fragmentation(self) -> float:
         """Fraction of in-use page slots holding no live token (tail
-        waste of partially filled last pages)."""
+        waste of partially filled last pages).  With prefix sharing the
+        logical token count can exceed the physical slot count (that is
+        the point), so the result is clamped at 0."""
         in_use = self.pages_in_use * self.page_size
         if not in_use:
             return 0.0
         live = sum(min(self.lens.get(s, 0), len(t) * self.page_size)
                    for s, t in self.pages.items())
-        return 1.0 - live / in_use
+        return max(0.0, 1.0 - live / in_use)
 
 
 # The deprecated host-driven ``PagePool`` wrapper that used to live here

@@ -21,9 +21,11 @@ Concrete policies:
   carry.
 * :class:`BlockPoolResidency` — block-pool paged KV: wraps
   :class:`~repro.kernels.paged_attention.ops.BlockManager` bookkeeping
-  (free list / tables / lengths / hwm / fragmentation) and reports
-  through the shared ledger; optionally owns host-side pools for
-  host-driven experiments (the role the deleted ``PagePool`` played).
+  (free list / tables / lengths / refcounts / hwm / fragmentation) and
+  reports through the shared ledger — prefix-shared pages count once, so
+  the ``kv_pool`` class reflects physical residency; optionally owns
+  host-side pools for host-driven experiments (the role the deleted
+  ``PagePool`` played).
 * :class:`TopKExpertPrefetch` — MoE expert banks at rest in the remote
   tier; only the rows routing selects are paged in per decode block.
 """
@@ -168,6 +170,14 @@ class BlockPoolResidency:
     @property
     def hwm(self) -> int:
         return self.manager.hwm
+
+    @property
+    def shared_pages(self) -> int:
+        """Logical pages served beyond their physical count by prompt-
+        prefix sharing (refcounted pages count once toward residency —
+        the ledger's ``kv_pool`` class shrinks by exactly this times the
+        page bytes under a shared system prompt)."""
+        return self.manager.shared_pages
 
     def fragmentation(self) -> float:
         return self.manager.fragmentation()

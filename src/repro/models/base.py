@@ -55,10 +55,14 @@ class DecodeState:
     key: jax.Array        # PRNG key, split once per decode step
     pages: jax.Array | None = None
                           # (B, n_pages) int32 — block-pool KV page table
-                          #        (None = dense per-slot cache).  Host-
-                          #        refreshed at block boundaries; column
-                          #        padding and idle slots map the null
-                          #        page 0.
+                          #        (None = dense per-slot cache).
+                          #        PERSISTENT device state: the host
+                          #        keeps a byte-exact mirror and applies
+                          #        per-block deltas inside the decode
+                          #        dispatch, re-transferring the whole
+                          #        (power-of-two bucketed) table only on
+                          #        width changes.  Column padding and
+                          #        idle slots map the null page 0.
 
     @classmethod
     def init(cls, batch: int, key: jax.Array,

@@ -299,6 +299,38 @@ def attn_prefill_kv(p: dict, x: jax.Array, positions: jax.Array,
     return o.reshape(b, s, -1) @ p["wo"], (k, v)
 
 
+def attn_prefill_prefix_kv(p: dict, x: jax.Array, positions: jax.Array,
+                           k_prefix: jax.Array, v_prefix: jax.Array,
+                           cfg: ModelConfig):
+    """Prefill attention for a prompt SUFFIX against a cached prefix.
+
+    x: (B, S_new, d) hidden states of the suffix chunk only; positions:
+    (S_new,) absolute positions (prefix_len + arange); k_prefix/v_prefix:
+    (B, prefix_len, Hkv, hd) the shared prefix KV in attention layout
+    (gathered from the page pool).  Computes exactly the suffix rows of
+    the full-prompt flash attention: the concatenated K/V equal what a
+    full prefill would have projected (causality makes prefix KV
+    independent of the suffix, and the pool stores K/V in the same dtype
+    attention consumes), Sk and hence the kv blocking match the full
+    prompt, and ``q_offset`` shifts the causal mask — so suffix hidden
+    states, and therefore the sampled tokens downstream, are
+    bit-identical to an unshared prefill.  Returns
+    (out (B, S_new, d), (k_new, v_new) for the pool write).
+    """
+    q, k, v = _project_qkv(p, x, x, cfg)
+    q = _heads_sharded(apply_rope(q, positions, cfg.rope_theta))
+    k = _heads_sharded(apply_rope(k, positions, cfg.rope_theta))
+    v = _heads_sharded(v)
+    prefix_len = k_prefix.shape[1]
+    kf = jnp.concatenate([k_prefix.astype(k.dtype), k], axis=1)
+    vf = jnp.concatenate([v_prefix.astype(v.dtype), v], axis=1)
+    o = flash_attention(q, kf, vf, causal=True, window=cfg.sliding_window,
+                        q_block=cfg.q_block, kv_block=cfg.kv_block,
+                        q_offset=prefix_len)
+    b, s = x.shape[:2]
+    return o.reshape(b, s, -1) @ p["wo"], (k, v)
+
+
 def attn_decode(p: dict, x: jax.Array, cache_k: jax.Array,
                 cache_v: jax.Array, cur_pos: jax.Array, cfg: ModelConfig):
     """One-token self-attention.  The cache is READ-ONLY here: the current

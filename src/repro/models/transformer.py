@@ -24,6 +24,33 @@ from repro.models.base import (ModelConfig, BATCH_AXES, DecodeState,
 from repro.runtime.sharding import SEQ_SHARDED_ACTS, maybe_constraint
 
 
+def _scatter_pages(cache: dict, pages: jax.Array, k_new: jax.Array,
+                   v_new: jax.Array) -> dict:
+    """Write (L, B, S, Hkv, hd) prompt KV into the page pools: ONE
+    scatter per pool covering every layer, page and head.  ``pages``:
+    (B, n) page ids with n * page >= S; KV positions start at the first
+    mapped page's base, extra positions receive only padding (written —
+    so a freshly filled page is valid in its entirety — but masked by
+    seq_lens on every read)."""
+    page = cache["k_pages"].shape[2]
+    n = pages.shape[1]
+    seq = k_new.shape[2]
+    pad = n * page - seq
+    if pad < 0:
+        raise ValueError(f"page table maps {n * page} positions but the "
+                         f"prompt chunk has {seq}")
+
+    def scatter(pool, val):
+        # (L, B, S, Hkv, hd) -> (L, B, n, page, Hkv, hd), one scatter
+        val = jnp.pad(val, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        l_, b_ = val.shape[:2]
+        val = val.reshape(l_, b_, n, page, val.shape[3], val.shape[4])
+        return pool.at[:, pages].set(val.astype(pool.dtype))
+
+    return {"k_pages": scatter(cache["k_pages"], k_new),
+            "v_pages": scatter(cache["v_pages"], v_new)}
+
+
 class DenseLM:
     """Decoder-only LM.  Also the base class for the MoE and VLM variants."""
 
@@ -103,6 +130,17 @@ class DenseLM:
                                   ck, cv, cur_pos, cfg)
         h = x + a
         return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps)), k0, v0
+
+    def block_prefill_prefix(self, lp: dict, x: jax.Array,
+                             positions: jax.Array, k_prefix, v_prefix):
+        """block_prefill for a prompt suffix whose prefix KV already
+        lives in the page pool (prefix-cached admission)."""
+        cfg = self.cfg
+        a, kv = L.attn_prefill_prefix_kv(
+            lp["attn"], L.rmsnorm(x, lp["ln1"], cfg.norm_eps), positions,
+            k_prefix, v_prefix, cfg)
+        h = x + a
+        return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps)), kv
 
     def block_decode_paged(self, lp: dict, x: jax.Array, k_pages, v_pages,
                            pages, cur_pos):
@@ -264,22 +302,47 @@ class DenseLM:
             return self.block_prefill(lp, h, positions)
 
         x, (k_new, v_new) = self.mem.layer_scan(body, x, params["layers"])
+        cache = _scatter_pages(cache, pages, k_new, v_new)
+        x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+        return L.lm_head(params["embed"], x, cfg), cache
+
+    def prefill_paged_prefix(self, params: dict, tokens: jax.Array,
+                             cache: dict, prefix_pages: jax.Array,
+                             pages: jax.Array):
+        """Prefill only the prompt SUFFIX against a pool-resident shared
+        prefix (prefix-cached admission).
+
+        tokens: (B, S_new) suffix tokens starting at position
+        ``prefix_pages.shape[1] * page`` (shared prefixes are whole
+        pages, so the suffix always begins on a page boundary);
+        prefix_pages: (B, n_pre) fully-shared page ids whose KV is read,
+        never written; pages: (B, n_new) freshly allocated pages that
+        receive the suffix KV.  Per-layer FLOPs scale with the suffix
+        length — the prefix contributes only the attention reads — and
+        the suffix hidden states are bit-identical to a full unshared
+        prefill (see :func:`repro.models.layers.attn_prefill_prefix_kv`).
+        Returns (last-position logits, cache).
+        """
+        from repro.kernels.paged_attention.ref import gather_pages
+
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        seq = x.shape[1]
         page = cache["k_pages"].shape[2]
-        n = pages.shape[1]
-        pad = n * page - seq
-        if pad < 0:
-            raise ValueError(f"page table maps {n * page} positions but the "
-                             f"prompt has {seq}")
+        prefix_len = prefix_pages.shape[1] * page
+        positions = prefix_len + jnp.arange(seq)
 
-        def scatter(pool, val):
-            # (L, B, S, Hkv, hd) -> (L, B, n, page, Hkv, hd), one scatter
-            val = jnp.pad(val, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-            l_, b_ = val.shape[:2]
-            val = val.reshape(l_, b_, n, page, val.shape[3], val.shape[4])
-            return pool.at[:, pages].set(val.astype(pool.dtype))
+        def body(h, lp, cl):
+            kp, vp = cl
+            # (B, Hkv, pre, hd) cache layout -> (B, pre, Hkv, hd)
+            kpre = gather_pages(kp, prefix_pages).transpose(0, 2, 1, 3)
+            vpre = gather_pages(vp, prefix_pages).transpose(0, 2, 1, 3)
+            return self.block_prefill_prefix(lp, h, positions, kpre, vpre)
 
-        cache = {"k_pages": scatter(cache["k_pages"], k_new),
-                 "v_pages": scatter(cache["v_pages"], v_new)}
+        x, (k_new, v_new) = self.mem.layer_scan(
+            body, x, params["layers"],
+            xs=(cache["k_pages"], cache["v_pages"]))
+        cache = _scatter_pages(cache, pages, k_new, v_new)
         x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
         return L.lm_head(params["embed"], x, cfg), cache
 

@@ -22,11 +22,41 @@ oracle elsewhere).  KV memory then scales with live tokens rather than
 ``batch × max_seq``, and per-step attention cost with the actual
 sequence length — while emitting bit-identical tokens to the dense path.
 
+Three structures close the paged-vs-dense throughput gap:
+
+* **Device-resident page tables.**  The (B, n_pages) table persists in
+  ``DecodeState.pages`` across dispatches; the host keeps a byte-exact
+  mirror and ships only the per-block *delta* (entries for slots that
+  crossed a page boundary, were admitted, or were evicted — an evicted
+  row is re-pointed at the null page so the dead slot's frozen-position
+  writes stay harmless), applied inside the decode dispatch with one
+  scatter.  The table width is
+  power-of-two bucketed and the full table is re-transferred only when
+  the width changes, so executable count stays O(log max_pages) over a
+  server's lifetime (``stats["compiles"]`` / ``stats["table_rebuilds"]``).
+* **Async double-buffered dispatch.**  ``run_once`` keeps up to two
+  decode blocks in flight: block N+1 is dispatched — page growth folded
+  into its delta — before block N's token harvest is synced, so host
+  scheduling overlaps device compute instead of serializing
+  dispatch→sync→schedule.  Donation keeps exactly two state buffers
+  alive.  Speculative page allocation is safe because admission reserves
+  every request's worst-case page count up front.
+* **Prefix caching.**  Requests whose padded prompts share leading whole
+  pages map those table entries to the same physical pages (per-page
+  refcounts in :class:`BlockManager`; a prompt-prefix hash index keyed
+  by exact token bytes).  Admission then prefills only the suffix —
+  bit-identical to a full prefill — cutting both prefill FLOPs and pool
+  residency by roughly the share ratio.  Divergence after the shared
+  prefix is copy-on-write by construction: the first partial (or
+  non-matching) page is always a private page, and shared pages are
+  never written after registration.
+
 ``serve_step`` (one per-token dispatch) is kept for dry-run lowering and
 as the baseline the serving benchmark measures against.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
@@ -80,8 +110,18 @@ def make_decode_loop(model, *, block_size: int, temperature: float = 0.0,
                      eos_id: int | None = None, donate: bool = True
                      ) -> Callable:
     """Jit the fused decode loop with the donation contract: the cache
-    (arg 1) and decode state (arg 2) are consumed by every dispatch."""
-    def loop(params, cache, state):
+    (arg 1) and decode state (arg 2) are consumed by every dispatch.
+
+    ``delta`` (optional) is a ``(slots, cols, pids)`` int32 triple of
+    page-table updates applied to the device-resident table with ONE
+    scatter before the block decodes — the host never re-transfers the
+    whole table on the steady-state path.  Padding entries carry an
+    out-of-range column and are dropped by the scatter."""
+    def loop(params, cache, state, delta=None):
+        if delta is not None and state.pages is not None:
+            d_slots, d_cols, d_pids = delta
+            state = dataclasses.replace(
+                state, pages=state.pages.at[d_slots, d_cols].set(d_pids))
         return decode_loop(model, params, cache, state, num_steps=block_size,
                            temperature=temperature, eos_id=eos_id)
     return memory.donating_jit(loop, donate_argnums=(1, 2) if donate else ())
@@ -110,13 +150,22 @@ class BatchedServer:
     page), so admission never blocks; smaller pools oversubscribe: queued
     requests wait at admission until reclamation frees enough pages, and
     mid-decode exhaustion raises ``MemoryError`` (no preemption yet).
+
+    ``pipeline`` (default on) keeps up to two decode blocks in flight so
+    host scheduling overlaps device compute; tokens are bit-identical to
+    the serialized loop (the device-side masks decide everything), only
+    the block/admission interleaving — and hence sampled tokens of
+    requests admitted mid-stream at temperature > 0 — can shift.
+    ``prefix_cache`` (default on, paged only) shares prompt-prefix pages
+    across requests via per-page refcounts.
     """
 
     def __init__(self, model, params, *, batch_size: int = 4,
                  max_seq: int = 256, temperature: float = 0.0, seed: int = 0,
                  block_size: int = 8, eos_id: int | None = None,
                  paged: bool | None = None, page_size: int | None = None,
-                 num_pages: int | None = None):
+                 num_pages: int | None = None, pipeline: bool = True,
+                 prefix_cache: bool = True):
         self.model = model
         self.params = params
         self.batch = batch_size
@@ -135,11 +184,15 @@ class BatchedServer:
         # models without one get a fresh plan from their config.
         self.mem: MemoryOrchestrator = (
             getattr(model, "mem", None) or MemoryOrchestrator.plan(model.cfg))
+        self.pipeline = bool(pipeline)
+        self.max_inflight = 2 if self.pipeline else 1
+        self.prefix_cache = bool(prefix_cache)
         self._decode_loop = make_decode_loop(
             model, block_size=block_size, temperature=temperature,
             eos_id=eos_id)
         self._admit_step = self.mem.donating_jit(self._make_admit_step(),
                                                  donate_argnums=(2, 3))
+        self._admit_step_prefix = None
         # live slot state — donated through every dispatch
         if self.paged:
             cfg = model.cfg
@@ -153,7 +206,16 @@ class BatchedServer:
                                   cfg.num_layers)
             self.cache = self.mem.place_kv_pool(
                 model.init_paged_cache(self.num_pages, self.page_size))
-            init_pages = self._idle_pages()
+            self._admit_step_prefix = self.mem.donating_jit(
+                self._make_admit_step_prefix(), donate_argnums=(2, 3))
+            # persistent device-resident page table: starts at the
+            # canonical width-1 null table; the host mirror below tracks
+            # its exact device contents so block deltas can be computed
+            # without ever re-reading (or re-sending) the whole table
+            self._table_w = 1
+            self._narrow_blocks = 0
+            self._mirror = np.zeros((batch_size, 1), np.int32)
+            init_pages = jnp.asarray(self._mirror)
         else:
             self.kv = None
             self.manager = None
@@ -169,10 +231,16 @@ class BatchedServer:
                                       pages=init_pages)
         self.slots: list[Request | None] = [None] * batch_size
         self._slot_pos = [0] * batch_size      # host mirror of state.pos
+        self._planned = [0] * batch_size       # in-flight decode tokens
         self._reserved: dict[int, int] = {}    # slot -> worst-case pages
+        self._peak_pages = -1
+        self.tiers_peak: dict = {}
         self.stats = {"steps": 0, "tokens": 0, "batches": 0, "blocks": 0,
                       "dispatches": 0, "admitted": 0, "host_syncs": 0,
-                      "kv_pages_in_use": 0, "kv_pages_hwm": 0}
+                      "kv_pages_in_use": 0, "kv_pages_hwm": 0,
+                      "compiles": 0, "table_rebuilds": 0,
+                      "table_delta_entries": 0, "prefix_hits": 0,
+                      "prefix_shared_pages": 0}
 
     # ----- request intake ----------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
@@ -193,16 +261,6 @@ class BatchedServer:
         req = Request(self._uid, prompt, max_new_tokens=max_new_tokens)
         self.queue.put(req)
         return req
-
-    def _idle_pages(self) -> jax.Array:
-        """Canonical width-1 null page table carried OUTSIDE decode
-        blocks: _prepare_block swaps the real table in right before each
-        dispatch and run_block swaps an idle one back in afterwards, so
-        admission always sees ONE page-table shape — no admit_step
-        recompiles keyed on however long the longest live sequence
-        happens to be.  Freshly allocated every time because the state
-        (pages included) is donated into each dispatch."""
-        return jnp.zeros((self.batch, 1), jnp.int32)
 
     # ----- admission ---------------------------------------------------------
     def _admit_plen(self, prompt_len: int, max_new_tokens: int) -> int:
@@ -274,6 +332,29 @@ class BatchedServer:
             return nxt, cache, state
         return admit_step
 
+    def _make_admit_step_prefix(self) -> Callable:
+        model = self.model
+        vocab, temperature = self.model.cfg.vocab, self.temperature
+
+        def admit_step(params, ptoks, cache, state, slot, max_new,
+                       prefix_pages, new_pages):
+            """Prefix-cached admission: prefill ONLY the prompt suffix.
+
+            ptoks: (1, S_new) suffix tokens (position n_pre*page
+            onwards); prefix_pages: (1, n_pre) shared pages read, never
+            written; new_pages: (1, n_new) pages receiving the suffix
+            KV.  One key split, exactly like the unshared path, so
+            shared and unshared admission stay PRNG-identical."""
+            key, k = jax.random.split(state.key)
+            logits, cache = model.prefill_paged_prefix(
+                params, ptoks, cache, prefix_pages, new_pages)
+            nxt = sample_tokens(logits, vocab, temperature, k)   # (1, 1)
+            page = cache["k_pages"].shape[2]
+            plen = prefix_pages.shape[1] * page + ptoks.shape[1]
+            state = self._spliced_state(state, nxt, plen, slot, max_new, key)
+            return nxt, cache, state
+        return admit_step
+
     def _spliced_state(self, state, nxt, plen, slot, max_new, key):
         """Activate ``slot`` in the decode state (shared by both admit
         paths).  The page table is NOT touched here — the host refreshes
@@ -310,6 +391,48 @@ class BatchedServer:
         worst = self._worst_pages(len(req.prompt), req.max_new_tokens)
         return worst <= self.manager.capacity - reserved
 
+    # ----- prefix caching ----------------------------------------------------
+    def _shareable_pages(self, plen: int) -> int:
+        """Prompt pages eligible for sharing: whole pages strictly before
+        the last prompt token.  The final page — partial or not — stays
+        private so admission always has at least one suffix token to
+        prefill (the one whose logits seed sampling), and decode's first
+        write (position >= plen) can never touch a shared page."""
+        return (plen - 1) // self.page_size
+
+    def _shared_prefix_pages(self, toks: np.ndarray, plen: int) -> list[int]:
+        """Longest run of already-pooled pages matching this padded
+        prompt's leading whole pages.  Keys are the exact padded token
+        bytes up to each page boundary — positions matter (left-padding
+        included), so a hit guarantees bit-identical KV."""
+        page, out = self.page_size, []
+        for i in range(self._shareable_pages(plen)):
+            pid = self.manager.lookup_prefix(toks[0, :(i + 1) * page]
+                                             .tobytes())
+            if pid is None:
+                break
+            out.append(pid)
+        return out
+
+    def _register_prefix(self, toks: np.ndarray, plen: int,
+                         slot: int) -> None:
+        """Publish this admission's freshly written whole prompt pages
+        for future sharers (already-shared leading pages re-register as
+        no-ops; the index keeps the first writer)."""
+        page = self.page_size
+        table = self.manager.slot_pages(slot)
+        for i in range(self._shareable_pages(plen)):
+            self.manager.register_prefix(toks[0, :(i + 1) * page].tobytes(),
+                                         table[i])
+
+    def _note_peak(self) -> None:
+        """Capture a mid-flight per-tier ledger snapshot whenever pool
+        occupancy reaches a new (or equal) peak, so the bench's residency
+        block reflects peak load rather than the drained end state."""
+        if self.manager.pages_in_use >= self._peak_pages:
+            self._peak_pages = self.manager.pages_in_use
+            self.tiers_peak = self.mem.ledger.snapshot()
+
     def _admit(self, req: Request, slot: int) -> bool:
         """Prefill ``req`` into ``slot`` of the live batch; True if the
         request finished at admission (budget of 1 / immediate EOS).
@@ -325,21 +448,50 @@ class BatchedServer:
         plen = self._admit_plen(len(req.prompt), req.max_new_tokens)
         toks = np.zeros((1, plen), np.int32)
         toks[0, plen - len(req.prompt):] = req.prompt        # left-pad
+        # admission never reads or writes the device page table, so hold
+        # it aside and admit with pages=None: admit executables are then
+        # keyed only on the bucketed prompt shape, never on whatever
+        # width the live table happens to have (the width x plen compile
+        # cross-product would otherwise defeat the bucketing)
+        saved_pages = self.state.pages
+        if saved_pages is not None:
+            self.state = dataclasses.replace(self.state, pages=None)
         if self.paged:
             self._reserved[slot] = self._worst_pages(len(req.prompt),
                                                      req.max_new_tokens)
-            page_ids = self.manager.ensure(slot, plen)   # fresh slot: all new
-            ptable = jnp.asarray([page_ids], jnp.int32)
-            nxt, self.cache, self.state = self._admit_step(
-                self.params, jnp.asarray(toks), self.cache, self.state,
-                jnp.asarray(slot, jnp.int32),
-                jnp.asarray(req.max_new_tokens, jnp.int32), ptable)
+            shared = (self._shared_prefix_pages(toks, plen)
+                      if self.prefix_cache else [])
+            if shared:
+                self.manager.adopt(slot, shared)
+            new_ids = self.manager.ensure(slot, plen)
+            if shared:
+                suffix = toks[:, len(shared) * self.page_size:]
+                nxt, self.cache, self.state = self._admit_step_prefix(
+                    self.params, jnp.asarray(suffix), self.cache, self.state,
+                    jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(req.max_new_tokens, jnp.int32),
+                    jnp.asarray([shared], jnp.int32),
+                    jnp.asarray([new_ids], jnp.int32))
+                self.stats["prefix_hits"] += 1
+                self.stats["prefix_shared_pages"] += len(shared)
+            else:
+                ptable = jnp.asarray([new_ids], jnp.int32)
+                nxt, self.cache, self.state = self._admit_step(
+                    self.params, jnp.asarray(toks), self.cache, self.state,
+                    jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(req.max_new_tokens, jnp.int32), ptable)
             self.manager.note_tokens(slot, plen)
+            if self.prefix_cache:
+                self._register_prefix(toks, plen, slot)
+            self.kv.record()
+            self._note_peak()
         else:
             nxt, self.cache, self.state = self._admit_step(
                 self.params, jnp.asarray(toks), self.cache, self.state,
                 jnp.asarray(slot, jnp.int32),
                 jnp.asarray(req.max_new_tokens, jnp.int32))
+        if saved_pages is not None:
+            self.state = dataclasses.replace(self.state, pages=saved_pages)
         self._slot_pos[slot] = plen
         first = int(jax.device_get(nxt)[0, 0])
         req.output.append(first)
@@ -376,37 +528,122 @@ class BatchedServer:
                 finished.append(req)      # done at admission: slot stays free
 
     # ----- decode ------------------------------------------------------------
-    def _prepare_block(self) -> None:
-        """Block-boundary page allocation + table refresh: every live slot
-        gets pages covering its next ``block_size`` writes (capped by its
-        remaining budget), and the decode state's (B, n_pages) table is
-        rebuilt at a power-of-two bucketed width so attention cost tracks
-        the longest LIVE sequence, not max_seq."""
+    def _live_remaining(self, i: int) -> int:
+        """Decode tokens slot ``i`` still owes BEYOND every in-flight
+        block (host view).  EOS can only shorten this on device, so a
+        positive value guarantees the next dispatch is not a ghost block
+        for budget reasons (with EOS enabled a slot may still die early —
+        tokens stay correct, the block is merely wasted)."""
+        req = self.slots[i]
+        if req is None:
+            return 0
+        return req.max_new_tokens - len(req.output) - self._planned[i]
+
+    def _can_dispatch(self) -> bool:
+        return any(self._live_remaining(i) > 0 for i in range(self.batch))
+
+    # blocks a narrower bucketed width must persist before the table
+    # shrinks: growth is immediate (an unmapped page would corrupt
+    # decode), but shrinking only saves attention columns, so it waits
+    # out transient dips — e.g. the start of a fresh batch — instead of
+    # paying a rebuild + regrow round trip every serving round
+    SHRINK_PATIENCE = 8
+
+    def _table_delta(self):
+        """Diff the manager's desired per-slot tables against the host
+        mirror of the device-resident table.  Steady state returns a
+        bucketed ``(slots, cols, pids)`` delta (padding entries carry an
+        out-of-range column, dropped by the in-dispatch scatter); a
+        width change — growth, or a shrink that outlasted
+        ``SHRINK_PATIENCE`` — re-transfers the whole table and returns
+        None.  Widths repeat, so executables stay O(log max_pages)
+        (``stats["table_rebuilds"]`` counts the transfers)."""
+        w_need = _bucket(max(self.manager.max_slot_pages(), 1), 1)
+        if w_need < self._table_w:
+            self._narrow_blocks += 1
+            if self._narrow_blocks < self.SHRINK_PATIENCE:
+                w_need = self._table_w      # tolerate the extra null cols
+        else:
+            self._narrow_blocks = 0
+        # desired: live slots' exact tables; evicted slots' rows are
+        # ZEROED (the manager no longer knows them), re-pointing a dead
+        # slot's frozen-position ghost writes at the null page.  The row
+        # must be cleared, not left stale: an inactive slot keeps
+        # re-writing its frozen position every dispatch, so a stale row
+        # would corrupt a freed page long after its reallocation — the
+        # _harvest safety argument only covers the bounded in-flight
+        # window between the eviction and this delta.
+        desired = self.manager.table(list(range(self.batch)), w_need)
+        if w_need != self._table_w:
+            self._table_w = w_need
+            self._narrow_blocks = 0
+            self._mirror = desired
+            self.state = dataclasses.replace(self.state,
+                                             pages=jnp.asarray(desired))
+            self.stats["table_rebuilds"] += 1
+            return None
+        rows, cols = np.nonzero(desired != self._mirror)
+        self._mirror = desired
+        n = len(rows)
+        self.stats["table_delta_entries"] += n
+        cap = _bucket(max(n, 1), 4)
+        d_slots = np.zeros(cap, np.int32)
+        d_cols = np.full(cap, w_need, np.int32)  # out of range -> dropped
+        d_pids = np.zeros(cap, np.int32)
+        d_slots[:n], d_cols[:n] = rows, cols
+        d_pids[:n] = desired[rows, cols]
+        return (jnp.asarray(d_slots), jnp.asarray(d_cols),
+                jnp.asarray(d_pids))
+
+    def _dispatch_block(self):
+        """Dispatch ONE fused decode block without waiting for earlier
+        blocks (the donated cache/state buffers chain dispatches in
+        order on device).  Page growth covering every planned write is
+        folded into this block's table delta; the allocation is
+        speculative past in-flight blocks but can never exhaust the pool
+        because admission reserved each request's worst case."""
+        advances: dict[int, tuple[Request, int]] = {}
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            budget = req.max_new_tokens - len(req.output)
-            need = min(self._slot_pos[i] + min(self.block_size, budget),
-                       self.max_seq)
-            self.manager.ensure(i, need)
-        n_dec = _bucket(max(self.manager.max_slot_pages(), 1), 1)
-        table = self.manager.table(list(range(self.batch)), n_dec)
-        self.state = dataclasses.replace(self.state,
-                                         pages=jnp.asarray(table))
-
-    def run_block(self) -> list[Request]:
-        """One fused dispatch = ``block_size`` decode steps, then ONE host
-        sync to harvest the token block.  Returns requests that finished."""
+            adv = min(self.block_size, self._live_remaining(i))
+            if adv > 0:
+                advances[i] = (req, adv)
+                self._planned[i] += adv
         if self.paged:
-            self._prepare_block()
-        toks, valid, self.cache, self.state = self._decode_loop(
-            self.params, self.cache, self.state)
+            for i in advances:
+                self.manager.ensure(i, min(self._slot_pos[i]
+                                           + self._planned[i], self.max_seq))
+            delta = self._table_delta()
+            self.kv.record()
+            self._note_peak()
+            toks, valid, self.cache, self.state = self._decode_loop(
+                self.params, self.cache, self.state, delta)
+        else:
+            toks, valid, self.cache, self.state = self._decode_loop(
+                self.params, self.cache, self.state)
         self.stats["dispatches"] += 1
         self.stats["blocks"] += 1
         self.stats["steps"] += self.block_size
-        toks_h, valid_h = jax.device_get((toks, valid))      # the one sync
+        return toks, valid, advances
+
+    def _harvest(self, block, finished: list[Request]) -> None:
+        """Sync ONE in-flight block's token harvest (the only host sync
+        per block) and fold the outcome back into host bookkeeping:
+        slot recycling, refcounted page reclamation, ledger accounting.
+
+        Reclamation while a later block is in flight is safe: a slot
+        that died in this block is inactive in every later in-flight
+        state, so its only writes are frozen-position ghost writes into
+        its own tail page — and any reallocation of that page is either
+        fully overwritten (admission prefill writes whole pages) or
+        masked until the new owner actually writes each position."""
+        toks, valid, advances = block
+        toks_h, valid_h = jax.device_get((toks, valid))
         self.stats["host_syncs"] += 1
-        finished = []
+        for i, (req, adv) in advances.items():
+            if self.slots[i] is req:
+                self._planned[i] -= adv
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -426,31 +663,46 @@ class BatchedServer:
                 req.done.set()
                 finished.append(req)
                 self.slots[i] = None       # slot recycled for admission
+                self._planned[i] = 0
                 if self.paged:
-                    self.manager.free_slot(i)   # pages back to the pool
+                    self.manager.free_slot(i)   # refcounted reclamation
                     self._reserved.pop(i, None)
         if self.paged:
             self.stats["kv_pages_in_use"] = self.manager.pages_in_use
             self.stats["kv_pages_hwm"] = self.manager.hwm
             self.kv.record()               # per-tier ledger accounting
-            self.state = dataclasses.replace(self.state,
-                                             pages=self._idle_pages())
-        return finished
 
     def run_once(self) -> list[Request]:
         """Admit queued requests and serve until every admitted request
         completes; returns the finished ones.  Requests that arrive (or
         overflow the slot count) while serving are admitted mid-stream.
         Non-blocking when idle: empty queue + no live slots returns [].
-        """
+
+        With ``pipeline`` on, up to two blocks stay in flight: the next
+        block is dispatched before the previous block's harvest is
+        synced, so host scheduling (token harvest, reclamation,
+        admission, the next table delta) overlaps device compute."""
         finished: list[Request] = []
         self._admit_from_queue(finished)
-        while any(r is not None for r in self.slots):
-            finished.extend(self.run_block())
+        inflight: collections.deque = collections.deque()
+        while True:
+            while len(inflight) < self.max_inflight and self._can_dispatch():
+                inflight.append(self._dispatch_block())
+            if not inflight:
+                break
+            self._harvest(inflight.popleft(), finished)
             self._admit_from_queue(finished)
         if finished:
             self.stats["batches"] += 1
+        self.stats["compiles"] = self._compiles()
         return finished
+
+    def _compiles(self) -> int:
+        """Executables compiled across the serving hot path's jit entry
+        points — the observable for the O(log) shape-bucketing claim."""
+        fns = (self._decode_loop, self._admit_step, self._admit_step_prefix)
+        return sum(f._cache_size() for f in fns
+                   if f is not None and hasattr(f, "_cache_size"))
 
     # ----- accounting --------------------------------------------------------
     def kv_bytes_in_use(self) -> int:
@@ -470,3 +722,9 @@ class BatchedServer:
     def tier_stats(self) -> dict:
         """Per-tier residency snapshot (feeds ``BENCH_serve.json``)."""
         return self.mem.ledger.snapshot()
+
+    def tier_stats_peak(self) -> dict:
+        """Per-tier snapshot captured mid-flight at peak pool occupancy
+        (the end-of-run ``tier_stats`` is drained: ``kv_pool`` reads 0
+        after every page is reclaimed)."""
+        return self.tiers_peak or self.tier_stats()

@@ -330,6 +330,28 @@ def test_server_paged_admission_backpressure(tiny_model):
         server.submit(np.arange(1, 17, dtype=np.int32), max_new_tokens=17)
 
 
+def test_evicted_slot_ghost_writes_never_corrupt_reused_pages(tiny_model):
+    """A slot that finishes early keeps being executed (inactive, frozen
+    position) by every later dispatch; its page-table row must be
+    re-pointed at the null page so those ghost writes can never land in
+    its freed pages once a live neighbour's growth reuses them (LIFO
+    free order makes reuse immediate).  Tiny pages + blocks maximise
+    page churn after the eviction."""
+    model, params = tiny_model
+    long_prompt = np.asarray([3, 1, 4, 1, 5], np.int32)
+
+    def long_output(with_neighbour):
+        server = BatchedServer(model, params, batch_size=2, max_seq=64,
+                               block_size=2, page_size=2)
+        req = server.submit(long_prompt, max_new_tokens=24)
+        if with_neighbour:     # finishes after one block, pages reused
+            server.submit(np.asarray([9, 10], np.int32), max_new_tokens=2)
+        server.run_once()
+        return tuple(req.output)
+
+    assert long_output(True) == long_output(False)
+
+
 def test_server_paged_offload_kv(tiny_model):
     """offload_kv composes: the pool rides the scan carry through the
     remote tier and still emits identical tokens."""

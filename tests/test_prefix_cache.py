@@ -1,0 +1,153 @@
+"""Prefix caching: per-page refcounts, the prompt-prefix index,
+copy-on-write divergence, and bit-identical shared-vs-unshared serving."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_config
+from repro.kernels.paged_attention.ops import BlockManager
+from repro.runtime.serve import BatchedServer
+
+PAGE = 4
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("qwen2.5-14b").reduced()
+    cfg = dataclasses.replace(cfg, remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+# ---------------------------------------------------------------------------
+# BlockManager refcount + prefix index invariants
+# ---------------------------------------------------------------------------
+
+def test_adopt_refcounts_and_shared_free():
+    mgr = BlockManager(num_pages=9, page_size=PAGE)
+    owner = mgr.ensure(0, 3 * PAGE)               # 3 pages, rc=1 each
+    key = b"prefix-bytes"
+    mgr.register_prefix(key, owner[0])
+    assert mgr.lookup_prefix(key) == owner[0]
+
+    mgr.adopt(1, owner[:2])                       # slot 1 shares 2 pages
+    mgr.ensure(1, 3 * PAGE)                       # + 1 private page
+    assert mgr.pages[1][:2] == owner[:2]
+    assert mgr.refcount[owner[0]] == mgr.refcount[owner[1]] == 2
+    assert mgr.refcount[owner[2]] == 1
+    # shared pages consume no extra pool capacity
+    assert mgr.pages_in_use == 4
+    assert mgr.shared_pages == 2
+
+    # eviction of one sharer never frees pages still referenced
+    mgr.free_slot(0)
+    assert mgr.refcount[owner[0]] == 1
+    assert owner[0] not in mgr._free and owner[1] not in mgr._free
+    assert owner[2] in mgr._free                  # rc hit 0: reclaimed
+    assert mgr.lookup_prefix(key) == owner[0]     # index entry survives
+
+    # last owner gone: pages reclaimed AND the index entry with them
+    mgr.free_slot(1)
+    assert mgr.pages_in_use == 0
+    assert mgr.free_pages == mgr.capacity
+    assert mgr.lookup_prefix(key) is None
+    assert not mgr.refcount
+
+
+def test_adopt_guards():
+    mgr = BlockManager(num_pages=5, page_size=PAGE)
+    pages = mgr.ensure(0, PAGE)
+    mgr.ensure(1, PAGE)
+    with pytest.raises(ValueError, match="must lead"):
+        mgr.adopt(1, pages)                       # slot 1 already owns pages
+    mgr.free_slot(0)
+    with pytest.raises(ValueError, match="not live"):
+        mgr.adopt(2, pages)                       # page was reclaimed
+    with pytest.raises(ValueError, match="not live"):
+        mgr.register_prefix(b"k", pages[0])
+
+
+# ---------------------------------------------------------------------------
+# server end-to-end: physical sharing + copy-on-write divergence
+# ---------------------------------------------------------------------------
+
+def _prompts(n: int, shared: int = 12, unique: int = 2):
+    base = np.arange(1, shared + 1, dtype=np.int32)
+    return [np.concatenate([base, np.full(unique, 100 + i, np.int32)])
+            for i in range(n)]
+
+
+def test_shared_prefix_maps_identical_physical_pages(tiny_model):
+    model, params = tiny_model
+    server = BatchedServer(model, params, batch_size=3, max_seq=64,
+                           block_size=4, page_size=PAGE)
+    for p in _prompts(3):
+        server.submit(p, max_new_tokens=8)
+    finished: list = []
+    server._admit_from_queue(finished)            # all three live at once
+    mgr = server.manager
+    plen = server._admit_plen(14, 8)              # 14-token prompt -> bucket
+    n_share = server._shareable_pages(plen)
+    assert n_share >= 1
+    tables = [mgr.slot_pages(i) for i in range(3)]
+    for t in tables[1:]:
+        # identical physical leading pages, refcounted once per sharer
+        assert t[:n_share] == tables[0][:n_share]
+    for p in tables[0][:n_share]:
+        assert mgr.refcount[p] == 3
+    # copy-on-write divergence: everything past the shared prefix is
+    # private — the first partial page is never shared
+    tails = [tuple(t[n_share:]) for t in tables]
+    assert len(set().union(*map(set, tails))) == sum(map(len, tails))
+    assert server.stats["prefix_hits"] == 2
+    # draining the batch returns every page exactly once
+    server.run_once()
+    assert mgr.pages_in_use == 0 and mgr.free_pages == mgr.capacity
+    assert not mgr.refcount
+
+
+def test_evicting_one_sharer_keeps_neighbours_correct(tiny_model):
+    """The short sharer finishes (its refcounts drop) while the long
+    sharer keeps decoding from the same physical prefix pages — outputs
+    must match a solo run of the long request."""
+    model, params = tiny_model
+    prompts = _prompts(2)
+
+    def serve(reqs_spec, batch):
+        server = BatchedServer(model, params, batch_size=batch, max_seq=64,
+                               block_size=4, page_size=PAGE)
+        reqs = [server.submit(p, max_new_tokens=n) for p, n in reqs_spec]
+        server.run_once()
+        return server, [tuple(r.output) for r in reqs]
+
+    server, (long_out, short_out) = serve(
+        [(prompts[0], 16), (prompts[1], 4)], batch=2)
+    assert server.stats["prefix_hits"] == 1
+    solo, (solo_out,) = serve([(prompts[0], 16)], batch=1)
+    assert long_out == solo_out
+    assert server.manager.pages_in_use == 0
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_prefix_cached_tokens_bit_identical(tiny_model, temperature):
+    model, params = tiny_model
+
+    def serve(prefix_cache):
+        server = BatchedServer(model, params, batch_size=3, max_seq=64,
+                               block_size=4, page_size=PAGE,
+                               temperature=temperature,
+                               prefix_cache=prefix_cache)
+        reqs = [server.submit(p, max_new_tokens=8) for p in _prompts(3)]
+        server.run_once()
+        return server, [tuple(r.output) for r in reqs]
+
+    shared, out_s = serve(True)
+    unshared, out_u = serve(False)
+    assert out_s == out_u
+    assert shared.stats["prefix_hits"] > 0
+    assert unshared.stats["prefix_hits"] == 0
+    # physical residency dropped by the shared pages
+    assert shared.manager.hwm < unshared.manager.hwm
