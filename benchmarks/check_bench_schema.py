@@ -1,19 +1,23 @@
 """Schema + regression assertions for ``BENCH_serve.json`` — keeps the
 serving perf record machine-readable as the benchmark evolves (CI gate).
 
-    python benchmarks/check_bench_schema.py [path]
+    python benchmarks/check_bench_schema.py [path] [--require-sharded]
 
 Asserts the top-level keys, the ``kv_memory`` / ``pipeline`` /
-``prefix_cache`` sub-schemas, and the per-tier residency blocks (every
-tier must carry ``in_use_bytes`` / ``hwm_bytes`` / ``by_class``; the
-``tiers_peak`` mid-flight snapshot must be non-degenerate — a live
-``kv_pool`` class).  On top of the schema it gates the tentpole's
-headline numbers so they cannot silently rot:
+``prefix_cache`` / ``sharded`` sub-schemas, and the per-tier residency
+blocks (every tier must carry ``in_use_bytes`` / ``hwm_bytes`` /
+``by_class``; the ``tiers_peak`` mid-flight snapshot must be
+non-degenerate — a live ``kv_pool`` class).  On top of the schema it
+gates the headline numbers so they cannot silently rot:
 
 * ``server_paged`` tokens/s must stay >= 0.95x ``server_dense``;
 * ``bytes_per_active_token_paged`` must not exceed the dense value;
 * the prefix-cache row must show a real residency reduction with
-  bit-identical tokens.
+  bit-identical tokens;
+* the ``server_sharded`` row must be token-identical to single-device,
+  and with >= 2 model shards must show model-axis collective traffic
+  plus a per-shard ledger snapshot.  ``--require-sharded`` (the forced
+  multi-device CI job) rejects a degenerate 1-shard run.
 
 Exits nonzero with a readable message on any violation.
 """
@@ -27,7 +31,7 @@ TOP_KEYS = {
     "model", "batch", "prompt", "new_tokens", "block_size", "max_seq",
     "tokens_per_s", "speedup_block_vs_per_token",
     "paged_vs_dense_tokens_identical", "kv_memory", "pipeline",
-    "prefix_cache", "tiers", "tiers_peak", "attention_scaling",
+    "prefix_cache", "sharded", "tiers", "tiers_peak", "attention_scaling",
 }
 TOKENS_PER_S_KEYS = {"per_token_dense", "block_dense", "server_dense",
                      "server_paged"}
@@ -46,13 +50,19 @@ PREFIX_KEYS = {
     "bytes_per_active_token_shared", "bytes_per_active_token_unshared",
     "residency_reduction_vs_unshared", "tokens_identical_to_unshared",
 }
+SHARDED_KEYS = {
+    "devices", "model_shards", "mesh_axes", "tokens_per_s_sharded",
+    "tokens_identical_to_single_device",
+    "collective_bytes_per_step_by_axis",
+    "collective_bytes_per_token_by_axis", "tiers_peak_per_shard",
+}
 TIER_KEYS = {"in_use_bytes", "hwm_bytes", "capacity_bytes", "by_class"}
 # server_paged may not drop below this fraction of server_dense (the
 # tentpole claim; headroom for CI timing noise)
 PAGED_VS_DENSE_FLOOR = 0.95
 
 
-def check(path: Path) -> list[str]:
+def check(path: Path, *, require_sharded: bool = False) -> list[str]:
     errors: list[str] = []
     try:
         bench = json.loads(path.read_text())
@@ -98,7 +108,52 @@ def check(path: Path) -> list[str]:
         if isinstance(tiers, dict) and "local" not in tiers:
             errors.append(f"{block} must include the 'local' tier")
     errors.extend(_check_peak_snapshot(bench))
+    errors.extend(_check_sharded(bench, require_multi=require_sharded))
     errors.extend(_check_regressions(bench))
+    return errors
+
+
+def _check_sharded(bench: dict, *, require_multi: bool = False) -> list[str]:
+    """The tensor-parallel serving row: schema, bit-identity, and —
+    when >= 2 model shards ran — real model-axis collective traffic and
+    a per-shard residency snapshot.  ``require_multi`` (the forced
+    multi-device CI job) additionally rejects a degenerate 1-shard run."""
+    errors: list[str] = []
+    sh = bench.get("sharded")
+    if not isinstance(sh, dict):
+        return ["sharded must be a mapping (the server_sharded row)"]
+    missing = SHARDED_KEYS - sh.keys()
+    if missing:
+        return [f"missing sharded keys: {sorted(missing)}"]
+    if sh["tokens_identical_to_single_device"] is not True:
+        errors.append("sharded tokens_identical_to_single_device must be "
+                      "true (tensor parallelism changed the tokens)")
+    shards = sh.get("model_shards")
+    if not isinstance(shards, int) or shards < 1:
+        errors.append(f"sharded model_shards must be a positive int, got "
+                      f"{shards!r}")
+        return errors
+    if require_multi and shards < 2:
+        errors.append(
+            f"sharded row ran with model_shards={shards}; the multi-device "
+            f"job requires >= 2 (mesh fell back to a single shard)")
+    tiers = sh.get("tiers_peak_per_shard")
+    if not isinstance(tiers, dict) or "local" not in tiers:
+        errors.append("sharded tiers_peak_per_shard must include 'local'")
+    if shards >= 2:
+        per_tok = sh.get("collective_bytes_per_token_by_axis", {})
+        if not isinstance(per_tok, dict) or \
+                per_tok.get("model", 0) <= 0:
+            errors.append(
+                f"sharded run with {shards} model shards shows no "
+                f"model-axis collective bytes ({per_tok!r}): the mesh is "
+                f"dead in the decode executable")
+        local = tiers.get("local", {}) if isinstance(tiers, dict) else {}
+        if isinstance(local, dict) and local.get("shards") != shards:
+            errors.append(
+                f"sharded tiers_peak_per_shard.local.shards "
+                f"({local.get('shards')!r}) disagrees with model_shards "
+                f"({shards}): ledger is not accounting per shard")
     return errors
 
 
@@ -155,14 +210,17 @@ def _check_regressions(bench: dict) -> list[str]:
 
 
 def main() -> None:
-    path = Path(sys.argv[1] if len(sys.argv) > 1 else "BENCH_serve.json")
-    errors = check(path)
+    args = [a for a in sys.argv[1:] if a != "--require-sharded"]
+    require_sharded = "--require-sharded" in sys.argv[1:]
+    path = Path(args[0] if args else "BENCH_serve.json")
+    errors = check(path, require_sharded=require_sharded)
     if errors:
         for e in errors:
             print(f"BENCH schema violation: {e}", file=sys.stderr)
         raise SystemExit(1)
-    print(f"{path}: schema OK "
-          f"(tiers: {sorted(json.loads(path.read_text())['tiers'])})")
+    bench = json.loads(path.read_text())
+    print(f"{path}: schema OK (tiers: {sorted(bench['tiers'])}, "
+          f"model_shards: {bench['sharded']['model_shards']})")
 
 
 if __name__ == "__main__":

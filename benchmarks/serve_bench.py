@@ -34,10 +34,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import build_model, get_config
+from repro.launch.mesh import make_serving_mesh, serving_model_shards
 from repro.memory import capacity_reduction, tree_bytes
 from repro.models.base import DecodeState
 from repro.runtime.serve import (BatchedServer, _bucket, make_decode_loop,
                                  make_prefill_step, make_serve_step, sample)
+from repro.runtime.sharding import collective_bytes_by_axis, mesh_axis_sizes
 
 BATCH = 4
 PROMPT = 8
@@ -228,6 +230,53 @@ def _serve_prefix(cfg, params):
     }
 
 
+def _serve_sharded(cfg, params, out_paged) -> dict:
+    """Tensor-parallel serving row: the paged server on a ``"model"``
+    mesh over however many local devices exist (2+ under the forced
+    multi-device CI job, a degenerate 1-shard mesh on one device — the
+    mesh code path runs either way).  Tokens must be bit-identical to
+    the single-device paged server; the decode executable's collective
+    traffic is attributed per mesh axis, and the ledger snapshot is
+    per-shard (what ONE device holds)."""
+    shards = serving_model_shards(8, cfg.padded_heads, cfg.padded_kv_heads,
+                                  cfg.d_ff, cfg.padded_vocab)
+    mesh = make_serving_mesh(model=shards)
+
+    def submit_all(server):
+        rng = np.random.RandomState(5)
+        return [server.submit(rng.randint(0, cfg.vocab, PROMPT)
+                              .astype(np.int32),
+                              max_new_tokens=NEW_TOKENS)
+                for _ in range(BATCH)]
+
+    srv = BatchedServer(build_model(cfg), params, batch_size=BATCH,
+                        max_seq=MAX_SEQ, block_size=BLOCK, paged=True,
+                        mesh=mesh)
+    (dt,), (outs,) = _measure_rounds([srv], submit_all)
+    assert outs == out_paged, \
+        "sharded serving must emit identical tokens to single-device"
+    # wire traffic from the live decode executable: the scan body appears
+    # ONCE in the HLO, so the parsed bytes cover one decode STEP (every
+    # layer, the whole batch); a block dispatch runs BLOCK steps and
+    # emits BATCH tokens per step
+    with srv._mesh_ctx():
+        hlo = srv._decode_loop.lower(srv.params, srv.cache, srv.state,
+                                     None).compile().as_text()
+    per_step = collective_bytes_by_axis(hlo, mesh)
+    total = BATCH * NEW_TOKENS
+    return {
+        "devices": jax.device_count(),
+        "model_shards": shards,
+        "mesh_axes": mesh_axis_sizes(mesh),
+        "tokens_per_s_sharded": round(total / dt, 1),
+        "tokens_identical_to_single_device": True,
+        "collective_bytes_per_step_by_axis": per_step,
+        "collective_bytes_per_token_by_axis": {
+            axis: round(b / BATCH) for axis, b in per_step.items()},
+        "tiers_peak_per_shard": srv.tier_stats_peak(),
+    }
+
+
 def _attention_scaling(model) -> dict:
     """Per-decode-step attention read cost at several live sequence
     lengths: the dense slab always scans max_seq columns; the paged path
@@ -267,6 +316,7 @@ def run() -> list[str]:
     assert out_paged == out_dense, \
         "paged serving must emit identical tokens to the dense cache"
     prefix = _serve_prefix(cfg, params)
+    sharded = _serve_sharded(cfg, params, out_paged)
 
     mgr = srv_paged.manager
     bytes_per_page = srv_paged.kv_bytes_capacity() // (mgr.num_pages)
@@ -320,6 +370,10 @@ def run() -> list[str]:
             "table_delta_entries": srv_paged.stats["table_delta_entries"],
         },
         "prefix_cache": prefix,
+        # tensor-parallel serving: mesh shape, tokens/s, bit-identity to
+        # the single-device server, per-axis collective bytes of one
+        # decode block, and the per-shard residency snapshot
+        "sharded": sharded,
         # per-tier residency from the orchestrator's ledger: every tier
         # carries in_use_bytes / hwm_bytes / by_class (schema-checked in
         # CI).  ``tiers`` is the drained end state; ``tiers_peak`` is the
@@ -356,6 +410,14 @@ def run() -> list[str]:
         f" kv_hwm_unshared={prefix['kv_hwm_bytes_unshared']}"
         f" residency_reduction="
         f"{prefix['residency_reduction_vs_unshared']:.1%}"
+        f" identical_tokens=True",
+        f"server_sharded,"
+        f"{BATCH / sharded['tokens_per_s_sharded'] * 1e6:.0f},"
+        f"tok_s={sharded['tokens_per_s_sharded']:.0f}"
+        f" model_shards={sharded['model_shards']}"
+        f" devices={sharded['devices']}"
+        f" collective_B_per_tok="
+        f"{sum(sharded['collective_bytes_per_token_by_axis'].values())}"
         f" identical_tokens=True",
         _continuous(model, params),
     ]

@@ -23,9 +23,29 @@ import functools
 
 import jax
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.paged_attention.kernel import paged_attention
 from repro.kernels.paged_attention.ref import gather_pages, paged_attention_ref
+
+# Logical specs for the block pool under tensor parallelism: the KV-heads
+# axis is "model"-sharded (each device owns its head shard of EVERY
+# page), page ids and per-slot tables are replicated host bookkeeping.
+POOL_SPEC = P(None, None, "model", None)                 # (P, page, Hkv, hd)
+STACKED_POOL_SPEC = P(None, None, None, "model", None)   # (L, P, ...)
+GATHERED_KV_SPEC = P(None, "model", None, None)          # (B, Hkv, n*pg, hd)
+PAGE_TABLE_SPEC = P()                                    # replicated
+
+
+def gather_pages_sharded(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """:func:`gather_pages` with the KV-heads axis constrained to stay
+    "model"-sharded: the gather indexes only the (replicated) page axis,
+    so under a mesh each device materializes just its head shard of the
+    per-sequence view — no cross-device KV movement on the decode read
+    path.  Outside a mesh context the constraint is a no-op."""
+    from repro.runtime.sharding import maybe_constraint
+    return maybe_constraint(gather_pages(pages, page_table),
+                            GATHERED_KV_SPEC)
 
 
 @functools.lru_cache(maxsize=None)

@@ -22,10 +22,28 @@ def _pad_to(x, m0, m1):
                    static_argnames=("bm", "bk", "bn", "interpret"))
 def matmul(x: jax.Array, w: jax.Array, *, bm: int = 256, bk: int = 512,
            bn: int = 256, interpret: bool = False) -> jax.Array:
-    """Padded, jit'd streamed matmul; shapes need not be block-aligned."""
+    """Padded, jit'd streamed matmul; shapes need not be block-aligned.
+
+    Shapes are validated at trace time: operands must be 2-D, non-empty
+    and contraction-compatible.  (The old ``min(bm, m) or 1`` clamp
+    silently turned an empty operand into a degenerate 1-wide block and
+    returned garbage-shaped output instead of erroring.)
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(
+            f"streamed matmul takes 2-D operands, got x{x.shape} w{w.shape}")
     m, k = x.shape
-    _, n = w.shape
-    bm_, bk_, bn_ = min(bm, m) or 1, min(bk, k) or 1, min(bn, n) or 1
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(
+            f"contraction mismatch: x{x.shape} @ w{w.shape}")
+    if m == 0 or k == 0 or n == 0:
+        raise ValueError(
+            f"streamed matmul requires non-empty operands, got "
+            f"x{x.shape} @ w{w.shape}")
+    # explicit clamp: block sizes never exceed the (now known-positive)
+    # dims, so tiny shapes stream as a single block
+    bm_, bk_, bn_ = min(bm, m), min(bk, k), min(bn, n)
     xp = _pad_to(x, bm_, bk_)
     wp = _pad_to(w, bk_, bn_)
     out = streamed_matmul(xp, wp, bm=bm_, bk=bk_, bn=bn_,

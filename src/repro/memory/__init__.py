@@ -33,7 +33,8 @@ from repro.memory.policies import (BlockPoolResidency, DoubleBufferPrefetch,
 from repro.memory.tiers import (LOCAL, REMOTE, host_put, local_sharding,
                                 page_in, page_out, remote_sharding, reset,
                                 resolved_local_kind, resolved_remote_kind,
-                                supports_memory_spaces, to_remote)
+                                supports_memory_spaces, tier_sharding,
+                                to_remote)
 
 __all__ = [
     "MemoryLedger", "capacity_reduction", "paged_window_bytes",
@@ -44,5 +45,6 @@ __all__ = [
     "PagerConfig", "PinLocal", "ResidencyPolicy", "TopKExpertPrefetch",
     "LOCAL", "REMOTE", "host_put", "local_sharding", "page_in", "page_out",
     "remote_sharding", "reset", "resolved_local_kind",
-    "resolved_remote_kind", "supports_memory_spaces", "to_remote",
+    "resolved_remote_kind", "supports_memory_spaces", "tier_sharding",
+    "to_remote",
 ]

@@ -75,12 +75,21 @@ class MemoryLedger:
     double-counted: a block pool's *capacity* is the slab, its
     *residency* is the live pages inside it — only residency sums into
     ``in_use``/``hwm``.
+
+    Under tensor-parallel serving the ledger accounts **per shard**: the
+    orchestrator's mesh-aware placements record the bytes resident on
+    ONE device (total / model shards for heads- or column-sharded
+    classes), so ``capacity_reduction`` over ledger numbers stays
+    directly comparable to the per-GPU Table 4.3 simulator.  ``shards``
+    (stamped by ``MemoryOrchestrator.bind_mesh``) says how many
+    model-axis shards the per-shard numbers multiply out to.
     """
 
     def __init__(self) -> None:
         self._now: dict[str, dict[str, int]] = {}
         self._hwm: dict[str, int] = {}
         self._cap: dict[str, dict[str, int]] = {}
+        self.shards = 1          # model-axis shards the bytes are "per"
 
     def record(self, tier: str, tensor_class: str, nbytes: int) -> None:
         self._now.setdefault(tier, {})[tensor_class] = int(nbytes)
@@ -110,9 +119,12 @@ class MemoryLedger:
         return sorted(set(self._now) | set(self._hwm) | set(self._cap))
 
     def snapshot(self) -> dict:
-        """Machine-readable per-tier view (the BENCH_serve.json shape)."""
+        """Machine-readable per-tier view (the BENCH_serve.json shape).
+        Byte values are per model-axis shard (``shards`` > 1 under
+        tensor-parallel serving; 1 otherwise)."""
         return {t: {"in_use_bytes": self.in_use(t),
                     "hwm_bytes": self.hwm(t),
                     "capacity_bytes": self.capacity(t),
+                    "shards": self.shards,
                     "by_class": self.classes(t)}
                 for t in self.tiers()}

@@ -244,6 +244,8 @@ class MemoryOrchestrator:
         self.policies = dict(policies or {})
         self.policies.setdefault("layer_weights", PinLocal())
         self.policies.setdefault("kv_pool", PinLocal())
+        self.mesh = None          # bound by bind_mesh (sharded serving)
+        self.model_shards = 1
 
     # ----- planning ---------------------------------------------------------
     @classmethod
@@ -279,6 +281,77 @@ class MemoryOrchestrator:
                 top_k=getattr(model_config, "top_k", 1),
                 ledger=ledger)
         return cls(pager_config, policies, ledger)
+
+    # ----- mesh awareness ---------------------------------------------------
+    def bind_mesh(self, mesh) -> "MemoryOrchestrator":
+        """Make the orchestrator mesh-aware: residency policies then emit
+        NamedShardings against ``mesh`` (with each policy's tier resolved
+        to the backend's memory kind) and the ledger switches to
+        per-shard accounting — the bytes ONE device holds — so
+        ``capacity_reduction`` stays comparable to the per-GPU Table 4.3
+        simulator.  ``bind_mesh(None)`` returns to single-device mode."""
+        self.mesh = mesh
+        if mesh is None:
+            self.model_shards = 1
+        else:
+            from repro.runtime.sharding import mesh_axis_sizes
+            self.model_shards = int(mesh_axis_sizes(mesh).get("model", 1))
+        self.ledger.shards = self.model_shards
+        return self
+
+    def sharding_for(self, tensor_class: str, spec, *, key: str | None = None):
+        """The NamedSharding a tensor-class leaf should carry on the
+        bound mesh: the resolved partition spec + the class's policy tier
+        (``key`` disambiguates per-leaf tiers, e.g. OffloadBetweenSteps
+        pool vs bookkeeping leaves)."""
+        if self.mesh is None:
+            raise ValueError("no mesh bound; call bind_mesh first")
+        from repro.runtime.sharding import resolve_spec
+        policy = self.policies.get(tensor_class, PinLocal())
+        resolved = resolve_spec(spec, self.mesh)
+        if isinstance(policy, OffloadBetweenSteps):
+            return policy.sharding(self.mesh, resolved, key=key)
+        return policy.sharding(self.mesh, resolved)
+
+    @staticmethod
+    def placed_bytes(tree: Any) -> int:
+        """Bytes ONE device holds of a placed pytree (exact via each
+        leaf's shard shape; total bytes for sharding-less leaves)."""
+        total = 0
+        for x in jax.tree.leaves(tree):
+            sharding = getattr(x, "sharding", None)
+            if sharding is not None and hasattr(sharding, "shard_shape"):
+                n = 1
+                for d in sharding.shard_shape(x.shape):
+                    n *= d
+                total += n * x.dtype.itemsize
+            else:
+                total += x.size * x.dtype.itemsize
+        return total
+
+    def place_params(self, params: Any, spec_tree: Any) -> Any:
+        """Mesh-aware whole-model placement: logical specs are resolved
+        by ``runtime.sharding.named_shardings`` (pageable groups land in
+        the remote tier when paging is enabled), and the ledger records
+        the per-shard residency of both tiers."""
+        from repro.runtime.sharding import PAGEABLE_GROUPS, named_shardings
+        if self.mesh is None:
+            raise ValueError("no mesh bound; call bind_mesh first")
+        shardings = named_shardings(spec_tree, self.mesh,
+                                    pageable_remote=self.config.enabled)
+        placed = jax.tree.map(jax.device_put, params, shardings)
+        local = remote = 0
+        for path, x in jax.tree_util.tree_leaves_with_path(placed):
+            nb = self.placed_bytes(x)
+            if (self.config.enabled and path
+                    and getattr(path[0], "key", None) in PAGEABLE_GROUPS):
+                remote += nb
+            else:
+                local += nb
+        if remote:
+            self.ledger.record(tiers.REMOTE, "params", remote)
+        self.ledger.record(tiers.LOCAL, "params", local)
+        return placed
 
     @property
     def expert_policy(self) -> TopKExpertPrefetch | None:
@@ -339,11 +412,23 @@ class MemoryOrchestrator:
                                total - expert_bytes)
         return placed
 
-    def place_kv_pool(self, cache: Any) -> Any:
+    def place_kv_pool(self, cache: Any, specs: Any = None) -> Any:
         """Residency for the serving KV cache (dense slab or block
         pool): parked in the remote tier under ``offload_kv`` (only one
-        layer's slice local at a time), device-resident otherwise."""
+        layer's slice local at a time), device-resident otherwise.
+
+        With a bound mesh and a spec tree (``model.cache_specs()`` /
+        ``model.paged_cache_specs()``) the cache is sharded — KV heads
+        over the ``"model"`` axis — and capacity is recorded per shard.
+        """
         policy = self.policies["kv_pool"]
+        if self.mesh is not None and specs is not None:
+            placed = {k: jax.device_put(
+                          v, self.sharding_for("kv_pool", specs[k], key=k))
+                      for k, v in cache.items()}
+            self.ledger.record_capacity(policy.tier, "kv_pool",
+                                        self.placed_bytes(placed))
+            return placed
         placed = policy.place(cache)
         # capacity, not residency: a pool slab is provisioned at full
         # size while only live pages count as in-use (no double count)
@@ -358,6 +443,7 @@ class MemoryOrchestrator:
         :class:`BlockPoolResidency`); home tier follows the kv_pool
         policy."""
         kwargs.setdefault("tier", self.policies["kv_pool"].tier)
+        kwargs.setdefault("shard_factor", self.model_shards)
         return BlockPoolResidency(num_pages, page_size,
                                   ledger=self.ledger, **kwargs)
 

@@ -68,12 +68,22 @@ class PagerConfig:
 
 @runtime_checkable
 class ResidencyPolicy(Protocol):
-    """Where a tensor class lives at rest, and how it is placed there."""
+    """Where a tensor class lives at rest, and how it is placed there.
+
+    ``sharding(mesh, spec)`` is the mesh-aware face of the same answer:
+    a :class:`~jax.sharding.NamedSharding` carrying BOTH the partition
+    spec and the policy's tier resolved to the memory kind the current
+    backend exposes — policies emit NamedShardings, never bare kinds.
+    """
 
     tier: str
 
     def place(self, tree: Any) -> Any:
         """Move ``tree`` into the policy's home tier (eager)."""
+        ...
+
+    def sharding(self, mesh, spec):
+        """NamedSharding placing one leaf in the policy's tier."""
         ...
 
 
@@ -86,6 +96,9 @@ class PinLocal:
     def place(self, tree: Any) -> Any:
         return tree
 
+    def sharding(self, mesh, spec):
+        return tiers.tier_sharding(mesh, spec, self.tier)
+
 
 @dataclasses.dataclass(frozen=True)
 class DoubleBufferPrefetch:
@@ -97,6 +110,9 @@ class DoubleBufferPrefetch:
 
     def place(self, tree: Any) -> Any:
         return tiers.host_put(tree)
+
+    def sharding(self, mesh, spec):
+        return tiers.tier_sharding(mesh, spec, self.tier)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,6 +128,12 @@ class OffloadBetweenSteps:
     def place(self, tree: Any) -> Any:
         return {k: (tiers.host_put(v) if k in self.pool_keys else v)
                 for k, v in tree.items()}
+
+    def sharding(self, mesh, spec, *, key: str | None = None):
+        """Pool leaves live remote; bookkeeping leaves stay local."""
+        tier = self.tier if (key is None or key in self.pool_keys) \
+            else tiers.LOCAL
+        return tiers.tier_sharding(mesh, spec, tier)
 
 
 class BlockPoolResidency:
@@ -132,11 +154,17 @@ class BlockPoolResidency:
                  kv_heads: int | None = None, head_dim: int | None = None,
                  dtype=jnp.bfloat16, bytes_per_page: int | None = None,
                  tier: str = tiers.LOCAL,
-                 ledger: MemoryLedger | None = None):
+                 ledger: MemoryLedger | None = None,
+                 shard_factor: int = 1):
         self.manager = BlockManager(num_pages, page_size)
         self.page_size = page_size
         self.tier = tier
         self.ledger = ledger
+        # model-axis shards of the device pools: the kv-heads axis is
+        # "model"-sharded under tensor parallelism, so ONE device holds
+        # 1/shard_factor of every page's bytes — ledger residency is
+        # recorded per shard (comparable to the per-GPU simulator)
+        self.shard_factor = max(int(shard_factor), 1)
         self._bytes_per_page = bytes_per_page
         self.k = self.v = None
         if kv_heads is not None and head_dim is not None:
@@ -150,6 +178,9 @@ class BlockPoolResidency:
 
     def place(self, tree: Any) -> Any:
         return tree
+
+    def sharding(self, mesh, spec):
+        return tiers.tier_sharding(mesh, spec, self.tier)
 
     def bind_kv_shape(self, kv_heads: int, head_dim: int, itemsize: int,
                       num_layers: int = 1) -> None:
@@ -183,11 +214,13 @@ class BlockPoolResidency:
         return self.manager.fragmentation()
 
     def record(self) -> None:
-        """Push the pool's live footprint into the ledger."""
+        """Push the pool's live footprint into the ledger (per shard:
+        heads-sharded pools hold 1/shard_factor of each page per device)."""
         if self.ledger is not None and self._bytes_per_page:
             self.ledger.record(self.tier, self.tensor_class,
                                self.manager.pages_in_use
-                               * self._bytes_per_page)
+                               * self._bytes_per_page
+                               // self.shard_factor)
 
     # ----- host-side pools (experiments/tests) ------------------------------
     def alloc_seq(self, uid: int) -> None:
@@ -258,6 +291,9 @@ class TopKExpertPrefetch:
             self.ledger.record(self.tier, self.tensor_class,
                                tree_bytes(tree))
         return tiers.host_put(tree)
+
+    def sharding(self, mesh, spec):
+        return tiers.tier_sharding(mesh, spec, self.tier)
 
     def resident_bytes(self, banks: dict, num_rows: int) -> int:
         """Local bytes the gather keeps resident: ``num_rows`` routed

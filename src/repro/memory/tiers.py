@@ -140,13 +140,23 @@ def supports_memory_spaces() -> bool:
 # Placement primitives
 # ---------------------------------------------------------------------------
 
+def tier_sharding(mesh, pspec: P, tier: str) -> NamedSharding:
+    """NamedSharding placing data in ``tier`` (``LOCAL``/``REMOTE``) with
+    the memory kind the *current backend* actually exposes — resolved
+    through the registry, never hardcoded.  A ``None`` kind (tier not
+    backed on this platform) falls back to the backend default, so CPU —
+    where local == remote == ``unpinned_host`` — degenerates cleanly."""
+    kind = _REGISTRY.tiers().get(tier, Tier(tier, None)).kind
+    return NamedSharding(mesh, pspec, memory_kind=kind)
+
+
 def remote_sharding(mesh, pspec: P) -> NamedSharding:
     """NamedSharding in the FengHuang remote tier."""
-    return NamedSharding(mesh, pspec, memory_kind=REMOTE_KIND)
+    return tier_sharding(mesh, pspec, REMOTE)
 
 
 def local_sharding(mesh, pspec: P) -> NamedSharding:
-    return NamedSharding(mesh, pspec, memory_kind=LOCAL_KIND)
+    return tier_sharding(mesh, pspec, LOCAL)
 
 
 def to_remote(tree: Any, mesh, pspec_tree: Any) -> Any:

@@ -273,6 +273,22 @@ def _heads_sharded(t: jax.Array) -> jax.Array:
     return maybe_constraint(t, P(BATCH_AXES, None, "model", None))
 
 
+def _tp_gathered(t: jax.Array) -> jax.Array:
+    """All-gather TP boundary for the SERVING path: replicate an
+    activation (sharded heads or hidden dim) before an output projection
+    against a *replicated* weight.
+
+    An all-gather is pure data movement, and the full-width projection
+    that follows runs the exact dot the single-device server runs — so
+    sharded serving is **bit-identical** by construction.  The
+    alternative (Megatron row-parallel: partial dots + all-reduce, kept
+    for training where throughput beats determinism) rounds each
+    shard's partial sum separately and flips greedy ties mid-stream.
+    Outside a mesh this is a no-op."""
+    from repro.runtime.sharding import replicate_constraint
+    return replicate_constraint(t)
+
+
 def attn_forward(p: dict, x: jax.Array, positions: jax.Array,
                  cfg: ModelConfig, *, causal: bool = True) -> jax.Array:
     """Full-sequence (train/prefill) self-attention; returns (B, S, d)."""
@@ -288,13 +304,16 @@ def attn_forward(p: dict, x: jax.Array, positions: jax.Array,
 
 def attn_prefill_kv(p: dict, x: jax.Array, positions: jax.Array,
                     cfg: ModelConfig):
-    """Like attn_forward but also returns (k, v) for cache seeding."""
+    """Like attn_forward but also returns (k, v) for cache seeding.
+    Serving path: the head axis is gathered before the out projection
+    (all-gather TP — see :func:`_tp_gathered`)."""
     q, k, v = _project_qkv(p, x, x, cfg)
     q = _heads_sharded(apply_rope(q, positions, cfg.rope_theta))
     k = _heads_sharded(apply_rope(k, positions, cfg.rope_theta))
     v = _heads_sharded(v)
-    o = flash_attention(q, k, v, causal=True, window=cfg.sliding_window,
-                        q_block=cfg.q_block, kv_block=cfg.kv_block)
+    o = _tp_gathered(
+        flash_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                        q_block=cfg.q_block, kv_block=cfg.kv_block))
     b, s = x.shape[:2]
     return o.reshape(b, s, -1) @ p["wo"], (k, v)
 
@@ -324,9 +343,10 @@ def attn_prefill_prefix_kv(p: dict, x: jax.Array, positions: jax.Array,
     prefix_len = k_prefix.shape[1]
     kf = jnp.concatenate([k_prefix.astype(k.dtype), k], axis=1)
     vf = jnp.concatenate([v_prefix.astype(v.dtype), v], axis=1)
-    o = flash_attention(q, kf, vf, causal=True, window=cfg.sliding_window,
+    o = _tp_gathered(
+        flash_attention(q, kf, vf, causal=True, window=cfg.sliding_window,
                         q_block=cfg.q_block, kv_block=cfg.kv_block,
-                        q_offset=prefix_len)
+                        q_offset=prefix_len))
     b, s = x.shape[:2]
     return o.reshape(b, s, -1) @ p["wo"], (k, v)
 
@@ -355,7 +375,7 @@ def attn_decode(p: dict, x: jax.Array, cache_k: jax.Array,
     else:
         o = decode_attention(q, cache_k, cache_v, cur_pos,
                              window=cfg.sliding_window, extra_kv=(k0, v0))
-    out = o.reshape(b, 1, -1) @ p["wo"]
+    out = _tp_gathered(o).reshape(b, 1, -1) @ p["wo"]
     return out, k0, v0
 
 
@@ -431,7 +451,6 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     so paged and dense decode share every floating-point op.
     """
     from repro.kernels.paged_attention import ops as paged_ops
-    from repro.kernels.paged_attention.ref import gather_pages
 
     b, _, hq, hd = q.shape
     if use_kernel is None:
@@ -443,8 +462,11 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
         o = paged_attention(qg, k_pages, v_pages, page_table, cur_pos,
                             extra_kv=extra_kv, interpret=interpret)
         return o.reshape(b, 1, hq, hd).astype(q.dtype)
-    k = gather_pages(k_pages, page_table)        # (B, Hkv, n*page, hd)
-    v = gather_pages(v_pages, page_table)
+    # spec-threaded gather: each device gathers only its "model" head
+    # shard of the mapped pages, so tensor-parallel paged decode reads
+    # stay collective-free (see ops.GATHERED_KV_SPEC)
+    k = paged_ops.gather_pages_sharded(k_pages, page_table)
+    v = paged_ops.gather_pages_sharded(v_pages, page_table)
     return decode_attention(q, k, v, cur_pos, extra_kv=extra_kv)
 
 
@@ -466,7 +488,7 @@ def attn_decode_paged(p: dict, x: jax.Array, k_pages: jax.Array,
     v0 = v[:, 0]
     o = paged_decode_attention(q, k_pages, v_pages, page_table, cur_pos,
                                (k0, v0))
-    out = o.reshape(b, 1, -1) @ p["wo"]
+    out = _tp_gathered(o).reshape(b, 1, -1) @ p["wo"]
     return out, k0, v0
 
 
@@ -530,8 +552,15 @@ def mlp_specs(stacked: bool = True) -> dict:
             "wo": P(*L, "model", None)}
 
 
-def mlp_forward(p: dict, x: jax.Array) -> jax.Array:
+def mlp_forward(p: dict, x: jax.Array, *, gather_tp: bool = False
+                ) -> jax.Array:
+    """``gather_tp`` (serving): gather the d_ff-sharded hidden before
+    the down projection so the full-width dot is bit-identical to
+    single-device (the weight is replicated in the serving placement);
+    training keeps the Megatron partial-sum + reduce-scatter path."""
     h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    if gather_tp:
+        h = _tp_gathered(h)
     return h @ p["wo"]
 
 

@@ -276,7 +276,11 @@ class MoELM(DenseLM):
             "ln1": P(None, None), "ln2": P(None, None),
         }
 
-    def ffn(self, lp: dict, x: jax.Array) -> jax.Array:
+    def ffn(self, lp: dict, x: jax.Array, *,
+            gather_tp: bool = False) -> jax.Array:
+        # ``gather_tp`` is the dense-family all-gather-TP knob; the MoE
+        # combine already sums expert outputs in replicated f32, so the
+        # flag has nothing extra to gather here.
         # expert paging first: banks are at rest in the remote tier, so
         # the dense (E, C, d) dispatch would drag the whole bank through
         # local memory — gather only the routed rows instead.  (EP over a

@@ -45,6 +45,9 @@ def _scatter_pages(cache: dict, pages: jax.Array, k_new: jax.Array,
         val = jnp.pad(val, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
         l_, b_ = val.shape[:2]
         val = val.reshape(l_, b_, n, page, val.shape[3], val.shape[4])
+        # under a mesh the update's head axis matches the pool's shard
+        # layout, so the scatter stays device-local per head shard
+        val = maybe_constraint(val, P(None, None, None, None, "model", None))
         return pool.at[:, pages].set(val.astype(pool.dtype))
 
     return {"k_pages": scatter(cache["k_pages"], k_new),
@@ -94,9 +97,31 @@ class DenseLM:
             "ln_f": P(None),
         }
 
+    def serving_param_specs(self) -> dict:
+        """``param_specs`` with the contraction-sharded output
+        projections (``wo`` of attention and the MLP) replicated: the
+        serving blocks all-gather their activations before these dots
+        (:func:`repro.models.layers._tp_gathered`), so the full-width
+        projection is bitwise identical to single-device — the placement
+        and the constraint are two halves of one contract.  Everything
+        else (QKV, gate/up, embeddings, LM head) keeps its model-axis
+        shard."""
+        def fix(path, s):
+            key = jax.tree_util.keystr(path)
+            # expert banks (['moe']['wo']) are expert-axis sharded, not
+            # contraction-sharded — replicating them would multiply
+            # per-device expert memory for no determinism gain
+            if key.endswith("['wo']") and "['moe']" not in key:
+                return P(*(None,) * len(s))
+            return s
+        return jax.tree_util.tree_map_with_path(
+            fix, self.param_specs(),
+            is_leaf=lambda x: isinstance(x, P))
+
     # ----- blocks ------------------------------------------------------------
-    def ffn(self, lp: dict, x: jax.Array) -> jax.Array:
-        return L.mlp_forward(lp["mlp"], x)
+    def ffn(self, lp: dict, x: jax.Array, *,
+            gather_tp: bool = False) -> jax.Array:
+        return L.mlp_forward(lp["mlp"], x, gather_tp=gather_tp)
 
     def block_train(self, lp: dict, x: jax.Array,
                     positions: jax.Array) -> jax.Array:
@@ -119,7 +144,8 @@ class DenseLM:
                                   L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
                                   positions, cfg)
         h = x + a
-        return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps)), kv
+        return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                            gather_tp=True), kv
 
     def block_decode(self, lp: dict, x: jax.Array, ck, cv, cur_pos):
         """Cache is read-only; returns the current token's (k, v) for the
@@ -129,7 +155,8 @@ class DenseLM:
                                   L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
                                   ck, cv, cur_pos, cfg)
         h = x + a
-        return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps)), k0, v0
+        return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                            gather_tp=True), k0, v0
 
     def block_prefill_prefix(self, lp: dict, x: jax.Array,
                              positions: jax.Array, k_prefix, v_prefix):
@@ -140,7 +167,8 @@ class DenseLM:
             lp["attn"], L.rmsnorm(x, lp["ln1"], cfg.norm_eps), positions,
             k_prefix, v_prefix, cfg)
         h = x + a
-        return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps)), kv
+        return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                            gather_tp=True), kv
 
     def block_decode_paged(self, lp: dict, x: jax.Array, k_pages, v_pages,
                            pages, cur_pos):
@@ -150,7 +178,8 @@ class DenseLM:
                                         L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
                                         k_pages, v_pages, pages, cur_pos, cfg)
         h = x + a
-        return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps)), k0, v0
+        return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                            gather_tp=True), k0, v0
 
     # ----- forward passes ----------------------------------------------------
     def _embed(self, params, tokens):
@@ -323,7 +352,7 @@ class DenseLM:
         prefill (see :func:`repro.models.layers.attn_prefill_prefix_kv`).
         Returns (last-position logits, cache).
         """
-        from repro.kernels.paged_attention.ref import gather_pages
+        from repro.kernels.paged_attention.ops import gather_pages_sharded
 
         cfg = self.cfg
         x = self._embed(params, tokens)
@@ -335,8 +364,8 @@ class DenseLM:
         def body(h, lp, cl):
             kp, vp = cl
             # (B, Hkv, pre, hd) cache layout -> (B, pre, Hkv, hd)
-            kpre = gather_pages(kp, prefix_pages).transpose(0, 2, 1, 3)
-            vpre = gather_pages(vp, prefix_pages).transpose(0, 2, 1, 3)
+            kpre = gather_pages_sharded(kp, prefix_pages).transpose(0, 2, 1, 3)
+            vpre = gather_pages_sharded(vp, prefix_pages).transpose(0, 2, 1, 3)
             return self.block_prefill_prefix(lp, h, positions, kpre, vpre)
 
         x, (k_new, v_new) = self.mem.layer_scan(
@@ -482,7 +511,10 @@ class DenseLM:
             xs=(cache["k_pages"], cache["v_pages"]),
             unroll=cfg.decode_unroll)
         # one scatter per pool for all L layers and B slots — the fix for
-        # the old host-side PagePool.append's dispatch-per-token writes
+        # the old host-side PagePool.append's dispatch-per-token writes;
+        # the (L, B, Hkv, hd) updates keep the pool's head-shard layout
+        k_new = maybe_constraint(k_new, P(None, None, "model", None))
+        v_new = maybe_constraint(v_new, P(None, None, "model", None))
         cache = {"k_pages": cache["k_pages"].at[:, pids, slots].set(
                      k_new.astype(cache["k_pages"].dtype)),
                  "v_pages": cache["v_pages"].at[:, pids, slots].set(

@@ -57,6 +57,7 @@ as the baseline the serving benchmark measures against.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import queue
 import threading
@@ -71,6 +72,8 @@ from repro.memory import MemoryOrchestrator
 from repro.models.base import DecodeState
 from repro.models.transformer import (decode_loop, sample_tokens,
                                       vocab_mask_logits)
+from repro.runtime.sharding import (activate_mesh, gather_tp_mode,
+                                    mesh_axis_sizes, replicated)
 
 # Single source of truth for the logits -> token step; the old
 # ``serve.sample`` duplicate of ``transformer.sample_tokens`` is gone.
@@ -158,6 +161,23 @@ class BatchedServer:
     requests admitted mid-stream at temperature > 0 — can shift.
     ``prefix_cache`` (default on, paged only) shares prompt-prefix pages
     across requests via per-page refcounts.
+
+    ``mesh`` (default None = single device) turns on tensor-parallel
+    serving: params are placed by ``runtime.sharding.named_shardings``
+    over the model's ``serving_param_specs()`` (pageable groups in the
+    remote tier when the pager is on), the KV cache — dense slab or
+    page pools — is sharded over the ``"model"`` axis by KV heads, the
+    decode state and page tables are replicated, and every dispatch is
+    traced under the mesh so the model-side constraint specs resolve.
+    Tokens are bit-identical to the single-device server at any
+    temperature **because serving TP is all-gather based**: activations
+    are replicated before the attention/MLP output projections and
+    those weights stay replicated, so every cross-device transfer is
+    pure data movement and every dot runs full-width exactly as on one
+    device.  (Partial-sum row-parallel TP is NOT safe here: each
+    shard's partial rounds separately and flips greedy ties — that path
+    is kept for training only.)  Models without ``serving_param_specs``
+    are rejected rather than served with silently diverging tokens.
     """
 
     def __init__(self, model, params, *, batch_size: int = 4,
@@ -165,9 +185,8 @@ class BatchedServer:
                  block_size: int = 8, eos_id: int | None = None,
                  paged: bool | None = None, page_size: int | None = None,
                  num_pages: int | None = None, pipeline: bool = True,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, mesh=None):
         self.model = model
-        self.params = params
         self.batch = batch_size
         self.max_seq = max_seq
         self.block_size = block_size
@@ -184,12 +203,50 @@ class BatchedServer:
         # models without one get a fresh plan from their config.
         self.mem: MemoryOrchestrator = (
             getattr(model, "mem", None) or MemoryOrchestrator.plan(model.cfg))
+        # validate BEFORE binding: a rejected mesh must not leave the
+        # model's shared orchestrator/ledger in sharded mode
+        spec_fn = None
+        if mesh is not None:
+            model.cfg.assert_mesh_compatible(mesh_axis_sizes(mesh))
+            spec_fn = getattr(model, "serving_param_specs", None)
+            if spec_fn is None:
+                raise ValueError(
+                    f"{type(model).__name__} does not expose "
+                    f"serving_param_specs; its family is not wired for "
+                    f"the all-gather-TP serving placement, and serving "
+                    f"it over a mesh would emit silently diverging "
+                    f"tokens (partial-sum rounding)")
+        self.mesh = mesh
+        self.mem.bind_mesh(mesh)
+        try:
+            self._init_live_state(model, params, spec_fn, batch_size,
+                                  max_seq, seed, page_size, num_pages,
+                                  pipeline, prefix_cache, mesh)
+        except BaseException:
+            # ANY post-bind construction failure (param tree mismatch,
+            # placement error, cache init) must not leave the model's
+            # shared orchestrator/ledger in sharded mode
+            self.mem.bind_mesh(None)
+            raise
+
+    def _init_live_state(self, model, params, spec_fn, batch_size, max_seq,
+                         seed, page_size, num_pages, pipeline, prefix_cache,
+                         mesh) -> None:
+        """Everything after the mesh is bound: placement, jit entry
+        points, caches, slot state (split out so __init__ can unbind the
+        mesh if any of it fails)."""
+        if spec_fn is not None:
+            # serving placement: all-gather TP (output projections
+            # replicated) so sharded tokens are bit-identical — see
+            # DenseLM.serving_param_specs
+            params = self.mem.place_params(params, spec_fn())
+        self.params = params
         self.pipeline = bool(pipeline)
         self.max_inflight = 2 if self.pipeline else 1
         self.prefix_cache = bool(prefix_cache)
         self._decode_loop = make_decode_loop(
-            model, block_size=block_size, temperature=temperature,
-            eos_id=eos_id)
+            model, block_size=self.block_size, temperature=self.temperature,
+            eos_id=self.eos_id)
         self._admit_step = self.mem.donating_jit(self._make_admit_step(),
                                                  donate_argnums=(2, 3))
         self._admit_step_prefix = None
@@ -205,7 +262,9 @@ class BatchedServer:
                                   jnp.dtype(cfg.dtype).itemsize,
                                   cfg.num_layers)
             self.cache = self.mem.place_kv_pool(
-                model.init_paged_cache(self.num_pages, self.page_size))
+                model.init_paged_cache(self.num_pages, self.page_size),
+                specs=(model.paged_cache_specs() if mesh is not None
+                       else None))
             self._admit_step_prefix = self.mem.donating_jit(
                 self._make_admit_step_prefix(), donate_argnums=(2, 3))
             # persistent device-resident page table: starts at the
@@ -215,20 +274,25 @@ class BatchedServer:
             self._table_w = 1
             self._narrow_blocks = 0
             self._mirror = np.zeros((batch_size, 1), np.int32)
-            init_pages = jnp.asarray(self._mirror)
+            init_pages = self._dev(jnp.asarray(self._mirror))
         else:
             self.kv = None
             self.manager = None
             # dense slab: resident at full size regardless of occupancy
-            # (capacity == residency), in the kv_pool policy's tier
+            # (capacity == residency), in the kv_pool policy's tier;
+            # per-shard bytes under a mesh (heads axis "model"-sharded)
             self.cache = self.mem.place_kv_pool(
-                model.init_cache(batch_size, max_seq))
+                model.init_cache(batch_size, max_seq),
+                specs=(model.cache_specs() if mesh is not None else None))
             self.mem.ledger.record(
                 self.mem.policies["kv_pool"].tier, "kv_pool",
-                memory.tree_bytes(self.cache))
+                self.mem.placed_bytes(self.cache))
             init_pages = None
         self.state = DecodeState.init(batch_size, jax.random.PRNGKey(seed),
                                       pages=init_pages)
+        if mesh is not None:
+            # decode state is host-mirrored bookkeeping: replicate it
+            self.state = jax.device_put(self.state, replicated(mesh))
         self.slots: list[Request | None] = [None] * batch_size
         self._slot_pos = [0] * batch_size      # host mirror of state.pos
         self._planned = [0] * batch_size       # in-flight decode tokens
@@ -240,7 +304,30 @@ class BatchedServer:
                       "kv_pages_in_use": 0, "kv_pages_hwm": 0,
                       "compiles": 0, "table_rebuilds": 0,
                       "table_delta_entries": 0, "prefix_hits": 0,
-                      "prefix_shared_pages": 0}
+                      "prefix_shared_pages": 0,
+                      "model_shards": self.mem.model_shards}
+
+    # ----- mesh plumbing -----------------------------------------------------
+    def _mesh_ctx(self):
+        """Ambient-mesh context for every trace/dispatch, with the
+        all-gather-TP constraints armed (they belong to the serving
+        placement ONLY — other mesh users like the dry-run keep the
+        Megatron row-parallel lowering).  No-op context single-device."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        stack = contextlib.ExitStack()
+        stack.enter_context(activate_mesh(self.mesh))
+        stack.enter_context(gather_tp_mode())
+        return stack
+
+    def _dev(self, x: jax.Array) -> jax.Array:
+        """Pin a host-built array (page tables, deltas) to its
+        steady-state placement: replicated on the mesh, so dispatches see
+        one consistent input sharding instead of compiling an extra
+        executable for the uncommitted first transfer."""
+        if self.mesh is None:
+            return x
+        return jax.device_put(x, replicated(self.mesh))
 
     # ----- request intake ----------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
@@ -466,30 +553,33 @@ class BatchedServer:
             new_ids = self.manager.ensure(slot, plen)
             if shared:
                 suffix = toks[:, len(shared) * self.page_size:]
-                nxt, self.cache, self.state = self._admit_step_prefix(
-                    self.params, jnp.asarray(suffix), self.cache, self.state,
-                    jnp.asarray(slot, jnp.int32),
-                    jnp.asarray(req.max_new_tokens, jnp.int32),
-                    jnp.asarray([shared], jnp.int32),
-                    jnp.asarray([new_ids], jnp.int32))
+                with self._mesh_ctx():
+                    nxt, self.cache, self.state = self._admit_step_prefix(
+                        self.params, jnp.asarray(suffix), self.cache,
+                        self.state, jnp.asarray(slot, jnp.int32),
+                        jnp.asarray(req.max_new_tokens, jnp.int32),
+                        jnp.asarray([shared], jnp.int32),
+                        jnp.asarray([new_ids], jnp.int32))
                 self.stats["prefix_hits"] += 1
                 self.stats["prefix_shared_pages"] += len(shared)
             else:
                 ptable = jnp.asarray([new_ids], jnp.int32)
-                nxt, self.cache, self.state = self._admit_step(
-                    self.params, jnp.asarray(toks), self.cache, self.state,
-                    jnp.asarray(slot, jnp.int32),
-                    jnp.asarray(req.max_new_tokens, jnp.int32), ptable)
+                with self._mesh_ctx():
+                    nxt, self.cache, self.state = self._admit_step(
+                        self.params, jnp.asarray(toks), self.cache,
+                        self.state, jnp.asarray(slot, jnp.int32),
+                        jnp.asarray(req.max_new_tokens, jnp.int32), ptable)
             self.manager.note_tokens(slot, plen)
             if self.prefix_cache:
                 self._register_prefix(toks, plen, slot)
             self.kv.record()
             self._note_peak()
         else:
-            nxt, self.cache, self.state = self._admit_step(
-                self.params, jnp.asarray(toks), self.cache, self.state,
-                jnp.asarray(slot, jnp.int32),
-                jnp.asarray(req.max_new_tokens, jnp.int32))
+            with self._mesh_ctx():
+                nxt, self.cache, self.state = self._admit_step(
+                    self.params, jnp.asarray(toks), self.cache, self.state,
+                    jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(req.max_new_tokens, jnp.int32))
         if saved_pages is not None:
             self.state = dataclasses.replace(self.state, pages=saved_pages)
         self._slot_pos[slot] = plen
@@ -578,8 +668,8 @@ class BatchedServer:
             self._table_w = w_need
             self._narrow_blocks = 0
             self._mirror = desired
-            self.state = dataclasses.replace(self.state,
-                                             pages=jnp.asarray(desired))
+            self.state = dataclasses.replace(
+                self.state, pages=self._dev(jnp.asarray(desired)))
             self.stats["table_rebuilds"] += 1
             return None
         rows, cols = np.nonzero(desired != self._mirror)
@@ -592,8 +682,9 @@ class BatchedServer:
         d_pids = np.zeros(cap, np.int32)
         d_slots[:n], d_cols[:n] = rows, cols
         d_pids[:n] = desired[rows, cols]
-        return (jnp.asarray(d_slots), jnp.asarray(d_cols),
-                jnp.asarray(d_pids))
+        return (self._dev(jnp.asarray(d_slots)),
+                self._dev(jnp.asarray(d_cols)),
+                self._dev(jnp.asarray(d_pids)))
 
     def _dispatch_block(self):
         """Dispatch ONE fused decode block without waiting for earlier
@@ -617,11 +708,13 @@ class BatchedServer:
             delta = self._table_delta()
             self.kv.record()
             self._note_peak()
-            toks, valid, self.cache, self.state = self._decode_loop(
-                self.params, self.cache, self.state, delta)
+            with self._mesh_ctx():
+                toks, valid, self.cache, self.state = self._decode_loop(
+                    self.params, self.cache, self.state, delta)
         else:
-            toks, valid, self.cache, self.state = self._decode_loop(
-                self.params, self.cache, self.state)
+            with self._mesh_ctx():
+                toks, valid, self.cache, self.state = self._decode_loop(
+                    self.params, self.cache, self.state)
         self.stats["dispatches"] += 1
         self.stats["blocks"] += 1
         self.stats["steps"] += self.block_size

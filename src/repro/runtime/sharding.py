@@ -8,19 +8,36 @@ concrete mesh:
 * multi-pod mesh ("pod", "data", "model"): batch -> ("pod", "data")
 * smoke meshes (1 device): everything -> None
 
-It also applies the FengHuang memory tier: params whose top-level group is
-pageable get ``memory_kind="pinned_host"`` when the pager is enabled.
+It also applies the FengHuang memory tiers: the memory kind of every
+NamedSharding is resolved through :mod:`repro.memory.tiers` — local for
+ordinary params, remote for pageable groups when the pager is enabled —
+so the same spec tree places correctly on GPU/TPU (``device`` /
+``pinned_host``) and on the CPU backend (where both tiers are
+``unpinned_host`` and a hardcoded kind would be rejected outright).
+
+The serving runtime runs its dispatches inside :func:`activate_mesh`
+so :func:`maybe_constraint` — the logical-spec constraint model code
+sprinkles on residuals and attention internals — resolves against the
+serving mesh; outside a mesh context it stays a no-op.
 """
 from __future__ import annotations
 
-import functools
+import contextlib
+import re
+import threading
+
 from typing import Any
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.memory.tiers import REMOTE_KIND
+from repro.memory import tiers as memtiers
 from repro.models.base import BATCH_AXES
+
+try:  # jax <= 0.4 ambient-mesh plumbing (Mesh context manager)
+    from jax.interpreters import pxla as _pxla
+except ImportError:  # pragma: no cover - future jax without the shim
+    _pxla = None
 
 PAGEABLE_GROUPS = ("layers", "groups", "dec_layers", "enc_layers")
 
@@ -57,16 +74,19 @@ def named_shardings(spec_tree: Any, mesh: Mesh, *,
                     pageable_remote: bool = False) -> Any:
     """PartitionSpec tree -> NamedSharding tree.
 
-    With ``pageable_remote=True``, specs under PAGEABLE_GROUPS are placed in
-    the FengHuang remote tier (pinned_host) — the weights will be paged into
-    device memory by the TensorPager inside the step function.
+    With ``pageable_remote=True``, specs under PAGEABLE_GROUPS are placed
+    in the FengHuang remote tier — the weights will be paged into local
+    memory by the orchestrator's layer scans.  Both tiers' memory kinds
+    come from the :class:`~repro.memory.tiers.TierRegistry` for the
+    current backend (``pinned_host`` remote on GPU/TPU, ``unpinned_host``
+    on CPU — the old hardcoded kind broke CPU placement entirely).
     """
 
     def convert(path, s):
-        kind = "device"
+        tier = memtiers.LOCAL
         if pageable_remote and path and getattr(path[0], "key", None) in PAGEABLE_GROUPS:
-            kind = REMOTE_KIND
-        return NamedSharding(mesh, resolve_spec(s, mesh), memory_kind=kind)
+            tier = memtiers.REMOTE
+        return memtiers.tier_sharding(mesh, resolve_spec(s, mesh), tier)
 
     return jax.tree_util.tree_map_with_path(convert, spec_tree,
                                             is_leaf=_treat_as_leaf)
@@ -78,47 +98,236 @@ def batch_spec(mesh: Mesh, *trailing) -> P:
     return P(axes if axes else None, *trailing)
 
 
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully replicated placement on ``mesh`` (decode state, page tables,
+    per-slot bookkeeping — everything the host mirrors byte-exactly)."""
+    return NamedSharding(mesh, P())
+
+
 def constraint(x, mesh: Mesh, spec: P):
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, resolve_spec(spec, mesh)))
 
 
+# ---------------------------------------------------------------------------
+# Ambient mesh
+# ---------------------------------------------------------------------------
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    """Axis name -> size for a concrete ``Mesh`` or an ``AbstractMesh``
+    — the ONE size-lookup used everywhere (no per-call duck typing)."""
+    if hasattr(mesh, "axis_sizes"):         # AbstractMesh (jax >= 0.5)
+        return dict(zip(mesh.axis_names, mesh.axis_sizes))
+    return dict(mesh.shape)                 # Mesh: OrderedDict name->size
+
+
+def ambient_mesh():
+    """The mesh enclosing the current trace, or None.
+
+    jax >= 0.5 exposes it as :func:`jax.sharding.get_abstract_mesh`;
+    jax <= 0.4 tracks the ``with mesh:`` context in
+    ``pxla.thread_resources``.  Neither probe swallows real errors — a
+    broken mesh propagates instead of silently no-op'ing constraints.
+    """
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        am = get()
+        if am is not None and not getattr(am, "empty", False):
+            return am
+    env = getattr(_pxla, "thread_resources", None)
+    mesh = getattr(getattr(env, "env", None), "physical_mesh", None)
+    if mesh is not None and not mesh.empty:
+        return mesh
+    return None
+
+
+def activate_mesh(mesh: Mesh | None):
+    """Context manager making ``mesh`` ambient for traces inside it, so
+    bare-PartitionSpec constraints (and :func:`maybe_constraint`) resolve.
+    ``None`` is a no-op context (single-device serving)."""
+    if mesh is None:
+        return contextlib.nullcontext()
+    use = getattr(jax.sharding, "use_mesh", None)   # jax >= 0.5
+    if use is not None:
+        return use(mesh)
+    return mesh          # jax <= 0.4: Mesh is itself a context manager
+
+
 def maybe_constraint(x, spec: P):
-    """Best-effort sharding constraint against the *ambient* mesh.
+    """Sharding constraint against the *ambient* mesh.
 
     Model code calls this with logical specs (e.g. sequence-parallel
     residuals P(batch, "model", None)); outside a mesh context, or when an
     axis is missing / the dim isn't divisible, it's a no-op — so smoke
     tests and single-device runs are unaffected.
     """
-    try:
-        am = jax.sharding.get_abstract_mesh()
-    except Exception:   # pragma: no cover
+    am = ambient_mesh()
+    if am is None:
         return x
-    if am is None or getattr(am, "empty", True):
-        return x
-    axes = set(am.axis_names)
-    sizes = dict(zip(am.axis_names, am.axis_sizes)) if hasattr(am, "axis_sizes") \
-        else {n: am.shape[n] for n in am.axis_names}
+    sizes = mesh_axis_sizes(am)
     out = []
     for dim, entry in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
         names = ()
         if entry is None:
             names = ()
         elif isinstance(entry, tuple):
-            names = tuple(a for a in entry if a in axes)
-        elif entry in axes:
+            names = tuple(a for a in entry if a in sizes)
+        elif entry in sizes:
             names = (entry,)
         total = 1
         for n in names:
             total *= sizes[n]
-        if names and dim % total == 0:
+        if names and total > 1 and dim % total == 0:
             out.append(names if len(names) > 1 else names[0])
         else:
             out.append(None)
     if all(e is None for e in out):
         return x
     return jax.lax.with_sharding_constraint(x, P(*out))
+
+
+_TP_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def gather_tp_mode():
+    """Arm :func:`replicate_constraint` for the extent of a trace.
+
+    The all-gather-TP boundary belongs ONLY to the serving placement
+    (output projections replicated — ``serving_param_specs``); traced
+    under a mesh with the *training* placement (e.g. the dry-run cost
+    model, where ``wo`` stays contraction-sharded) the same constraint
+    would inject per-layer replication gathers on top of the row-
+    parallel partial sums — strictly worse traffic and wrong cost
+    tables.  ``BatchedServer`` enters this context around every
+    dispatch; everything else leaves the constraint a no-op."""
+    prev = getattr(_TP_STATE, "gather", False)
+    _TP_STATE.gather = True
+    try:
+        yield
+    finally:
+        _TP_STATE.gather = prev
+
+
+def replicate_constraint(x):
+    """Explicitly constrain ``x`` to FULLY REPLICATED under the ambient
+    mesh — an all-gather when it is currently sharded.  This is the
+    all-gather-TP boundary ``maybe_constraint`` cannot express: an
+    all-``None`` spec is its no-op, while here replication is the whole
+    point.  No-op outside :func:`gather_tp_mode` or a mesh context."""
+    if not getattr(_TP_STATE, "gather", False):
+        return x
+    if ambient_mesh() is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P())
+
+
+# ---------------------------------------------------------------------------
+# Per-axis collective accounting (the serving bench's wire-traffic row)
+# ---------------------------------------------------------------------------
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_COMPONENT_RE = re.compile(r"[a-z0-9]+\[[0-9,]*\]")
+_GROUPS_RE = re.compile(
+    r"replica_groups=(\{\{[^=]*?\}\}|\[[0-9,]+\]<=\[[0-9,]+\](?:T\([0-9,]+\))?)")
+_IOTA_RE = re.compile(r"\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+
+def _parse_groups(text: str) -> list[tuple[int, ...]] | None:
+    """``replica_groups`` -> concrete device-id groups, for either HLO
+    syntax: explicit ``{{0,1},{2,3}}`` or iota ``[g,s]<=[dims]T(perm)``
+    (arange over dims, transposed by perm, reshaped to (g, s))."""
+    import numpy as np
+
+    if text.startswith("{"):
+        found = re.findall(r"\{([0-9, ]+)\}", text)
+        groups = [tuple(int(t) for t in g.split(",") if t.strip())
+                  for g in found]
+        return groups or None
+    m = _IOTA_RE.match(text)
+    if not m:
+        return None
+    g, s = int(m.group(1)), int(m.group(2))
+    dims = [int(d) for d in m.group(3).split(",")]
+    ids = np.arange(int(np.prod(dims))).reshape(dims)
+    if m.group(4):
+        ids = ids.transpose([int(p) for p in m.group(4).split(",")])
+    return [tuple(int(i) for i in row) for row in ids.reshape(g, s)]
+
+
+def _axes_for_groups(mesh, groups: list[tuple[int, ...]]) -> str:
+    """Attribute a collective's device groups to mesh axes EXACTLY: the
+    axis combination whose slices of ``mesh.devices`` reproduce the
+    groups (so two same-size axes — data=2, model=2 — still attribute
+    correctly).  Falls back to group-size matching when the mesh carries
+    no concrete devices."""
+    import itertools
+
+    import numpy as np
+
+    sizes = mesh_axis_sizes(mesh)
+    live = [n for n in mesh.axis_names if sizes[n] > 1]
+    actual = {frozenset(g) for g in groups}
+    devices = getattr(mesh, "devices", None)
+    if devices is not None:
+        ids = np.vectorize(lambda d: d.id)(devices)
+        names = list(mesh.axis_names)
+        for r in range(1, len(live) + 1):
+            for combo in itertools.combinations(live, r):
+                order = ([names.index(n) for n in names if n not in combo]
+                         + [names.index(n) for n in combo])
+                k = 1
+                for n in combo:
+                    k *= sizes[n]
+                expected = {frozenset(int(i) for i in row)
+                            for row in ids.transpose(order).reshape(-1, k)}
+                if expected == actual:
+                    return "+".join(combo)
+    # size heuristic (abstract meshes / exotic group shapes)
+    g = len(next(iter(actual)))
+    for r in range(1, len(live) + 1):
+        for combo in itertools.combinations(live, r):
+            total = 1
+            for n in combo:
+                total *= sizes[n]
+            if total == g:
+                return "+".join(combo)
+    return f"group{g}"
+
+
+def collective_bytes_by_axis(hlo_text: str, mesh: Mesh) -> dict[str, int]:
+    """Payload bytes of every collective in ``hlo_text``, attributed to
+    mesh axes by their concrete ``replica_groups`` device sets.
+
+    Returns ``{axis_name: bytes, ...}`` (an axis that saw no traffic is
+    absent); a group spanning several axes lands on a '+'-joined key.
+    Collectives inside a scan/while body appear once in the text, so
+    the result is per loop ITERATION — callers scale by trip count.
+    """
+    from repro.launch.hlo_cost import shape_bytes
+
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        mg = _GROUPS_RE.search(line)
+        groups = _parse_groups(mg.group(1)) if mg else None
+        if not groups or len(groups[0]) <= 1:
+            continue                      # degenerate single-device group
+        axis = _axes_for_groups(mesh, groups)
+        shape_text = m.group(1)
+        if m.group(3) and shape_text.startswith("("):
+            # async op: the tuple is (operand..., result) — only the
+            # result component is wire payload, not the held operand
+            parts = _SHAPE_COMPONENT_RE.findall(shape_text)
+            if parts:
+                shape_text = parts[-1]
+        out[axis] = out.get(axis, 0) + shape_bytes(shape_text)
+    return out
 
 
 #: logical spec for sequence-parallel residual activations (B, S, d)

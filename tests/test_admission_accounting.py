@@ -1,0 +1,116 @@
+"""Property tests for paged admission accounting: worst-case page
+reservations (``_worst_pages`` / ``_admission_pages_ready``) and the
+prefix-sharing eligibility rule (``_shareable_pages``) at page-boundary
+and ``max_seq``-clamp edges.  Pure host math — one server instance,
+no dispatches."""
+import dataclasses
+import functools
+
+import jax
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # tier-1 runs without hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.configs import build_model, get_config
+from repro.runtime.serve import BatchedServer, Request
+
+MAX_SEQ = 64
+PAGE = 4
+
+
+@functools.lru_cache(maxsize=1)
+def _server() -> BatchedServer:
+    cfg = get_config("qwen2.5-14b").reduced()
+    cfg = dataclasses.replace(cfg, remat=False, page_size=PAGE)
+    model = build_model(cfg)
+    return BatchedServer(model, model.init(jax.random.PRNGKey(0)),
+                         batch_size=2, max_seq=MAX_SEQ, paged=True)
+
+
+def _valid(plen: int, mnt: int) -> bool:
+    """Would submit() accept this (prompt + decode budget fits)?"""
+    return plen + max(mnt - 1, 0) <= MAX_SEQ
+
+
+@given(plen=st.integers(1, MAX_SEQ), mnt=st.integers(0, MAX_SEQ))
+@settings(max_examples=60, deadline=None)
+def test_worst_pages_covers_every_write_and_respects_max_seq(plen, mnt):
+    srv = _server()
+    if not _valid(plen, mnt):
+        return
+    worst = srv._worst_pages(plen, mnt)
+    plen_adm = srv._admit_plen(plen, mnt)
+    # bucketing only ever pads the prompt, and never past the point
+    # where a decode write could land outside the cache
+    assert plen_adm >= plen
+    assert plen_adm + max(mnt - 1, 0) <= MAX_SEQ or plen_adm == plen
+    # the reservation covers the admitted prompt AND the whole decode
+    # budget, clamped at max_seq (positions past it are never written)
+    lifetime_tokens = min(plen_adm + max(mnt - 1, 0), MAX_SEQ)
+    assert worst == srv.manager.pages_for(lifetime_tokens)
+    assert worst <= srv.manager.pages_for(MAX_SEQ)      # max_seq clamp
+    assert worst >= srv.manager.pages_for(plen)         # prompt fits
+
+
+@pytest.mark.parametrize("plen,mnt", [
+    (PAGE, 0), (PAGE, 1), (2 * PAGE, 0), (2 * PAGE, 1),     # page edges
+    (PAGE + 1, 1), (MAX_SEQ, 1), (MAX_SEQ - 1, 2),          # clamp edges
+])
+def test_worst_pages_boundary_cases(plen, mnt):
+    srv = _server()
+    worst = srv._worst_pages(plen, mnt)
+    plen_adm = srv._admit_plen(plen, mnt)
+    assert worst == srv.manager.pages_for(
+        min(plen_adm + max(mnt - 1, 0), MAX_SEQ))
+    if mnt <= 1:
+        # no decode writes beyond the sampled-at-admission token: the
+        # reservation is exactly the admitted prompt's pages
+        assert worst == srv.manager.pages_for(plen_adm)
+
+
+@given(reqs=st.lists(st.integers(1, MAX_SEQ), min_size=1, max_size=24))
+@settings(max_examples=30, deadline=None)
+def test_admission_gate_never_oversubscribes(reqs):
+    """Follow the gate exactly as _admit_from_queue does: a request is
+    admitted only when its worst case fits beside every live
+    reservation — so total reservations can never exceed capacity, and
+    an admitted request can never hit mid-decode pool exhaustion."""
+    srv = _server()
+    srv._reserved = {}
+    cap = srv.manager.capacity
+    slot = 0
+    for plen in reqs:
+        mnt = (plen % 7) + 1                   # deterministic budget mix
+        if not _valid(plen, mnt):
+            continue
+        req = Request(uid=slot, prompt=np.zeros(plen, np.int32),
+                      max_new_tokens=mnt)
+        if srv._admission_pages_ready(req):
+            srv._reserved[slot] = srv._worst_pages(plen, mnt)
+            slot += 1
+        assert sum(srv._reserved.values()) <= cap
+        if slot and slot % 5 == 0:             # periodic reclamation
+            srv._reserved.pop(min(srv._reserved), None)
+    srv._reserved = {}
+
+
+@given(plen=st.integers(1, MAX_SEQ))
+@settings(max_examples=40, deadline=None)
+def test_shareable_pages_never_cover_a_written_position(plen):
+    """Shared prompt pages must lie strictly before the last prompt
+    token: admission always keeps at least one suffix token to prefill,
+    and decode's first write (position >= plen) can never land in a
+    shared page."""
+    srv = _server()
+    n = srv._shareable_pages(plen)
+    assert n == (plen - 1) // PAGE             # maximal whole pages
+    assert n * PAGE <= plen - 1                # excludes the last token
+    # decode writes start at position >= plen, strictly past the shared
+    # region [0, n*PAGE)
+    assert n * PAGE < plen
+    if plen % PAGE == 0:
+        # page-boundary edge: the final FULL page still stays private
+        assert n == plen // PAGE - 1

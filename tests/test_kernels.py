@@ -47,6 +47,38 @@ def test_streamed_matmul_property(m, k, n):
                                atol=2e-4, rtol=2e-4)
 
 
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (1, 513, 1), (3, 5, 2),
+                                   (33, 17, 9)])
+def test_streamed_matmul_tiny_and_unaligned(m, k, n):
+    """Shapes below / not aligned to the default block sizes clamp to
+    single-block streams and still match the reference exactly."""
+    x = jnp.asarray(RNG.randn(m, k), jnp.float32)
+    w = jnp.asarray(RNG.randn(k, n), jnp.float32)
+    out = sm.matmul(x, w, interpret=True)          # default 256/512/256 blocks
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(sm.matmul_ref(x, w)),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_streamed_matmul_rejects_bad_shapes():
+    """Empty operands error instead of silently streaming degenerate
+    1-wide blocks (the old ``min(bm, m) or 1`` clamp); so do rank and
+    contraction mismatches."""
+    good = jnp.ones((4, 8), jnp.float32)
+    with pytest.raises(ValueError, match="non-empty"):
+        sm.matmul(jnp.ones((0, 8), jnp.float32),
+                  jnp.ones((8, 3), jnp.float32), interpret=True)
+    with pytest.raises(ValueError, match="non-empty"):
+        sm.matmul(good, jnp.ones((8, 0), jnp.float32), interpret=True)
+    with pytest.raises(ValueError, match="non-empty"):
+        sm.matmul(jnp.ones((4, 0), jnp.float32),
+                  jnp.ones((0, 8), jnp.float32), interpret=True)
+    with pytest.raises(ValueError, match="contraction mismatch"):
+        sm.matmul(good, jnp.ones((9, 3), jnp.float32), interpret=True)
+    with pytest.raises(ValueError, match="2-D"):
+        sm.matmul(jnp.ones((2, 4, 8), jnp.float32), good, interpret=True)
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
