@@ -17,7 +17,11 @@ gates the headline numbers so they cannot silently rot:
 * the ``server_sharded`` row must be token-identical to single-device,
   and with >= 2 model shards must show model-axis collective traffic
   plus a per-shard ledger snapshot.  ``--require-sharded`` (the forced
-  multi-device CI job) rejects a degenerate 1-shard run.
+  multi-device CI job) rejects a degenerate 1-shard run;
+* the ``preemption`` deep-queue scenario must show real preemption
+  activity (>= 1 preemption AND resume, 0 sheds), bit-identical tokens,
+  a clean allocator audit trail, and a shorter worst-case admission
+  wait than the no-preemption server.
 
 Exits nonzero with a readable message on any violation.
 """
@@ -31,7 +35,8 @@ TOP_KEYS = {
     "model", "batch", "prompt", "new_tokens", "block_size", "max_seq",
     "tokens_per_s", "speedup_block_vs_per_token",
     "paged_vs_dense_tokens_identical", "kv_memory", "pipeline",
-    "prefix_cache", "sharded", "tiers", "tiers_peak", "attention_scaling",
+    "prefix_cache", "sharded", "preemption", "tiers", "tiers_peak",
+    "attention_scaling",
 }
 TOKENS_PER_S_KEYS = {"per_token_dense", "block_dense", "server_dense",
                      "server_paged"}
@@ -55,6 +60,15 @@ SHARDED_KEYS = {
     "tokens_identical_to_single_device",
     "collective_bytes_per_step_by_axis",
     "collective_bytes_per_token_by_axis", "tiers_peak_per_shard",
+}
+PREEMPTION_KEYS = {
+    "policy", "num_pages", "page_size", "hogs", "shorts",
+    "hog_new_tokens", "short_new_tokens", "preemptions", "resumes",
+    "sheds", "preempted_pages", "swap_retries", "audits",
+    "max_admission_wait_blocks_preempt",
+    "max_admission_wait_blocks_no_preempt", "admission_wait_reduction",
+    "drain_s_preempt", "drain_s_no_preempt",
+    "tokens_identical_to_uncontended",
 }
 TIER_KEYS = {"in_use_bytes", "hwm_bytes", "capacity_bytes", "by_class"}
 # server_paged may not drop below this fraction of server_dense (the
@@ -109,7 +123,40 @@ def check(path: Path, *, require_sharded: bool = False) -> list[str]:
             errors.append(f"{block} must include the 'local' tier")
     errors.extend(_check_peak_snapshot(bench))
     errors.extend(_check_sharded(bench, require_multi=require_sharded))
+    errors.extend(_check_preemption(bench))
     errors.extend(_check_regressions(bench))
+    return errors
+
+
+def _check_preemption(bench: dict) -> list[str]:
+    """The memory-pressure scenario: preemption must have really fired
+    (not a pool too big to contend), recovered without shedding, kept
+    tokens bit-identical, audited clean, and beaten the no-preemption
+    server's worst-case admission wait."""
+    pr = bench.get("preemption")
+    if not isinstance(pr, dict):
+        return ["preemption must be a mapping (the serve_preemption row)"]
+    missing = PREEMPTION_KEYS - pr.keys()
+    if missing:
+        return [f"missing preemption keys: {sorted(missing)}"]
+    errors: list[str] = []
+    if pr["tokens_identical_to_uncontended"] is not True:
+        errors.append("preemption tokens_identical_to_uncontended must be "
+                      "true (preempt/swap/resume changed the tokens)")
+    for field, floor in (("preemptions", 1), ("resumes", 1), ("audits", 1)):
+        v = pr.get(field)
+        if not isinstance(v, int) or v < floor:
+            errors.append(f"preemption {field} must be an int >= {floor}, "
+                          f"got {v!r}: the pressure scenario is degenerate")
+    if pr.get("sheds") != 0:
+        errors.append(f"preemption sheds must be 0 (no victim may be "
+                      f"dropped under plain pressure), got {pr.get('sheds')!r}")
+    wp = pr.get("max_admission_wait_blocks_preempt")
+    wn = pr.get("max_admission_wait_blocks_no_preempt")
+    if not (isinstance(wp, int) and isinstance(wn, int) and wp < wn):
+        errors.append(
+            f"preemption must shorten the worst-case admission wait: "
+            f"preempt={wp!r} blocks vs no_preempt={wn!r} blocks")
     return errors
 
 

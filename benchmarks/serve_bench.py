@@ -277,6 +277,84 @@ def _serve_sharded(cfg, params, out_paged) -> dict:
     }
 
 
+PREEMPT_MAX_SEQ = 96
+PREEMPT_BLOCK = 8
+PREEMPT_PAGE = 4
+PREEMPT_POOL = 39             # capacity 38: two hogs reserve 36 of it
+HOG_NEW_TOKENS = 64
+SHORT_NEW_TOKENS = 8
+N_HOGS, N_SHORTS = 2, 4
+
+
+def _serve_preemption(cfg, params) -> dict:
+    """Deep-queue memory-pressure scenario: two long "hog" requests
+    reserve nearly the whole (deliberately small) page pool, then four
+    short requests queue behind them.  Without preemption the shorts
+    stall until a hog drains its full decode budget; with page-granular
+    preemption a hog is swapped to the remote tier, the shorts admit and
+    finish, and the hog resumes — every token bit-identical to an
+    uncontended big-pool run.  Returns the machine-readable comparison
+    (admission-wait-in-blocks with/without preemption is the headline)."""
+    def submit_all(server):
+        rng = np.random.RandomState(13)
+        reqs = [server.submit(rng.randint(0, cfg.vocab, PROMPT)
+                              .astype(np.int32),
+                              max_new_tokens=HOG_NEW_TOKENS)
+                for _ in range(N_HOGS)]
+        reqs += [server.submit(rng.randint(0, cfg.vocab, PROMPT)
+                               .astype(np.int32),
+                               max_new_tokens=SHORT_NEW_TOKENS)
+                 for _ in range(N_SHORTS)]
+        return reqs
+
+    def serve(preempt: bool, num_pages: int):
+        srv = BatchedServer(build_model(cfg), params, batch_size=3,
+                            max_seq=PREEMPT_MAX_SEQ, block_size=PREEMPT_BLOCK,
+                            paged=True, page_size=PREEMPT_PAGE,
+                            num_pages=num_pages, preempt=preempt, audit=True)
+        reqs = submit_all(srv)
+        t0 = time.perf_counter()
+        srv.run_once()
+        dt = time.perf_counter() - t0
+        assert all(r.done.is_set() and r.error is None for r in reqs), \
+            [(r.uid, r.error) for r in reqs]
+        shorts = reqs[N_HOGS:]
+        wait = max(r.admitted_at_block for r in shorts)
+        return [tuple(r.output) for r in reqs], wait, dt, srv
+
+    out_ref, _, _, _ = serve(True, None)               # uncontended pool
+    out_p, wait_p, dt_p, srv_p = serve(True, PREEMPT_POOL)
+    out_n, wait_n, dt_n, srv_n = serve(False, PREEMPT_POOL)
+    assert out_p == out_ref, \
+        "preempted serving must emit identical tokens to uncontended"
+    assert out_n == out_ref, \
+        "waiting (no-preempt) serving must emit identical tokens too"
+    assert srv_p.stats["preemptions"] >= 1, srv_p.stats
+    assert srv_p.stats["resumes"] >= 1, srv_p.stats
+    assert srv_p.stats["sheds"] == 0 and srv_n.stats["sheds"] == 0
+    assert srv_p.stats["audits"] > 0
+    assert wait_p < wait_n, (wait_p, wait_n)
+    return {
+        "policy": srv_p.preempt_policy,
+        "num_pages": PREEMPT_POOL, "page_size": PREEMPT_PAGE,
+        "hogs": N_HOGS, "shorts": N_SHORTS,
+        "hog_new_tokens": HOG_NEW_TOKENS,
+        "short_new_tokens": SHORT_NEW_TOKENS,
+        "preemptions": srv_p.stats["preemptions"],
+        "resumes": srv_p.stats["resumes"],
+        "sheds": srv_p.stats["sheds"],
+        "preempted_pages": srv_p.stats["preempted_pages"],
+        "swap_retries": srv_p.stats["swap_retries"],
+        "audits": srv_p.stats["audits"],
+        "max_admission_wait_blocks_preempt": wait_p,
+        "max_admission_wait_blocks_no_preempt": wait_n,
+        "admission_wait_reduction": round(1 - wait_p / max(wait_n, 1), 3),
+        "drain_s_preempt": round(dt_p, 3),
+        "drain_s_no_preempt": round(dt_n, 3),
+        "tokens_identical_to_uncontended": True,
+    }
+
+
 def _attention_scaling(model) -> dict:
     """Per-decode-step attention read cost at several live sequence
     lengths: the dense slab always scans max_seq columns; the paged path
@@ -317,6 +395,7 @@ def run() -> list[str]:
         "paged serving must emit identical tokens to the dense cache"
     prefix = _serve_prefix(cfg, params)
     sharded = _serve_sharded(cfg, params, out_paged)
+    preemption = _serve_preemption(cfg, params)
 
     mgr = srv_paged.manager
     bytes_per_page = srv_paged.kv_bytes_capacity() // (mgr.num_pages)
@@ -374,6 +453,11 @@ def run() -> list[str]:
         # the single-device server, per-axis collective bytes of one
         # decode block, and the per-shard residency snapshot
         "sharded": sharded,
+        # memory-pressure robustness: the deep-queue scenario above —
+        # page-granular preemption admits the queued shorts orders of
+        # magnitude earlier than waiting on hog reclamation, with
+        # bit-identical tokens and a clean allocator audit every block
+        "preemption": preemption,
         # per-tier residency from the orchestrator's ledger: every tier
         # carries in_use_bytes / hwm_bytes / by_class (schema-checked in
         # CI).  ``tiers`` is the drained end state; ``tiers_peak`` is the
@@ -419,6 +503,15 @@ def run() -> list[str]:
         f" collective_B_per_tok="
         f"{sum(sharded['collective_bytes_per_token_by_axis'].values())}"
         f" identical_tokens=True",
+        f"serve_preemption,"
+        f"{preemption['drain_s_preempt'] * 1e6:.0f},"
+        f"preemptions={preemption['preemptions']}"
+        f" resumes={preemption['resumes']}"
+        f" short_wait_blocks={preemption['max_admission_wait_blocks_preempt']}"
+        f" vs_no_preempt="
+        f"{preemption['max_admission_wait_blocks_no_preempt']}"
+        f" wait_reduction={preemption['admission_wait_reduction']:.1%}"
+        f" audits={preemption['audits']} identical_tokens=True",
         _continuous(model, params),
     ]
     return rows

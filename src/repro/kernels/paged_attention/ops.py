@@ -79,6 +79,11 @@ def pages_for(tokens: int, page_size: int) -> int:
     return -(-tokens // page_size)
 
 
+class BlockPoolAuditError(AssertionError):
+    """An invariant of the block-pool bookkeeping is violated (refcount
+    drift, free-list corruption, table/pool inconsistency)."""
+
+
 class BlockManager:
     """Host-side page allocator for the device-resident block pool.
 
@@ -225,6 +230,71 @@ class BlockManager:
             t = self.pages.get(s, [])[:n_pages]
             out[i, : len(t)] = t
         return out
+
+    # ----- invariants -------------------------------------------------------
+    def audit(self) -> dict:
+        """Cross-check every allocator invariant; raises
+        :class:`BlockPoolAuditError` on the first violation, returns a
+        summary dict when clean.
+
+        Invariants: the null page is never owned or free-listed; free
+        pages are unique, in range, and disjoint from every table; a
+        slot's table holds no duplicate pages; each live page's refcount
+        equals its owner count across tables; free + allocated ==
+        capacity; the prefix index and its page->key inverse agree and
+        only reference live pages; recorded lengths fit their tables;
+        the high-water mark bounds current occupancy.  Called after
+        every decode block in the server's audit mode — the
+        race/corruption detector for the whole paged stack."""
+        def fail(msg: str):
+            raise BlockPoolAuditError(f"block-pool audit: {msg}")
+
+        free = self._free
+        free_set = set(free)
+        if len(free_set) != len(free):
+            fail(f"free list holds duplicates ({len(free) - len(free_set)})")
+        bad = [p for p in free_set if not 1 <= p < self.num_pages]
+        if bad:
+            fail(f"free list holds out-of-range/null pages {sorted(bad)}")
+        owners: dict[int, int] = {}
+        for slot, table in self.pages.items():
+            if len(set(table)) != len(table):
+                fail(f"slot {slot} maps a page twice: {table}")
+            for p in table:
+                if not 1 <= p < self.num_pages:
+                    fail(f"slot {slot} maps out-of-range/null page {p}")
+                if p in free_set:
+                    fail(f"page {p} is both free and owned by slot {slot}")
+                owners[p] = owners.get(p, 0) + 1
+        if set(self.refcount) != set(owners):
+            fail(f"refcount keys {sorted(self.refcount)} != allocated "
+                 f"pages {sorted(owners)}")
+        for p, rc in self.refcount.items():
+            if rc != owners[p]:
+                fail(f"page {p} refcount {rc} != owner count {owners[p]}")
+        if len(free) + len(owners) != self.capacity:
+            fail(f"{len(free)} free + {len(owners)} allocated != "
+                 f"capacity {self.capacity}")
+        for key, p in self._prefix_index.items():
+            if self._page_key.get(p) != key:
+                fail(f"prefix index maps {key!r} -> page {p} but the "
+                     f"inverse disagrees")
+            if self.refcount.get(p, 0) < 1:
+                fail(f"prefix index references dead page {p}")
+        for p, key in self._page_key.items():
+            if self._prefix_index.get(key) != p:
+                fail(f"page-key inverse {p} -> {key!r} missing from the "
+                     f"prefix index")
+        for slot, n in self.lens.items():
+            cover = len(self.pages.get(slot, ())) * self.page_size
+            if n > cover:
+                fail(f"slot {slot} records {n} tokens but its table "
+                     f"covers only {cover}")
+        if self.hwm < self.pages_in_use:
+            fail(f"hwm {self.hwm} < pages in use {self.pages_in_use}")
+        return {"pages_in_use": self.pages_in_use,
+                "free_pages": len(free), "slots": len(self.pages),
+                "shared_pages": self.shared_pages}
 
     # ----- accounting -------------------------------------------------------
     def bytes_per_page(self, kv_heads: int, head_dim: int,

@@ -3,7 +3,7 @@
 The weight matrix lives in HBM (the kernel-level "remote tier"); BlockSpec
 tiling streams (bk, bn) weight tiles through VMEM while the MXU consumes
 the previous tile — Pallas' implicit grid pipeline plays the paging
-stream, double-buffering tiles exactly like ``core.pager`` double-buffers
+stream, double-buffering tiles exactly like ``repro.memory`` double-buffers
 layers.  Accumulation runs in an fp32 VMEM scratch across the K grid
 dimension.
 

@@ -17,9 +17,14 @@ One place for everything the paper calls *memory orchestration*:
   high-water marks, fragmentation) shared between the live runtime and
   the Table 4.3 simulator, so measured and simulated capacity reduction
   go through one code path.
+* :mod:`repro.memory.swap` — :class:`PageSwapper`, batched KV-page
+  transfers between the device block pool and the remote tier (the
+  mechanism behind page-granular preemption), riding the fault-injected
+  retrying transfer contract in :mod:`repro.memory.tiers`
+  (:class:`FaultPlan` / :func:`transfer_with_retry`).
 
-``repro.core.pager`` remains as a thin re-export shim for one release;
-new code should import from here.
+The ``repro.core.pager`` re-export shim promised for one release is
+gone; import from here.
 """
 from repro.memory.accounting import (MemoryLedger, capacity_reduction,
                                      paged_window_bytes, peak_local_bytes,
@@ -30,11 +35,14 @@ from repro.memory.orchestrator import (MemoryOrchestrator, donating_jit,
 from repro.memory.policies import (BlockPoolResidency, DoubleBufferPrefetch,
                                    OffloadBetweenSteps, PagerConfig, PinLocal,
                                    ResidencyPolicy, TopKExpertPrefetch)
-from repro.memory.tiers import (LOCAL, REMOTE, host_put, local_sharding,
-                                page_in, page_out, remote_sharding, reset,
+from repro.memory.tiers import (LOCAL, REMOTE, FaultPlan, TierTransferError,
+                                active_fault_plan, fault_plan, host_put,
+                                install_fault_plan, local_sharding, page_in,
+                                page_out, remote_sharding, reset,
                                 resolved_local_kind, resolved_remote_kind,
                                 supports_memory_spaces, tier_sharding,
-                                to_remote)
+                                to_remote, transfer_with_retry)
+from repro.memory.swap import PageSwapper, SwapHandle
 
 __all__ = [
     "MemoryLedger", "capacity_reduction", "paged_window_bytes",
@@ -43,6 +51,9 @@ __all__ = [
     "paged_scan_cache",
     "BlockPoolResidency", "DoubleBufferPrefetch", "OffloadBetweenSteps",
     "PagerConfig", "PinLocal", "ResidencyPolicy", "TopKExpertPrefetch",
+    "PageSwapper", "SwapHandle",
+    "FaultPlan", "TierTransferError", "active_fault_plan", "fault_plan",
+    "install_fault_plan", "transfer_with_retry",
     "LOCAL", "REMOTE", "host_put", "local_sharding", "page_in", "page_out",
     "remote_sharding", "reset", "resolved_local_kind",
     "resolved_remote_kind", "supports_memory_spaces", "tier_sharding",

@@ -246,6 +246,10 @@ class MemoryOrchestrator:
         self.policies.setdefault("kv_pool", PinLocal())
         self.mesh = None          # bound by bind_mesh (sharded serving)
         self.model_shards = 1
+        # tensor class -> reason, recorded when an unrecoverable tier
+        # fault forced a documented degradation (e.g. remote KV offload
+        # falling back to local residency)
+        self.degraded: dict[str, str] = {}
 
     # ----- planning ---------------------------------------------------------
     @classmethod
@@ -429,7 +433,21 @@ class MemoryOrchestrator:
             self.ledger.record_capacity(policy.tier, "kv_pool",
                                         self.placed_bytes(placed))
             return placed
-        placed = policy.place(cache)
+        try:
+            placed = policy.place(cache)
+        except tiers.TierTransferError as e:
+            # documented degradation: when the remote tier cannot take
+            # the KV pool (unrecoverable transfer fault), fall back to
+            # local residency instead of failing the server — capacity
+            # reduction is lost, correctness is not.  The offload
+            # transform is disabled too so decode stops round-tripping
+            # slices through the faulty tier.
+            self.degraded["kv_pool"] = (
+                f"remote offload -> local residency ({e})")
+            policy = PinLocal()
+            self.policies["kv_pool"] = policy
+            self.config = dataclasses.replace(self.config, offload_kv=False)
+            placed = policy.place(cache)
         # capacity, not residency: a pool slab is provisioned at full
         # size while only live pages count as in-use (no double count)
         self.ledger.record_capacity(policy.tier, "kv_pool",
@@ -479,8 +497,11 @@ class MemoryOrchestrator:
 
     # ----- introspection ----------------------------------------------------
     def describe(self) -> dict:
-        """Policy matrix, for logs and docs."""
-        return {cls: type(p).__name__ for cls, p in self.policies.items()}
+        """Policy matrix (+ any fault-forced degradations), for logs."""
+        out = {cls: type(p).__name__ for cls, p in self.policies.items()}
+        if self.degraded:
+            out["degraded"] = dict(self.degraded)
+        return out
 
     def with_config(self, **overrides) -> "MemoryOrchestrator":
         return MemoryOrchestrator(

@@ -222,6 +222,29 @@ class BlockPoolResidency:
                                * self._bytes_per_page
                                // self.shard_factor)
 
+    def audit(self) -> dict:
+        """Full invariant audit: the manager's allocator checks
+        (:meth:`BlockManager.audit`) plus the ledger cross-check — the
+        recorded ``kv_pool`` residency must equal the physical
+        pages-in-use times per-page bytes (per shard).  Only meaningful
+        right after :meth:`record`; callers audit at block boundaries
+        where that holds."""
+        summary = self.manager.audit()
+        if self.ledger is not None and self._bytes_per_page:
+            want = (self.manager.pages_in_use * self._bytes_per_page
+                    // self.shard_factor)
+            got = self.ledger.classes(self.tier).get(self.tensor_class)
+            if got is not None and got != want:
+                from repro.kernels.paged_attention.ops import \
+                    BlockPoolAuditError
+                raise BlockPoolAuditError(
+                    f"ledger residency drift: {self.tier}/"
+                    f"{self.tensor_class} records {got} bytes but "
+                    f"{self.manager.pages_in_use} live pages x "
+                    f"{self._bytes_per_page} bytes / {self.shard_factor} "
+                    f"shard(s) = {want}")
+        return summary
+
     # ----- host-side pools (experiments/tests) ------------------------------
     def alloc_seq(self, uid: int) -> None:
         self.manager.pages.setdefault(uid, [])

@@ -1,0 +1,171 @@
+"""PageSwapper: batched KV-page transfers between the device block pool
+and the remote tier — the mechanism behind page-granular preemption.
+
+Swapping a victim sequence out gathers its live pages from the stacked
+device pools in ONE batched take per pool, moves the bytes to the remote
+tier (host-resident stash on every backend; on CPU local == remote and
+the copy degenerates to a host copy with identical semantics), and hands
+back an opaque :class:`SwapHandle`.  Swapping back in scatters the
+stashed pages into freshly allocated page ids with one donated dispatch
+per pool pair — bucketed to a power-of-two page count so executables
+stay O(log pool) over a server's lifetime.
+
+Every transfer is a *fallible, bounded-latency* operation: it runs
+through :func:`repro.memory.tiers.transfer_with_retry` (fault-injection
+checkpoint, retry with exponential backoff, timeout) and reports its
+duration to an optional :class:`repro.runtime.ft.StragglerMonitor` so
+slow tier transfers are flagged.  Stashed bytes are ledger-accounted in
+the remote tier under the ``kv_swap`` tensor class.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.memory import tiers
+from repro.memory.accounting import MemoryLedger
+
+
+@dataclasses.dataclass
+class SwapHandle:
+    """Remote-tier stash of one sequence's KV pages (host arrays)."""
+
+    page_count: int
+    k: np.ndarray            # (L, n, page, Hkv, hd)
+    v: np.ndarray
+    nbytes: int
+
+
+def _bucket_pages(n: int, quantum: int = 4) -> int:
+    b = quantum
+    while b < n:
+        b *= 2
+    return b
+
+
+class PageSwapper:
+    """Batched swap-out/swap-in of block-pool KV pages.
+
+    One instance per server; ``retries``/``backoff_s``/``timeout_s``
+    parameterize the transfer contract and ``monitor`` (a
+    ``StragglerMonitor``) flags slow transfers.  The swap-in scatter is
+    jitted with the pool donated, so restores splice into the live cache
+    without copying it.
+    """
+
+    tensor_class = "kv_swap"
+
+    def __init__(self, *, ledger: MemoryLedger | None = None,
+                 tier: str = tiers.REMOTE, retries: int = 3,
+                 backoff_s: float = 0.001, timeout_s: float | None = None,
+                 monitor=None):
+        self.ledger = ledger
+        self.tier = tier
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.timeout_s = timeout_s
+        self.monitor = monitor
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.retry_attempts = 0      # failed attempts that were retried
+        self._stash_bytes = 0
+        self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
+
+    # ----- ledger ------------------------------------------------------------
+    def _record(self) -> None:
+        if self.ledger is not None:
+            self.ledger.record(self.tier, self.tensor_class,
+                               self._stash_bytes)
+
+    def _transfer(self, fn, *, what: str, nbytes: int):
+        before = (tiers.active_fault_plan().failures
+                  if tiers.active_fault_plan() else 0)
+        try:
+            return tiers.transfer_with_retry(
+                fn, what=what, nbytes=nbytes, retries=self.retries,
+                backoff_s=self.backoff_s, timeout_s=self.timeout_s,
+                monitor=self.monitor)
+        finally:
+            plan = tiers.active_fault_plan()
+            if plan is not None:
+                self.retry_attempts += plan.failures - before
+
+    # ----- swap out ----------------------------------------------------------
+    def swap_out(self, cache: dict, page_ids: list[int]) -> SwapHandle:
+        """Gather ``page_ids`` from the stacked pools and stash them in
+        the remote tier; raises :class:`tiers.TierTransferError` after
+        the retry budget is exhausted (the caller's degradation policy —
+        shed the victim — takes over)."""
+        pids = jnp.asarray(page_ids, jnp.int32)
+        k = jnp.take(cache["k_pages"], pids, axis=1)
+        v = jnp.take(cache["v_pages"], pids, axis=1)
+        nbytes = (k.size + v.size) * k.dtype.itemsize
+
+        def pull():
+            k_h, v_h = jax.device_get((k, v))
+            return np.asarray(k_h), np.asarray(v_h)
+
+        k_h, v_h = self._transfer(pull, what="kv_swap_out", nbytes=nbytes)
+        self.swap_outs += 1
+        self._stash_bytes += nbytes
+        self._record()
+        return SwapHandle(page_count=len(page_ids), k=k_h, v=v_h,
+                          nbytes=nbytes)
+
+    # ----- swap in -----------------------------------------------------------
+    def _scatter_fn(self, cache: dict, pids: jax.Array, k: jax.Array,
+                    v: jax.Array) -> dict:
+        from repro.runtime.sharding import maybe_constraint
+        from jax.sharding import PartitionSpec as P
+        k = maybe_constraint(k, P(None, None, None, "model", None))
+        v = maybe_constraint(v, P(None, None, None, "model", None))
+        return {"k_pages": cache["k_pages"].at[:, pids].set(
+                    k.astype(cache["k_pages"].dtype)),
+                "v_pages": cache["v_pages"].at[:, pids].set(
+                    v.astype(cache["v_pages"].dtype))}
+
+    def swap_in(self, cache: dict, page_ids: list[int],
+                handle: SwapHandle) -> dict:
+        """Scatter a stash back into freshly allocated ``page_ids`` (same
+        order as the swap-out) and release the stash.  Returns the new
+        cache; the old one is donated.  Padding entries (bucketed width)
+        point at the null page 0, which no live table ever reads."""
+        if len(page_ids) != handle.page_count:
+            raise ValueError(f"swap_in got {len(page_ids)} pages for a "
+                             f"{handle.page_count}-page stash")
+        n = handle.page_count
+        cap = _bucket_pages(max(n, 1))
+        pids = np.zeros(cap, np.int32)
+        pids[:n] = page_ids
+        pad = ((0, 0), (0, cap - n)) + ((0, 0),) * (handle.k.ndim - 2)
+        k = np.pad(handle.k, pad)
+        v = np.pad(handle.v, pad)
+
+        def push():
+            return self._scatter(cache, jnp.asarray(pids), jnp.asarray(k),
+                                 jnp.asarray(v))
+
+        new_cache = self._transfer(push, what="kv_swap_in",
+                                   nbytes=handle.nbytes)
+        self.swap_ins += 1
+        self.release(handle)
+        return new_cache
+
+    def adopt(self, handle: SwapHandle) -> None:
+        """Account for a stash produced elsewhere (snapshot restore): the
+        bytes join this swapper's remote-tier ledger line as if it had
+        swapped them out itself."""
+        self._stash_bytes += handle.nbytes
+        self._record()
+
+    def release(self, handle: SwapHandle) -> None:
+        """Drop a stash without restoring it (victim shed / restore into
+        a snapshot)."""
+        if handle.nbytes:
+            self._stash_bytes -= handle.nbytes
+            handle.nbytes = 0
+            self._record()

@@ -17,11 +17,14 @@ backend mid-process, e.g. ``jax.config.update("jax_platform_name", …)``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any
+import time
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 # Canonical tier names used across policies, the ledger and BENCH JSON.
@@ -137,6 +140,154 @@ def supports_memory_spaces() -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Fault injection: tier transfers as fallible, bounded-latency operations
+# ---------------------------------------------------------------------------
+
+class TierTransferError(RuntimeError):
+    """A tier transfer failed (injected by a :class:`FaultPlan`, or a
+    real backend failure surfaced through the retry wrapper)."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic (seeded) fault injection for tier transfers.
+
+    Installed process-wide via :func:`install_fault_plan` /
+    :func:`fault_plan`; every *eager* tier transfer (``host_put``, the
+    PageSwapper's swap copies) consults the active plan before moving
+    bytes.  Two injection styles compose:
+
+    * counted — ``fail_first_n`` / ``spike_first_n`` hit the first N
+      transfer attempts exactly (reproducible single-fault scenarios);
+    * sampled — ``fail_rate`` / ``spike_rate`` draw per attempt from a
+      ``numpy`` generator seeded with ``seed``, so a run with the same
+      plan and the same transfer sequence injects the same faults.
+
+    ``exhaust_at_block`` arms pool-exhaustion-mid-decode: the serving
+    loop asks :meth:`take_pool_exhaustion` once per decode block and, at
+    the armed block, steals every free page for ``exhaust_blocks``
+    blocks — forcing a real mid-decode ``MemoryError`` and exercising
+    the emergency-preemption recovery path.
+    """
+
+    seed: int = 0
+    fail_first_n: int = 0
+    fail_rate: float = 0.0
+    spike_first_n: int = 0
+    spike_rate: float = 0.0
+    spike_s: float = 0.05
+    exhaust_at_block: int | None = None
+    exhaust_blocks: int = 2
+
+    def __post_init__(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+        self.transfers = 0       # attempts observed
+        self.failures = 0        # attempts failed
+        self.spikes = 0          # attempts delayed
+        self._exhaust_armed = self.exhaust_at_block is not None
+
+    def before_transfer(self, what: str, nbytes: int = 0) -> None:
+        """Called by the transfer wrapper before each attempt; sleeps for
+        an injected latency spike, raises for an injected failure."""
+        idx = self.transfers
+        self.transfers += 1
+        spike = idx < self.spike_first_n or (
+            self.spike_rate > 0.0 and self._rng.random() < self.spike_rate)
+        if spike:
+            self.spikes += 1
+            time.sleep(self.spike_s)
+        fail = idx < self.fail_first_n or (
+            self.fail_rate > 0.0 and self._rng.random() < self.fail_rate)
+        if fail:
+            self.failures += 1
+            raise TierTransferError(
+                f"injected transfer failure #{self.failures} "
+                f"({what}, attempt {idx}, {nbytes} bytes)")
+
+    def take_pool_exhaustion(self, block: int) -> bool:
+        """True exactly once, at the armed decode block (the caller then
+        steals the pool's free pages and releases them after
+        ``exhaust_blocks`` blocks)."""
+        if self._exhaust_armed and block >= self.exhaust_at_block:
+            self._exhaust_armed = False
+            return True
+        return False
+
+
+_FAULT_PLAN: FaultPlan | None = None
+
+
+def install_fault_plan(plan: FaultPlan | None) -> FaultPlan | None:
+    """Install (or clear, with None) the process-wide fault plan;
+    returns the previously installed plan."""
+    global _FAULT_PLAN
+    prev, _FAULT_PLAN = _FAULT_PLAN, plan
+    return prev
+
+
+def active_fault_plan() -> FaultPlan | None:
+    return _FAULT_PLAN
+
+
+@contextlib.contextmanager
+def fault_plan(plan: FaultPlan):
+    """Scoped fault injection (chaos tests)."""
+    prev = install_fault_plan(plan)
+    try:
+        yield plan
+    finally:
+        install_fault_plan(prev)
+
+
+def check_transfer(what: str, nbytes: int = 0) -> None:
+    """Fault-injection checkpoint for one eager tier-transfer attempt."""
+    if _FAULT_PLAN is not None:
+        _FAULT_PLAN.before_transfer(what, nbytes)
+
+
+def transfer_with_retry(fn: Callable[[], Any], *, what: str,
+                        nbytes: int = 0, retries: int = 3,
+                        backoff_s: float = 0.001,
+                        timeout_s: float | None = None,
+                        monitor=None) -> Any:
+    """Run one tier transfer with retry + exponential backoff + timeout.
+
+    ``fn`` performs the actual bytes movement and may raise
+    :class:`TierTransferError` (injected or real).  Each attempt's
+    duration is reported to ``monitor`` (a
+    :class:`repro.runtime.ft.StragglerMonitor`) so slow-but-successful
+    transfers are flagged rather than silently absorbed.  An attempt
+    exceeding ``timeout_s`` violates the bounded-latency contract and is
+    treated as failed (its result is discarded and the transfer
+    retried).  After ``retries`` retries the error propagates as
+    :class:`TierTransferError` — the caller's graceful-degradation
+    policy takes over from there."""
+    delay = backoff_s
+    last: Exception | None = None
+    for attempt in range(retries + 1):
+        t0 = time.monotonic()
+        try:
+            check_transfer(what, nbytes)
+            out = fn()
+        except TierTransferError as e:
+            last = e
+        else:
+            dt = time.monotonic() - t0
+            if monitor is not None:
+                monitor.observe(dt)
+            if timeout_s is None or dt <= timeout_s:
+                return out
+            last = TierTransferError(
+                f"{what} attempt {attempt} took {dt:.3f}s "
+                f"(> timeout {timeout_s:.3f}s)")
+        if attempt < retries:
+            time.sleep(delay)
+            delay *= 2
+    raise TierTransferError(
+        f"{what} failed after {retries + 1} attempts: {last}") from last
+
+
+# ---------------------------------------------------------------------------
 # Placement primitives
 # ---------------------------------------------------------------------------
 
@@ -192,6 +343,13 @@ def page_out(tree: Any) -> Any:
 
 def host_put(tree: Any) -> Any:
     """Eagerly place a pytree in the remote tier (single-device helper for
-    examples/tests; sharded placement goes through :func:`to_remote`)."""
+    examples/tests; sharded placement goes through :func:`to_remote`).
+
+    As an *eager* tier transfer it is a fault-injection checkpoint: an
+    installed :class:`FaultPlan` may delay or fail it, and callers with
+    a degradation policy (``MemoryOrchestrator.place_kv_pool``) catch
+    :class:`TierTransferError` and fall back to local residency."""
+    leaves = [x for x in jax.tree.leaves(tree) if hasattr(x, "nbytes")]
+    check_transfer("host_put", sum(x.nbytes for x in leaves))
     return jax.tree.map(lambda x: _put_kind(jnp.asarray(x),
                                             resolved_remote_kind()), tree)

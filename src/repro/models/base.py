@@ -63,21 +63,34 @@ class DecodeState:
                           #        (power-of-two bucketed) table only on
                           #        width changes.  Column padding and
                           #        idle slots map the null page 0.
+    slot_keys: jax.Array | None = None
+                          # (B, 2) uint32 — per-slot PRNG keys (None =
+                          #        legacy batch-wide split).  With
+                          #        per-slot keys the token at sequence
+                          #        position q is sampled from
+                          #        fold_in(slot_key, q): sampling depends
+                          #        only on the request's own key and
+                          #        position, never on the batch-wide step
+                          #        count — so preemption/resume, block
+                          #        boundaries and neighbour interleaving
+                          #        cannot perturb a request's tokens.
 
     @classmethod
     def init(cls, batch: int, key: jax.Array,
-             pages: jax.Array | None = None) -> "DecodeState":
+             pages: jax.Array | None = None,
+             slot_keys: jax.Array | None = None) -> "DecodeState":
         """All-idle state: every slot is a no-op until admission."""
         return cls(tokens=jnp.zeros((batch, 1), jnp.int32),
                    pos=jnp.zeros((batch,), jnp.int32),
                    active=jnp.zeros((batch,), bool),
                    remaining=jnp.zeros((batch,), jnp.int32),
-                   key=key, pages=pages)
+                   key=key, pages=pages, slot_keys=slot_keys)
 
 
 jax.tree_util.register_dataclass(
     DecodeState,
-    data_fields=["tokens", "pos", "active", "remaining", "key", "pages"],
+    data_fields=["tokens", "pos", "active", "remaining", "key", "pages",
+                 "slot_keys"],
     meta_fields=[])
 
 

@@ -545,6 +545,22 @@ def sample_tokens(logits: jax.Array, vocab: int, temperature: float,
         key, logits / temperature, axis=-1).astype(jnp.int32)
 
 
+def sample_tokens_per_slot(logits: jax.Array, vocab: int, temperature: float,
+                           keys: jax.Array) -> jax.Array:
+    """Per-slot sampling: logits (B, 1, V) with keys (B, 2) -> (B, 1).
+
+    Each slot draws from its own PRNG key, so one slot's token never
+    depends on which other slots happen to share the batch (the seam the
+    preemption determinism contract rests on).  Greedy for
+    temperature<=0, exactly like :func:`sample_tokens`."""
+    logits = vocab_mask_logits(logits, vocab).astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.vmap(
+        lambda lg, k: jax.random.categorical(k, lg / temperature, axis=-1)
+    )(logits, keys).astype(jnp.int32)
+
+
 def decode_loop(model, params: dict, cache: dict, state: DecodeState, *,
                 num_steps: int, temperature: float = 0.0,
                 eos_id: int | None = None):
@@ -555,10 +571,19 @@ def decode_loop(model, params: dict, cache: dict, state: DecodeState, *,
     ``active``/``remaining`` masks turn finished sequences into no-ops:
     their fed token and write position freeze, so a drained slot neither
     advances nor perturbs live neighbours, and the emitted ``valid`` mask
-    tells the host which tokens are real.  The PRNG key is split exactly
-    like the host-driven per-token loop (``key, k = split(key)`` per
-    step), so block decoding is bit-identical to per-token decoding at
-    any temperature.
+    tells the host which tokens are real.
+
+    PRNG semantics depend on ``state.slot_keys``:
+
+    * ``None`` (legacy): the batch-wide key is split exactly like the
+      host-driven per-token loop (``key, k = split(key)`` per step), so
+      block decoding is bit-identical to per-token decoding at any
+      temperature — but a token then depends on the global step count.
+    * per-slot keys (serving): the token a slot emits at sequence
+      position ``q`` is sampled from ``fold_in(slot_key, q)`` via
+      :func:`sample_tokens_per_slot` — a pure function of the request's
+      own key and position, invariant under preemption/resume, block
+      boundaries and batch composition.
 
     Returns ``(tokens (B, num_steps), valid (B, num_steps), cache,
     state)``.  Callers should jit this with the cache and state donated
@@ -577,7 +602,14 @@ def decode_loop(model, params: dict, cache: dict, state: DecodeState, *,
         else:   # block-pool paged cache: st.pos doubles as seq_lens
             logits, cache = model.decode_step(params, st.tokens, cache,
                                               st.pos, pages=st.pages)
-        nxt = sample_tokens(logits, vocab, temperature, k)
+        if st.slot_keys is None:
+            nxt = sample_tokens(logits, vocab, temperature, k)
+        else:
+            # the sampled token lands at sequence position pos + 1
+            step_keys = jax.vmap(jax.random.fold_in)(
+                st.slot_keys, (st.pos + 1).astype(jnp.uint32))
+            nxt = sample_tokens_per_slot(logits, vocab, temperature,
+                                         step_keys)
         # freeze finished slots: keep re-feeding the last token in place
         nxt = jnp.where(st.active[:, None], nxt, st.tokens)
         emitted = st.active
@@ -587,7 +619,8 @@ def decode_loop(model, params: dict, cache: dict, state: DecodeState, *,
         if eos_id is not None:
             active = active & (nxt[:, 0] != eos_id)
         new_state = DecodeState(tokens=nxt, pos=pos, active=active,
-                                remaining=remaining, key=key, pages=st.pages)
+                                remaining=remaining, key=key, pages=st.pages,
+                                slot_keys=st.slot_keys)
         return (cache, new_state), (nxt[:, 0], emitted)
 
     (cache, state), (toks, valid) = jax.lax.scan(

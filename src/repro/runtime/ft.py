@@ -42,8 +42,13 @@ class StragglerMonitor:
         self.durations.append(seconds)
         if len(self.durations) > self.window:
             self.durations.pop(0)
-        med = sorted(self.durations)[len(self.durations) // 2]
-        is_straggler = len(self.durations) >= 5 and seconds > self.factor * med
+        d = sorted(self.durations)
+        n = len(d)
+        # true median for BOTH parities: the old d[n // 2] overshoots on
+        # even-length windows (upper of the two middle elements), which
+        # under-flagged stragglers whenever half the window was slow
+        med = d[n // 2] if n % 2 else 0.5 * (d[n // 2 - 1] + d[n // 2])
+        is_straggler = n >= 5 and seconds > self.factor * med
         if is_straggler:
             self.flags += 1
         return is_straggler
@@ -124,3 +129,81 @@ def jax_scalarize(metrics: dict) -> dict:
         except (TypeError, ValueError):
             pass
     return out
+
+
+# ---------------------------------------------------------------------------
+# Serving checkpoint/restart: persist a BatchedServer's in-flight state
+# ---------------------------------------------------------------------------
+
+def snapshot_server(server) -> dict:
+    """Capture a server's in-flight serving state (see
+    ``BatchedServer.snapshot``): every live / preempted / queued
+    sequence with its partial output, position and KV pages.  Call
+    between ``run_once`` calls (no block in flight)."""
+    return server.snapshot()
+
+
+def restore_server(server, snap: dict) -> None:
+    """Rehydrate a snapshot into a freshly constructed server (same
+    model/params/config).  In-flight sequences come back as swapped-out
+    stashes and resume page-granularly; queued ones rejoin the backlog."""
+    server.restore(snap)
+
+
+def save_server_snapshot(path, snap: dict):
+    """Persist a server snapshot to ``<path>/`` (``arrays.npz`` +
+    ``manifest.json``, atomic via the checkpoint module's tmp-rename
+    idiom) so a crashed server *process* can restore."""
+    import json
+    import shutil
+    from pathlib import Path
+
+    import numpy as np
+
+    path = Path(path)
+    tmp = path.parent / f".tmp_{path.name}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    arrays: dict = {}
+    seqs = []
+    for i, s in enumerate(snap["sequences"]):
+        entry = {k: s[k] for k in ("uid", "max_new_tokens", "output", "pos")}
+        arrays[f"seq{i}_prompt"] = np.asarray(s["prompt"], np.int32)
+        if s["pos"]:
+            for pool in ("k", "v"):
+                arr = np.asarray(s[pool])
+                entry[f"{pool}_dtype"] = arr.dtype.name
+                arrays[f"seq{i}_{pool}"] = checkpoint._storage_view(arr)
+        seqs.append(entry)
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = {k: snap[k] for k in snap if k != "sequences"}
+    manifest["sequences"] = seqs
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if path.exists():
+        shutil.rmtree(path)
+    tmp.rename(path)
+    return path
+
+
+def load_server_snapshot(path) -> dict:
+    """Load a snapshot written by :func:`save_server_snapshot`."""
+    import json
+    from pathlib import Path
+
+    import numpy as np
+
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+    snap = {k: v for k, v in manifest.items() if k != "sequences"}
+    snap["sequences"] = []
+    for i, entry in enumerate(manifest["sequences"]):
+        s = dict(entry)
+        s["prompt"] = data[f"seq{i}_prompt"]
+        if s["pos"]:
+            for pool in ("k", "v"):
+                s[pool] = checkpoint._unstorage_view(
+                    data[f"seq{i}_{pool}"], s.pop(f"{pool}_dtype"))
+        snap["sequences"].append(s)
+    return snap

@@ -59,6 +59,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import os
 import queue
 import threading
 from typing import Callable
@@ -69,9 +70,12 @@ import numpy as np
 
 from repro import memory
 from repro.memory import MemoryOrchestrator
+from repro.memory import tiers as memtiers
+from repro.memory.swap import PageSwapper, SwapHandle
 from repro.models.base import DecodeState
 from repro.models.transformer import (decode_loop, sample_tokens,
                                       vocab_mask_logits)
+from repro.runtime.ft import StragglerMonitor
 from repro.runtime.sharding import (activate_mesh, gather_tp_mode,
                                     mesh_axis_sizes, replicated)
 
@@ -88,6 +92,24 @@ class Request:
     temperature: float = 0.0
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
     output: list = dataclasses.field(default_factory=list)
+    # structured degradation outcome: None on success, else a dict with
+    # at least {"reason", "detail"} when the server shed the request
+    # instead of completing it (unrecoverable tier fault / pool
+    # exhaustion with no victim).  ``done`` is set either way.
+    error: dict | None = None
+    admitted_at_block: int | None = None   # stats["blocks"] at admission
+
+
+@dataclasses.dataclass
+class _Preempted:
+    """A sequence swapped out of the live batch: its request, the decode
+    position it will resume from, the remote-tier KV stash, and its
+    per-request PRNG key (so resumed sampling is bit-identical)."""
+
+    req: Request
+    pos: int
+    handle: SwapHandle
+    key: np.ndarray                  # (2,) uint32
 
 
 def make_prefill_step(model) -> Callable:
@@ -150,9 +172,23 @@ class BatchedServer:
     ``paged`` (default: auto) selects the block-pool paged KV cache when
     the model supports it.  ``num_pages`` sizes the pool — the default
     matches dense capacity (``batch × ceil(max_seq/page)`` plus the null
-    page), so admission never blocks; smaller pools oversubscribe: queued
-    requests wait at admission until reclamation frees enough pages, and
-    mid-decode exhaustion raises ``MemoryError`` (no preemption yet).
+    page), so admission never blocks; smaller pools oversubscribe and
+    engage **page-granular preemption** (``preempt``, default on): when
+    the backlog head would starve, victim sequences chosen by
+    ``preempt_policy`` (``"lru"`` / ``"fewest_pages"`` /
+    ``"lowest_progress"`` / a callable) have their KV pages swapped to
+    the remote tier by a :class:`~repro.memory.swap.PageSwapper`, their
+    physical pages freed, and are transparently restored — resume-FIFO
+    ahead of the backlog — when pages free up again.  Per-slot PRNG keys
+    (``fold_in(request key, position)``) make a preempted+resumed
+    sequence emit bit-identical tokens to an unpreempted run at any
+    temperature.  Tier transfers retry with exponential backoff under an
+    installed :class:`~repro.memory.tiers.FaultPlan`; unrecoverable
+    faults degrade per policy (victim shed with a structured
+    ``Request.error``, prefix sharing dropped under pool pressure,
+    injected mid-decode exhaustion recovered by emergency preemption).
+    ``audit`` (or ``REPRO_AUDIT=1``) cross-checks the block-pool
+    invariants after every scheduling step.
 
     ``pipeline`` (default on) keeps up to two decode blocks in flight so
     host scheduling overlaps device compute; tokens are bit-identical to
@@ -185,13 +221,22 @@ class BatchedServer:
                  block_size: int = 8, eos_id: int | None = None,
                  paged: bool | None = None, page_size: int | None = None,
                  num_pages: int | None = None, pipeline: bool = True,
-                 prefix_cache: bool = True, mesh=None):
+                 prefix_cache: bool = True, mesh=None, preempt: bool = True,
+                 preempt_policy="lru", audit: bool | None = None,
+                 swap_retries: int = 3, swap_timeout_s: float | None = None):
         self.model = model
         self.batch = batch_size
         self.max_seq = max_seq
         self.block_size = block_size
         self.temperature = temperature
         self.eos_id = eos_id
+        self.seed = seed
+        self._preempt_arg = bool(preempt)
+        self.preempt_policy = preempt_policy
+        self.audit_every_block = (audit if audit is not None
+                                  else os.environ.get("REPRO_AUDIT") == "1")
+        self._swap_retries = swap_retries
+        self._swap_timeout_s = swap_timeout_s
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self._backlog: list[Request] = []
         self._uid = 0
@@ -288,8 +333,15 @@ class BatchedServer:
                 self.mem.policies["kv_pool"].tier, "kv_pool",
                 self.mem.placed_bytes(self.cache))
             init_pages = None
-        self.state = DecodeState.init(batch_size, jax.random.PRNGKey(seed),
-                                      pages=init_pages)
+        # per-request PRNG: every request uid gets fold_in(base, uid);
+        # the token at sequence position q is sampled from
+        # fold_in(request_key, q), making sampling a pure function of
+        # (seed, uid, position) — invariant under preemption, resume,
+        # snapshot/restore and scheduling order
+        self._base_key = jax.random.PRNGKey(seed)
+        self.state = DecodeState.init(
+            batch_size, jax.random.PRNGKey(seed), pages=init_pages,
+            slot_keys=jnp.zeros((batch_size, 2), jnp.uint32))
         if mesh is not None:
             # decode state is host-mirrored bookkeeping: replicate it
             self.state = jax.device_put(self.state, replicated(mesh))
@@ -297,6 +349,20 @@ class BatchedServer:
         self._slot_pos = [0] * batch_size      # host mirror of state.pos
         self._planned = [0] * batch_size       # in-flight decode tokens
         self._reserved: dict[int, int] = {}    # slot -> worst-case pages
+        # preemption / fault-recovery state (paged only)
+        self.preempt_enabled = self._preempt_arg and self.paged
+        self.transfer_monitor = StragglerMonitor(factor=3.0)
+        self.swapper = (PageSwapper(ledger=self.mem.ledger,
+                                    retries=self._swap_retries,
+                                    timeout_s=self._swap_timeout_s,
+                                    monitor=self.transfer_monitor)
+                        if self.paged else None)
+        self._preempted: list[_Preempted] = []   # resume-FIFO
+        self._pool_fault = False       # mid-decode exhaustion latched
+        self._fault_release_block: int | None = None
+        self._fault_slot = -1          # phantom slot holding stolen pages
+        self._sched_counter = 0
+        self._last_sched = [0] * batch_size      # for the LRU policy
         self._peak_pages = -1
         self.tiers_peak: dict = {}
         self.stats = {"steps": 0, "tokens": 0, "batches": 0, "blocks": 0,
@@ -305,6 +371,10 @@ class BatchedServer:
                       "compiles": 0, "table_rebuilds": 0,
                       "table_delta_entries": 0, "prefix_hits": 0,
                       "prefix_shared_pages": 0,
+                      "preemptions": 0, "resumes": 0, "sheds": 0,
+                      "preempted_pages": 0, "pool_faults": 0,
+                      "prefix_drops": 0, "swap_retries": 0,
+                      "slow_transfers": 0, "audits": 0,
                       "model_shards": self.mem.model_shards}
 
     # ----- mesh plumbing -----------------------------------------------------
@@ -365,15 +435,19 @@ class BatchedServer:
         vocab, temperature = self.model.cfg.vocab, self.temperature
         eos_id = self.eos_id
 
-        def admit_step(params, ptoks, cache, state, slot, max_new):
+        def admit_step(params, ptoks, cache, state, slot, max_new, req_key):
             """Prefill ONE request and splice it into the live batch state.
 
-            ptoks: (1, P) left-padded prompt; slot/max_new: traced scalars.
-            Donates (cache, state) — the splice is in place.
+            ptoks: (1, P) left-padded prompt; slot/max_new: traced
+            scalars; req_key: (2,) uint32 per-request key.  The first
+            token lands at sequence position ``plen``, so it is sampled
+            from ``fold_in(req_key, plen)`` — the same rule the decode
+            loop applies per slot.  Donates (cache, state) — the splice
+            is in place.
             """
-            key, k = jax.random.split(state.key)
             fresh = model.init_cache(1, max_seq)
             logits, fresh = model.prefill(params, ptoks, fresh)
+            k = jax.random.fold_in(req_key, ptoks.shape[1])
             nxt = sample_tokens(logits, vocab, temperature, k)   # (1, 1)
 
             def splice(big, small):
@@ -398,7 +472,8 @@ class BatchedServer:
 
             cache = jax.tree.map(splice, cache, fresh)
             plen = ptoks.shape[1]
-            state = self._spliced_state(state, nxt, plen, slot, max_new, key)
+            state = self._spliced_state(state, nxt, plen, slot, max_new,
+                                        req_key)
             return nxt, cache, state
         return admit_step
 
@@ -406,16 +481,18 @@ class BatchedServer:
         model = self.model
         vocab, temperature = self.model.cfg.vocab, self.temperature
 
-        def admit_step(params, ptoks, cache, state, slot, max_new, ptable):
+        def admit_step(params, ptoks, cache, state, slot, max_new, req_key,
+                       ptable):
             """Prefill ONE request straight into its freshly allocated
             pages — no dense staging cache, no splice.  ptable: (1, n)
             page ids covering the bucketed prompt.  Donates (cache,
             state): the page writes and slot activation are in place."""
-            key, k = jax.random.split(state.key)
             logits, cache = model.prefill_paged(params, ptoks, cache, ptable)
+            k = jax.random.fold_in(req_key, ptoks.shape[1])
             nxt = sample_tokens(logits, vocab, temperature, k)   # (1, 1)
             plen = ptoks.shape[1]
-            state = self._spliced_state(state, nxt, plen, slot, max_new, key)
+            state = self._spliced_state(state, nxt, plen, slot, max_new,
+                                        req_key)
             return nxt, cache, state
         return admit_step
 
@@ -423,29 +500,32 @@ class BatchedServer:
         model = self.model
         vocab, temperature = self.model.cfg.vocab, self.temperature
 
-        def admit_step(params, ptoks, cache, state, slot, max_new,
+        def admit_step(params, ptoks, cache, state, slot, max_new, req_key,
                        prefix_pages, new_pages):
             """Prefix-cached admission: prefill ONLY the prompt suffix.
 
             ptoks: (1, S_new) suffix tokens (position n_pre*page
             onwards); prefix_pages: (1, n_pre) shared pages read, never
             written; new_pages: (1, n_new) pages receiving the suffix
-            KV.  One key split, exactly like the unshared path, so
-            shared and unshared admission stay PRNG-identical."""
-            key, k = jax.random.split(state.key)
+            KV.  Sampling folds the request key with the SAME total
+            prompt length as the unshared path, so shared and unshared
+            admission stay PRNG-identical."""
             logits, cache = model.prefill_paged_prefix(
                 params, ptoks, cache, prefix_pages, new_pages)
-            nxt = sample_tokens(logits, vocab, temperature, k)   # (1, 1)
             page = cache["k_pages"].shape[2]
             plen = prefix_pages.shape[1] * page + ptoks.shape[1]
-            state = self._spliced_state(state, nxt, plen, slot, max_new, key)
+            k = jax.random.fold_in(req_key, plen)
+            nxt = sample_tokens(logits, vocab, temperature, k)   # (1, 1)
+            state = self._spliced_state(state, nxt, plen, slot, max_new,
+                                        req_key)
             return nxt, cache, state
         return admit_step
 
-    def _spliced_state(self, state, nxt, plen, slot, max_new, key):
+    def _spliced_state(self, state, nxt, plen, slot, max_new, req_key):
         """Activate ``slot`` in the decode state (shared by both admit
-        paths).  The page table is NOT touched here — the host refreshes
-        it at every block boundary."""
+        paths) and install the request's per-slot PRNG key.  The page
+        table is NOT touched here — the host refreshes it at every block
+        boundary."""
         active = max_new > 1
         if self.eos_id is not None:   # EOS at admission: never activate
             active = active & (nxt[0, 0] != self.eos_id)
@@ -457,7 +537,10 @@ class BatchedServer:
             pos=upd1(state.pos, plen),
             active=upd1(state.active, active),
             remaining=upd1(state.remaining, max_new - 1),
-            key=key, pages=state.pages)
+            key=state.key, pages=state.pages,
+            slot_keys=jax.lax.dynamic_update_slice(
+                state.slot_keys, req_key.astype(jnp.uint32)[None],
+                (slot, 0)))
 
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slots) if r is None]
@@ -472,11 +555,29 @@ class BatchedServer:
         """Page-accounting gate: every admitted request RESERVES its
         worst-case page count (allocation itself stays on-demand, so the
         live footprint still tracks actual tokens) — mid-decode pool
-        exhaustion is then impossible without preemption machinery, and
-        queued requests simply wait for reclamation."""
+        exhaustion is then impossible (absent an injected fault, which
+        emergency preemption recovers), and queued requests wait for
+        reclamation or trigger preemption."""
         reserved = sum(self._reserved.values())
         worst = self._worst_pages(len(req.prompt), req.max_new_tokens)
         return worst <= self.manager.capacity - reserved
+
+    def _req_key(self, uid: int) -> jax.Array:
+        """The per-request PRNG key: ``fold_in(PRNGKey(seed), uid)`` —
+        a pure function of construction seed and admission order, so
+        identically configured servers sample identically."""
+        return jax.random.fold_in(self._base_key, uid)
+
+    def _under_pressure(self) -> bool:
+        """Pool-pressure predicate for graceful degradation: sharing new
+        prefix pages is skipped while victims sit swapped out (their
+        resume must not contend with refcount-pinned pages) or while
+        worst-case reservations crowd the pool."""
+        if not self.paged:
+            return False
+        if self._preempted or self._pool_fault:
+            return True
+        return sum(self._reserved.values()) > 0.9 * self.manager.capacity
 
     # ----- prefix caching ----------------------------------------------------
     def _shareable_pages(self, plen: int) -> int:
@@ -535,54 +636,73 @@ class BatchedServer:
         plen = self._admit_plen(len(req.prompt), req.max_new_tokens)
         toks = np.zeros((1, plen), np.int32)
         toks[0, plen - len(req.prompt):] = req.prompt        # left-pad
+        req_key = self._req_key(req.uid)
         # admission never reads or writes the device page table, so hold
         # it aside and admit with pages=None: admit executables are then
         # keyed only on the bucketed prompt shape, never on whatever
         # width the live table happens to have (the width x plen compile
-        # cross-product would otherwise defeat the bucketing)
+        # cross-product would otherwise defeat the bucketing).
+        # try/finally: a MemoryError from ensure() (injected pool
+        # exhaustion) must not leave the live state without its table.
         saved_pages = self.state.pages
         if saved_pages is not None:
             self.state = dataclasses.replace(self.state, pages=None)
-        if self.paged:
-            self._reserved[slot] = self._worst_pages(len(req.prompt),
-                                                     req.max_new_tokens)
-            shared = (self._shared_prefix_pages(toks, plen)
-                      if self.prefix_cache else [])
-            if shared:
-                self.manager.adopt(slot, shared)
-            new_ids = self.manager.ensure(slot, plen)
-            if shared:
-                suffix = toks[:, len(shared) * self.page_size:]
-                with self._mesh_ctx():
-                    nxt, self.cache, self.state = self._admit_step_prefix(
-                        self.params, jnp.asarray(suffix), self.cache,
-                        self.state, jnp.asarray(slot, jnp.int32),
-                        jnp.asarray(req.max_new_tokens, jnp.int32),
-                        jnp.asarray([shared], jnp.int32),
-                        jnp.asarray([new_ids], jnp.int32))
-                self.stats["prefix_hits"] += 1
-                self.stats["prefix_shared_pages"] += len(shared)
+        try:
+            if self.paged:
+                self._reserved[slot] = self._worst_pages(
+                    len(req.prompt), req.max_new_tokens)
+                share = self.prefix_cache
+                if share and self._under_pressure():
+                    # degradation policy: under pool pressure new
+                    # admissions neither reuse nor publish shared pages
+                    # (sharing is semantically invisible, so tokens are
+                    # unchanged — only residency is)
+                    share = False
+                    self.stats["prefix_drops"] += 1
+                shared = (self._shared_prefix_pages(toks, plen)
+                          if share else [])
+                if shared:
+                    self.manager.adopt(slot, shared)
+                new_ids = self.manager.ensure(slot, plen)
+                if shared:
+                    suffix = toks[:, len(shared) * self.page_size:]
+                    with self._mesh_ctx():
+                        nxt, self.cache, self.state = self._admit_step_prefix(
+                            self.params, jnp.asarray(suffix), self.cache,
+                            self.state, jnp.asarray(slot, jnp.int32),
+                            jnp.asarray(req.max_new_tokens, jnp.int32),
+                            req_key,
+                            jnp.asarray([shared], jnp.int32),
+                            jnp.asarray([new_ids], jnp.int32))
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefix_shared_pages"] += len(shared)
+                else:
+                    ptable = jnp.asarray([new_ids], jnp.int32)
+                    with self._mesh_ctx():
+                        nxt, self.cache, self.state = self._admit_step(
+                            self.params, jnp.asarray(toks), self.cache,
+                            self.state, jnp.asarray(slot, jnp.int32),
+                            jnp.asarray(req.max_new_tokens, jnp.int32),
+                            req_key, ptable)
+                self.manager.note_tokens(slot, plen)
+                if share:
+                    self._register_prefix(toks, plen, slot)
+                self.kv.record()
+                self._note_peak()
             else:
-                ptable = jnp.asarray([new_ids], jnp.int32)
                 with self._mesh_ctx():
                     nxt, self.cache, self.state = self._admit_step(
                         self.params, jnp.asarray(toks), self.cache,
                         self.state, jnp.asarray(slot, jnp.int32),
-                        jnp.asarray(req.max_new_tokens, jnp.int32), ptable)
-            self.manager.note_tokens(slot, plen)
-            if self.prefix_cache:
-                self._register_prefix(toks, plen, slot)
-            self.kv.record()
-            self._note_peak()
-        else:
-            with self._mesh_ctx():
-                nxt, self.cache, self.state = self._admit_step(
-                    self.params, jnp.asarray(toks), self.cache, self.state,
-                    jnp.asarray(slot, jnp.int32),
-                    jnp.asarray(req.max_new_tokens, jnp.int32))
-        if saved_pages is not None:
-            self.state = dataclasses.replace(self.state, pages=saved_pages)
+                        jnp.asarray(req.max_new_tokens, jnp.int32), req_key)
+        finally:
+            if saved_pages is not None and self.state.pages is None:
+                self.state = dataclasses.replace(self.state,
+                                                 pages=saved_pages)
         self._slot_pos[slot] = plen
+        self._sched_counter += 1
+        self._last_sched[slot] = self._sched_counter
+        req.admitted_at_block = self.stats["blocks"]
         first = int(jax.device_get(nxt)[0, 0])
         req.output.append(first)
         self.stats["tokens"] += 1
@@ -597,10 +717,23 @@ class BatchedServer:
         self.slots[slot] = req
         return False
 
-    def _admit_from_queue(self, finished: list[Request]) -> None:
-        """Fill free slots from the queue (non-blocking, mid-stream).
-        With a paged pool, admission is page-gated: the head request
-        waits (FIFO order preserved) until reclamation frees enough."""
+    def _admit_from_queue(self, finished: list[Request],
+                          allow_preempt: bool = False) -> None:
+        """Fill free slots (non-blocking, mid-stream): swapped-out
+        victims resume FIRST (resume-FIFO — they are older than every
+        queued request, so preemption can never starve them), then the
+        backlog in arrival order.  With a paged pool, admission is
+        page-gated: the head request waits (FIFO order preserved) until
+        reclamation frees enough — or, with ``allow_preempt`` (the
+        pipeline is drained), triggers page-granular preemption."""
+        while self._preempted and self._free_slots():
+            ps = self._preempted[0]
+            if not self._resume_ready(ps):
+                break
+            self._preempted.pop(0)
+            if not self._resume(ps, self._free_slots()[0], finished):
+                self._preempted.insert(0, ps)   # physically blocked
+                break
         while True:
             free = self._free_slots()
             if not free:
@@ -612,10 +745,255 @@ class BatchedServer:
                     return
             req = self._backlog[0]
             if self.paged and not self._admission_pages_ready(req):
-                return                # blocked on pages, not on slots
+                if not (allow_preempt and self._try_preempt_for(req,
+                                                                finished)):
+                    return            # blocked on pages, not on slots
+                free = self._free_slots()
+                if not free or not self._admission_pages_ready(req):
+                    return
             self._backlog.pop(0)
-            if self._admit(req, free[0]):
+            try:
+                done_now = self._admit(req, free[0])
+            except MemoryError:
+                # physically out of pages (injected exhaustion window):
+                # roll back the reservation and keep FIFO order
+                self.manager.free_slot(free[0])
+                self._reserved.pop(free[0], None)
+                self._backlog.insert(0, req)
+                return
+            if done_now:
                 finished.append(req)      # done at admission: slot stays free
+
+    # ----- preemption & fault recovery ---------------------------------------
+    def _victim_order(self, cands: list[int]) -> list[int]:
+        """Rank live slots by the configured victim policy (first =
+        preempted first).  ``preempt_policy`` may also be a callable
+        ``(server, cands) -> ordered cands`` for experimentation."""
+        pol = self.preempt_policy
+        if callable(pol):
+            return list(pol(self, cands))
+        if pol == "lru":          # least recently scheduled work
+            return sorted(cands, key=lambda i: self._last_sched[i])
+        if pol == "fewest_pages":  # cheapest swap traffic
+            return sorted(cands,
+                          key=lambda i: len(self.manager.slot_pages(i)))
+        if pol == "lowest_progress":   # least sunk decode cost
+            return sorted(cands, key=lambda i: (
+                len(self.slots[i].output)
+                / max(self.slots[i].max_new_tokens, 1)))
+        raise ValueError(f"unknown preempt_policy {pol!r}")
+
+    def _select_victims(self, shortfall: int) -> list[int]:
+        """Fewest victims (in policy order) whose reservations cover
+        ``shortfall`` pages; [] when even preempting everyone falls
+        short (then waiting on reclamation is the only option)."""
+        cands = [i for i, r in enumerate(self.slots) if r is not None]
+        out, freed = [], 0
+        for i in self._victim_order(cands):
+            if freed >= shortfall:
+                break
+            out.append(i)
+            freed += self._reserved.get(i, 0)
+        return out if freed >= shortfall else []
+
+    def _preempt_wanted(self) -> bool:
+        """Should the pipeline drain so the backlog head can preempt?
+        Requires: preemption on, no victim already swapped out
+        (anti-thrash: one preemption round resolves before the next
+        starts), a free slot, a head blocked on pages, and victims whose
+        reservations cover the shortfall."""
+        if not (self.preempt_enabled and self._backlog
+                and not self._preempted and self._free_slots()):
+            return False
+        req = self._backlog[0]
+        if self._admission_pages_ready(req):
+            return False
+        worst = self._worst_pages(len(req.prompt), req.max_new_tokens)
+        shortfall = worst - (self.manager.capacity
+                             - sum(self._reserved.values()))
+        return bool(self._select_victims(shortfall))
+
+    def _try_preempt_for(self, req: Request,
+                         finished: list[Request]) -> bool:
+        """Swap out enough victims for ``req`` to admit.  Only called
+        with the pipeline drained (no block in flight), so the gathered
+        pages are exactly the harvested positions."""
+        if not (self.preempt_enabled and not self._preempted):
+            return False
+        worst = self._worst_pages(len(req.prompt), req.max_new_tokens)
+        shortfall = worst - (self.manager.capacity
+                             - sum(self._reserved.values()))
+        victims = self._select_victims(shortfall)
+        if not victims:
+            return False
+        for i in victims:
+            self._preempt_slot(i, finished)
+        return True
+
+    def _preempt_slot(self, i: int, finished: list[Request]) -> None:
+        """Swap slot ``i``'s live KV pages to the remote tier and free
+        its physical pages + reservation.  Requires no block in flight.
+        Shared prefix pages are stashed like private ones and restored
+        private — prefix sharing is dropped under pressure (documented
+        degradation; tokens are unaffected, only residency).  On an
+        unrecoverable transfer fault the victim is shed with a
+        structured error instead of poisoning the pool."""
+        req = self.slots[i]
+        pos = self._slot_pos[i]
+        pids = self.manager.slot_pages(i)[:self.manager.pages_for(pos)]
+        try:
+            with self._mesh_ctx():
+                handle = self.swapper.swap_out(self.cache, pids)
+        except memtiers.TierTransferError as e:
+            self._shed(i, finished, reason="preempt_swap_failed",
+                       detail=str(e))
+            return
+        key = np.asarray(jax.device_get(self._req_key(req.uid)))
+        self._preempted.append(_Preempted(req=req, pos=pos, handle=handle,
+                                          key=key))
+        self._evict_slot(i)
+        self.stats["preemptions"] += 1
+        self.stats["preempted_pages"] += len(pids)
+        self.kv.record()
+
+    def _evict_slot(self, i: int) -> None:
+        """Release slot ``i``'s pages/reservation and deactivate it on
+        device (shared by preempt and shed).  The zeroed table row at
+        the next block's delta re-points any frozen-position ghost
+        writes at the null page."""
+        self.manager.free_slot(i)
+        self._reserved.pop(i, None)
+        self.slots[i] = None
+        self._planned[i] = 0
+        self._slot_pos[i] = 0
+        st = self.state
+        self.state = dataclasses.replace(
+            st, active=st.active.at[i].set(False),
+            remaining=st.remaining.at[i].set(0))
+
+    def _shed(self, i: int, finished: list[Request], *, reason: str,
+              detail: str) -> None:
+        """Degradation of last resort: drop slot ``i``'s request with a
+        structured error (the server survives; the caller sees why)."""
+        req = self.slots[i]
+        self._evict_slot(i)
+        req.error = {"reason": reason, "detail": detail, "uid": req.uid,
+                     "tokens_emitted": len(req.output)}
+        req.done.set()
+        finished.append(req)
+        self.stats["sheds"] += 1
+        self.kv.record()
+
+    def _shed_preempted(self, ps: _Preempted, finished: list[Request], *,
+                        reason: str, detail: str) -> None:
+        """Shed a swapped-out victim whose restore failed."""
+        self.swapper.release(ps.handle)
+        ps.req.error = {"reason": reason, "detail": detail,
+                        "uid": ps.req.uid,
+                        "tokens_emitted": len(ps.req.output)}
+        ps.req.done.set()
+        finished.append(ps.req)
+        self.stats["sheds"] += 1
+
+    def _resume_ready(self, ps: _Preempted) -> bool:
+        """A victim resumes only when its remaining worst case fits the
+        unreserved pool — the same accounting gate as admission, so a
+        resumed sequence can never exhaust the pool either."""
+        worst = self._resume_worst(ps)
+        return worst <= self.manager.capacity - sum(self._reserved.values())
+
+    def _resume_worst(self, ps: _Preempted) -> int:
+        left = ps.req.max_new_tokens - len(ps.req.output)
+        return self.manager.pages_for(min(ps.pos + left, self.max_seq))
+
+    def _resume(self, ps: _Preempted, slot: int,
+                finished: list[Request]) -> bool:
+        """Restore a swapped-out victim into ``slot``: re-allocate pages
+        covering its position, scatter the stash back, and re-activate
+        the device slot with its original per-slot key — decode then
+        continues bit-identically.  False = physically blocked (retry
+        later); True = consumed (resumed or shed)."""
+        self._reserved[slot] = self._resume_worst(ps)
+        try:
+            new_ids = self.manager.ensure(slot, ps.pos)
+        except MemoryError:
+            self._reserved.pop(slot, None)
+            return False
+        try:
+            with self._mesh_ctx():
+                self.cache = self.swapper.swap_in(self.cache, new_ids,
+                                                  ps.handle)
+        except memtiers.TierTransferError as e:
+            self.manager.free_slot(slot)
+            self._reserved.pop(slot, None)
+            self._shed_preempted(ps, finished,
+                                 reason="resume_swap_failed", detail=str(e))
+            return True
+        self.manager.note_tokens(slot, ps.pos)
+        st = self.state
+        self.state = dataclasses.replace(
+            st,
+            tokens=st.tokens.at[slot, 0].set(ps.req.output[-1]),
+            pos=st.pos.at[slot].set(ps.pos),
+            active=st.active.at[slot].set(True),
+            remaining=st.remaining.at[slot].set(
+                ps.req.max_new_tokens - len(ps.req.output)),
+            slot_keys=st.slot_keys.at[slot].set(
+                jnp.asarray(ps.key, jnp.uint32)))
+        self.slots[slot] = ps.req
+        self._slot_pos[slot] = ps.pos
+        self._planned[slot] = 0
+        self._sched_counter += 1
+        self._last_sched[slot] = self._sched_counter
+        self.stats["resumes"] += 1
+        self.kv.record()
+        self._note_peak()
+        return True
+
+    def _fault_injection_tick(self) -> None:
+        """Service an armed pool-exhaustion fault: steal every free page
+        into a phantom slot at the armed block, release them
+        ``exhaust_blocks`` blocks later (both host-side — the device
+        never sees the phantom)."""
+        plan = memtiers.active_fault_plan()
+        if (self._fault_release_block is not None
+                and self.stats["blocks"] >= self._fault_release_block):
+            self.manager.free_slot(self._fault_slot)
+            self._fault_release_block = None
+        if plan is None:
+            return
+        if plan.take_pool_exhaustion(self.stats["blocks"]):
+            steal = self.manager.free_pages * self.page_size
+            if steal:
+                self.manager.ensure(self._fault_slot, steal)
+            self._fault_release_block = (self.stats["blocks"]
+                                         + plan.exhaust_blocks)
+            self.stats["pool_faults"] += 1
+
+    def _recover_pool_fault(self, finished: list[Request]) -> None:
+        """Mid-decode pool exhaustion (injected): with the pipeline
+        drained, emergency-preempt one victim so decode can proceed; if
+        only one sequence is live there is nothing to preempt FOR it —
+        shed it with a structured error (the server survives)."""
+        self._pool_fault = False
+        live = [i for i, r in enumerate(self.slots) if r is not None]
+        if not live:
+            return
+        order = self._victim_order(live)
+        if len(live) == 1:
+            self._shed(order[0], finished, reason="pool_exhausted",
+                       detail="mid-decode page allocation failed with no "
+                              "preemptable victim")
+            return
+        self._preempt_slot(order[0], finished)
+
+    def _maybe_audit(self) -> None:
+        """Debug mode: run the block-pool invariant auditor (refcounts,
+        free-list disjointness, table/pool consistency, ledger residency)
+        after every scheduling step."""
+        if self.audit_every_block and self.paged:
+            self.kv.audit()
+            self.stats["audits"] += 1
 
     # ----- decode ------------------------------------------------------------
     def _live_remaining(self, i: int) -> int:
@@ -691,8 +1069,10 @@ class BatchedServer:
         blocks (the donated cache/state buffers chain dispatches in
         order on device).  Page growth covering every planned write is
         folded into this block's table delta; the allocation is
-        speculative past in-flight blocks but can never exhaust the pool
-        because admission reserved each request's worst case."""
+        speculative past in-flight blocks and can only exhaust the pool
+        under an injected fault (admission reserved each request's worst
+        case) — exhaustion rolls the plan back, latches ``_pool_fault``
+        and returns None so ``run_once`` can run emergency recovery."""
         advances: dict[int, tuple[Request, int]] = {}
         for i, req in enumerate(self.slots):
             if req is None:
@@ -702,9 +1082,17 @@ class BatchedServer:
                 advances[i] = (req, adv)
                 self._planned[i] += adv
         if self.paged:
-            for i in advances:
-                self.manager.ensure(i, min(self._slot_pos[i]
-                                           + self._planned[i], self.max_seq))
+            self._fault_injection_tick()
+            try:
+                for i in advances:
+                    self.manager.ensure(i, min(self._slot_pos[i]
+                                               + self._planned[i],
+                                               self.max_seq))
+            except MemoryError:
+                for i, (req, adv) in advances.items():
+                    self._planned[i] -= adv
+                self._pool_fault = True
+                return None
             delta = self._table_delta()
             self.kv.record()
             self._note_peak()
@@ -765,29 +1153,71 @@ class BatchedServer:
             self.stats["kv_pages_hwm"] = self.manager.hwm
             self.kv.record()               # per-tier ledger accounting
 
-    def run_once(self) -> list[Request]:
+    def run_once(self, max_blocks: int | None = None) -> list[Request]:
         """Admit queued requests and serve until every admitted request
-        completes; returns the finished ones.  Requests that arrive (or
-        overflow the slot count) while serving are admitted mid-stream.
-        Non-blocking when idle: empty queue + no live slots returns [].
+        completes; returns the finished ones (shed requests too — check
+        ``Request.error``).  Requests that arrive (or overflow the slot
+        count) while serving are admitted mid-stream.  Non-blocking when
+        idle: empty queue + no live slots returns [].
 
         With ``pipeline`` on, up to two blocks stay in flight: the next
         block is dispatched before the previous block's harvest is
         synced, so host scheduling (token harvest, reclamation,
-        admission, the next table delta) overlaps device compute."""
+        admission, the next table delta) overlaps device compute.  When
+        preemption is wanted (backlog head starving) or a pool fault is
+        latched, dispatching pauses so the pipeline drains first —
+        swaps and emergency recovery only run against fully harvested
+        state.  ``max_blocks`` bounds the blocks dispatched this call
+        (the pipeline still drains before returning), for
+        checkpoint-between-blocks callers."""
         finished: list[Request] = []
         self._admit_from_queue(finished)
         inflight: collections.deque = collections.deque()
+        dispatched = 0
         while True:
-            while len(inflight) < self.max_inflight and self._can_dispatch():
-                inflight.append(self._dispatch_block())
-            if not inflight:
+            stall = self._pool_fault or self._preempt_wanted()
+            if not stall:
+                while (len(inflight) < self.max_inflight
+                       and self._can_dispatch()
+                       and (max_blocks is None or dispatched < max_blocks)):
+                    blk = self._dispatch_block()
+                    if blk is None:      # pool fault latched: drain first
+                        break
+                    dispatched += 1
+                    inflight.append(blk)
+            if inflight:
+                self._harvest(inflight.popleft(), finished)
+                self._admit_from_queue(finished,
+                                       allow_preempt=not inflight)
+                self._maybe_audit()
+                continue
+            if self._pool_fault:
+                self._recover_pool_fault(finished)
+                self._maybe_audit()
+                continue
+            if max_blocks is not None and dispatched >= max_blocks:
                 break
-            self._harvest(inflight.popleft(), finished)
-            self._admit_from_queue(finished)
+            # idle pipeline: give blocked work one more chance (resume
+            # swapped-out victims, preempt for the backlog head)
+            self._admit_from_queue(finished, allow_preempt=True)
+            self._maybe_audit()
+            if not (self._can_dispatch() or self._pool_fault):
+                if self._fault_release_block is not None:
+                    # nothing can decode, so the block counter will never
+                    # reach the release point — the injected exhaustion
+                    # window is over by definition; return the pages
+                    self.manager.free_slot(self._fault_slot)
+                    self._fault_release_block = None
+                    self._admit_from_queue(finished, allow_preempt=True)
+                    if self._can_dispatch():
+                        continue
+                break
         if finished:
             self.stats["batches"] += 1
         self.stats["compiles"] = self._compiles()
+        if self.swapper is not None:
+            self.stats["swap_retries"] = self.swapper.retry_attempts
+        self.stats["slow_transfers"] = self.transfer_monitor.flags
         return finished
 
     def _compiles(self) -> int:
@@ -796,6 +1226,81 @@ class BatchedServer:
         fns = (self._decode_loop, self._admit_step, self._admit_step_prefix)
         return sum(f._cache_size() for f in fns
                    if f is not None and hasattr(f, "_cache_size"))
+
+    # ----- checkpoint/restart ------------------------------------------------
+    def _drain_queue(self) -> None:
+        while True:
+            try:
+                self._backlog.append(self.queue.get_nowait())
+            except queue.Empty:
+                return
+
+    def snapshot(self) -> dict:
+        """Serialize every in-flight sequence — live slots (KV pages
+        gathered through the swapper), swapped-out victims (their stash
+        verbatim) and queued requests — into a host dict that
+        :meth:`restore` (same model/params/seed) rehydrates.  Call
+        between ``run_once`` calls (no block in flight).  Feeds
+        ``repro.runtime.ft.save_server_snapshot`` for on-disk restart."""
+        if not self.paged:
+            raise ValueError("snapshot requires the paged server")
+        self._drain_queue()
+        seqs = []
+
+        def entry(req, pos, k=None, v=None):
+            e = {"uid": req.uid, "prompt": np.asarray(req.prompt, np.int32),
+                 "max_new_tokens": req.max_new_tokens,
+                 "output": list(req.output), "pos": int(pos)}
+            if pos:
+                e["k"], e["v"] = k, v
+            return e
+
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            pos = self._slot_pos[i]
+            pids = self.manager.slot_pages(i)[:self.manager.pages_for(pos)]
+            with self._mesh_ctx():
+                h = self.swapper.swap_out(self.cache, pids)
+            self.swapper.release(h)     # accounting-neutral read-out
+            seqs.append(entry(req, pos, h.k, h.v))
+        for ps in self._preempted:
+            seqs.append(entry(ps.req, ps.pos, ps.handle.k, ps.handle.v))
+        for req in self._backlog:
+            seqs.append(entry(req, 0))
+        seqs.sort(key=lambda e: e["uid"])
+        return {"seed": self.seed, "uid": self._uid, "sequences": seqs}
+
+    def restore(self, snap: dict) -> None:
+        """Rehydrate a :meth:`snapshot` into this (idle, same-seed)
+        server.  Sequences with decoded positions come back as
+        swapped-out stashes — the resume path splices their KV into
+        fresh pages and, with per-slot keys, continues bit-identically;
+        undecoded ones rejoin the backlog.  Prefix pages restore private
+        (sharing re-forms only across NEW admissions)."""
+        if snap["seed"] != self.seed:
+            raise ValueError(f"snapshot seed {snap['seed']} != server "
+                             f"seed {self.seed} (tokens would diverge)")
+        if any(r is not None for r in self.slots) or self._preempted \
+                or self._backlog or not self.queue.empty():
+            raise ValueError("restore requires an idle server")
+        self._uid = max(self._uid, int(snap["uid"]))
+        for s in sorted(snap["sequences"], key=lambda e: e["uid"]):
+            req = Request(int(s["uid"]), np.asarray(s["prompt"], np.int32),
+                          max_new_tokens=int(s["max_new_tokens"]))
+            req.output = [int(t) for t in s["output"]]
+            if int(s["pos"]):
+                k = np.asarray(s["k"])
+                v = np.asarray(s["v"])
+                handle = SwapHandle(
+                    page_count=k.shape[1], k=k, v=v,
+                    nbytes=(k.size + v.size) * k.dtype.itemsize)
+                self.swapper.adopt(handle)
+                key = np.asarray(jax.device_get(self._req_key(req.uid)))
+                self._preempted.append(_Preempted(
+                    req=req, pos=int(s["pos"]), handle=handle, key=key))
+            else:
+                self._backlog.append(req)
 
     # ----- accounting --------------------------------------------------------
     def kv_bytes_in_use(self) -> int:

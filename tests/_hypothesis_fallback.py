@@ -3,7 +3,7 @@ where the real package is absent (see requirements-dev.txt for full runs).
 
 Implements just the surface these tests use: ``given`` with keyword
 strategies, ``settings(max_examples=..., deadline=...)``, and
-``strategies.integers/floats/lists``.  Drawing is deterministic (seeded
+``strategies.integers/floats/lists/tuples/sampled_from``.  Drawing is deterministic (seeded
 PRNG) and always covers the strategy's boundary values first — a fixed
 sample sweep, not property search, but the same assertions execute.
 """
@@ -32,6 +32,18 @@ class strategies:  # noqa: N801 - mimics the hypothesis module name
     def floats(min_value=0.0, max_value=1.0, **_kw):
         return _Strategy([min_value, max_value],
                          lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def tuples(*elements):
+        return _Strategy([tuple(s.edges[0] for s in elements),
+                          tuple(s.edges[-1] for s in elements)],
+                         lambda r: tuple(s.draw(r) for s in elements))
+
+    @staticmethod
+    def sampled_from(choices):
+        choices = list(choices)
+        return _Strategy([choices[0], choices[-1]],
+                         lambda r: r.choice(choices))
 
     @staticmethod
     def lists(elements, min_size=0, max_size=10, **_kw):

@@ -1,10 +1,13 @@
 """Property tests for paged admission accounting: worst-case page
-reservations (``_worst_pages`` / ``_admission_pages_ready``) and the
+reservations (``_worst_pages`` / ``_admission_pages_ready``), the
 prefix-sharing eligibility rule (``_shareable_pages``) at page-boundary
-and ``max_seq``-clamp edges.  Pure host math — one server instance,
-no dispatches."""
+and ``max_seq``-clamp edges, and the admission-ordering contract under
+preemption churn (FIFO is never overtaken by preemption-freed pages;
+victims always resume).  Pure host math — the churn harness drives the
+REAL scheduler methods against fakes for the device-touching steps."""
 import dataclasses
 import functools
+import queue as queue_mod
 
 import jax
 import numpy as np
@@ -15,7 +18,8 @@ except ImportError:          # tier-1 runs without hypothesis
     from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.configs import build_model, get_config
-from repro.runtime.serve import BatchedServer, Request
+from repro.kernels.paged_attention.ops import BlockManager
+from repro.runtime.serve import BatchedServer, Request, _Preempted
 
 MAX_SEQ = 64
 PAGE = 4
@@ -114,3 +118,211 @@ def test_shareable_pages_never_cover_a_written_position(plen):
     if plen % PAGE == 0:
         # page-boundary edge: the final FULL page still stays private
         assert n == plen // PAGE - 1
+
+
+# ---------------------------------------------------------------------------
+# admission ordering under preemption churn
+# ---------------------------------------------------------------------------
+
+class _SchedHarness(BatchedServer):
+    """The REAL scheduler (``_admit_from_queue`` and the whole victim
+    selection / resume-gating machinery run unmodified) over a real
+    :class:`BlockManager`, with only the device-touching steps faked as
+    host bookkeeping — so admission-ordering properties can be driven
+    through thousands of churn schedules without a single dispatch."""
+
+    def __init__(self, *, batch: int = 3, num_pages: int = 12,
+                 policy: str = "lru"):
+        # deliberately no super().__init__ — no model, no device state
+        self.paged = True
+        self.preempt_enabled = True
+        self.preempt_policy = policy
+        self.max_seq = MAX_SEQ
+        self.manager = BlockManager(num_pages, PAGE)
+        self.slots: list[Request | None] = [None] * batch
+        self.queue: "queue_mod.Queue[Request]" = queue_mod.Queue()
+        self._backlog: list[Request] = []
+        self._preempted: list[_Preempted] = []
+        self._reserved: dict[int, int] = {}
+        self._last_sched = [0] * batch
+        self._sched_counter = 0
+        self.events: list[tuple[str, int]] = []
+
+    # ----- fakes for the device-touching steps -----------------------------
+    def _admit(self, req: Request, slot: int) -> bool:
+        self._reserved[slot] = self._worst_pages(len(req.prompt),
+                                                 req.max_new_tokens)
+        plen = self._admit_plen(len(req.prompt), req.max_new_tokens)
+        self.manager.ensure(slot, plen)
+        self.manager.note_tokens(slot, plen)
+        req.pos = plen                               # host-side position
+        req.output.append(0)                         # admission token
+        self.slots[slot] = req
+        self._last_sched[slot] = self._sched_counter
+        self._sched_counter += 1
+        self.events.append(("admit", req.uid))
+        return False
+
+    def _preempt_slot(self, i: int, finished: list[Request]) -> None:
+        req = self.slots[i]
+        self._preempted.append(_Preempted(req=req, pos=req.pos,
+                                          handle=None, key=None))
+        self.manager.free_slot(i)
+        self._reserved.pop(i, None)
+        self.slots[i] = None
+        self.events.append(("preempt", req.uid))
+
+    def _resume(self, ps: _Preempted, slot: int,
+                finished: list[Request]) -> bool:
+        self._reserved[slot] = self._resume_worst(ps)
+        try:
+            self.manager.ensure(slot, ps.pos)
+        except MemoryError:
+            self._reserved.pop(slot, None)
+            return False
+        self.manager.note_tokens(slot, ps.pos)
+        self.slots[slot] = ps.req
+        self._last_sched[slot] = self._sched_counter
+        self._sched_counter += 1
+        self.events.append(("resume", ps.req.uid))
+        return True
+
+    # ----- churn driver -----------------------------------------------------
+    def decode_tick(self, finished: list[Request]) -> None:
+        """One decode block's worth of host bookkeeping: every live slot
+        emits a token (growing its pages on demand, as dispatch does)
+        and finished slots reclaim."""
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.pos += 1
+            req.output.append(0)
+            self.manager.ensure(i, min(req.pos, self.max_seq))
+            self.manager.note_tokens(i, min(req.pos, self.max_seq))
+            if len(req.output) >= req.max_new_tokens:
+                self.manager.free_slot(i)
+                self._reserved.pop(i, None)
+                self.slots[i] = None
+                finished.append(req)
+                self.events.append(("finish", req.uid))
+
+    def check_invariants(self) -> None:
+        self.manager.audit()
+        assert sum(self._reserved.values()) <= self.manager.capacity, \
+            (self._reserved, self.manager.capacity)
+        # every live slot's remaining lifetime is covered by its
+        # reservation (the no-mid-decode-exhaustion guarantee)
+        for i, req in enumerate(self.slots):
+            if req is not None:
+                assert len(self.manager.slot_pages(i)) <= self._reserved[i]
+
+
+def _run_churn(shapes: list[tuple[int, int]], schedule: list[int],
+               policy: str = "lru") -> _SchedHarness:
+    srv = _SchedHarness(policy=policy)
+    pending = [Request(uid=u, prompt=np.zeros(p, np.int32),
+                       max_new_tokens=m)
+               for u, (p, m) in enumerate(shapes)
+               if p + max(m - 1, 0) <= MAX_SEQ]
+    for r in pending:
+        r.pos = 0
+    todo = list(pending)
+    finished: list[Request] = []
+    for op in schedule:
+        if op == 0 and todo:
+            srv.queue.put(todo.pop(0))
+        else:
+            srv.decode_tick(finished)
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+    while todo:                               # drain: submit stragglers...
+        srv.queue.put(todo.pop(0))
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+    for _ in range(400):                      # ...then decode to done
+        if len(finished) == len(pending):
+            break
+        srv.decode_tick(finished)
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+    assert len(finished) == len(pending), (
+        f"starved: {len(finished)}/{len(pending)} finished, "
+        f"preempted={[(p.req.uid) for p in srv._preempted]}, "
+        f"backlog={[r.uid for r in srv._backlog]}, events={srv.events}")
+    return srv
+
+
+@given(shapes=st.lists(st.tuples(st.integers(1, 12), st.integers(2, 12)),
+                       min_size=3, max_size=10),
+       schedule=st.lists(st.integers(0, 1), min_size=10, max_size=80))
+@settings(max_examples=40, deadline=None)
+def test_admission_fifo_never_overtaken_by_preemption(shapes, schedule):
+    """Under arbitrary submit/decode interleavings with preemption on,
+    first-time admission stays strictly FIFO: pages freed by preempting
+    a victim admit the backlog HEAD, never a younger request — and no
+    request starves (every victim resumes and finishes)."""
+    srv = _run_churn(shapes, schedule)
+    first_admits = [uid for kind, uid in srv.events if kind == "admit"]
+    assert first_admits == sorted(first_admits), srv.events
+    assert len(set(first_admits)) == len(first_admits)
+    # a preempted uid always resumes (and may be preempted again, but
+    # its resume count keeps up: no victim is left swapped out)
+    assert not srv._preempted
+    for uid in {u for k, u in srv.events if k == "preempt"}:
+        kinds = [k for k, u in srv.events if u == uid]
+        assert kinds.count("resume") == kinds.count("preempt"), srv.events
+        assert kinds[-1] == "finish"
+
+
+@given(shapes=st.lists(st.tuples(st.integers(1, 12), st.integers(2, 12)),
+                       min_size=3, max_size=8),
+       schedule=st.lists(st.integers(0, 1), min_size=10, max_size=60),
+       policy=st.sampled_from(["fewest_pages", "lowest_progress"]))
+@settings(max_examples=15, deadline=None)
+def test_admission_ordering_holds_for_every_victim_policy(shapes, schedule,
+                                                          policy):
+    """The FIFO/no-starvation contract is policy-independent: victim
+    selection changes WHO pays for the head's admission, never who
+    admits next."""
+    srv = _run_churn(shapes, schedule, policy=policy)
+    first_admits = [uid for kind, uid in srv.events if kind == "admit"]
+    assert first_admits == sorted(first_admits), srv.events
+    assert not srv._preempted
+
+
+def test_resume_fifo_beats_backlog():
+    """A swapped-out victim is older than every queued request: when
+    pages free up, the victim resumes BEFORE the backlog head admits."""
+    srv = _SchedHarness()
+    finished: list[Request] = []
+    reqs = [Request(uid=u, prompt=np.zeros(4, np.int32), max_new_tokens=10)
+            for u in range(4)]
+    for r in reqs:
+        r.pos = 0
+        srv.queue.put(r)
+    srv._admit_from_queue(finished, allow_preempt=True)
+    assert [k for k, _ in srv.events].count("admit") >= 2
+    # force a preemption for the head, then finish a live slot: the
+    # resulting free pages must go to the victim first
+    while not any(k == "preempt" for k, _ in srv.events):
+        srv.decode_tick(finished)
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+        if len(finished) == len(reqs):
+            pytest.skip("pool large enough that nothing preempted")
+    victim = next(u for k, u in srv.events if k == "preempt")
+    for _ in range(400):
+        srv.decode_tick(finished)
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+        if len(finished) == len(reqs):
+            break
+    ev = srv.events
+    resume_at = ev.index(("resume", victim))
+    later_admits = [u for k, u in ev[resume_at:] if k == "admit"]
+    preempt_at = ev.index(("preempt", victim))
+    admits_between = [u for k, u in ev[preempt_at:resume_at] if k == "admit"]
+    # only the head the victim was preempted FOR may admit in between
+    assert len(admits_between) <= 1, ev
+    assert all(u > victim for u in admits_between + later_admits), ev
+    assert len(finished) == len(reqs)

@@ -1,0 +1,432 @@
+"""Serving chaos harness: page-granular preemption bit-identity, tier
+fault injection + recovery, the block-pool invariant auditor, and
+checkpoint/restart of in-flight serving state.
+
+Every scenario checks the robustness contract: a fault either recovers
+to BIT-IDENTICAL tokens (retried transfers, preemption/resume, injected
+pool exhaustion, kill-and-restore) or degrades exactly as documented
+(victim shed with a structured ``Request.error``, prefix sharing
+dropped under pressure, remote offload falling back to local
+residency) — and the allocator invariants hold after every scheduling
+step (``audit=True`` on every server here)."""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_config
+from repro.kernels.paged_attention.ops import (BlockManager,
+                                               BlockPoolAuditError)
+from repro.memory import MemoryOrchestrator, tiers
+from repro.memory.tiers import FaultPlan, TierTransferError, fault_plan
+from repro.runtime import ft
+from repro.runtime.serve import BatchedServer
+
+PAGE = 4
+MAX_SEQ = 64
+# pool sized so two 8-page worst-case requests fill it and the third
+# must preempt: capacity = 18 - 1 (null page) = 17 < 3 * 8
+SMALL_POOL = 18
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("qwen2.5-14b").reduced()
+    cfg = dataclasses.replace(cfg, remat=False, page_size=PAGE)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _server(tiny_model, **kw):
+    model, params = tiny_model
+    kw.setdefault("batch_size", 3)
+    kw.setdefault("max_seq", MAX_SEQ)
+    kw.setdefault("page_size", PAGE)
+    kw.setdefault("audit", True)
+    return BatchedServer(model, params, **kw)
+
+
+def _drive(server, reqs, max_rounds=50):
+    """run_once until every request completes (or is shed)."""
+    finished = []
+    for _ in range(max_rounds):
+        finished += server.run_once()
+        if all(r.done.is_set() for r in reqs):
+            return finished
+    raise AssertionError(
+        f"requests stuck after {max_rounds} rounds: "
+        f"{[(r.uid, r.done.is_set()) for r in reqs]}")
+
+
+def _submit_three(server):
+    return [server.submit(np.arange(1, 5, dtype=np.int32),
+                          max_new_tokens=24) for _ in range(3)]
+
+
+# ---------------------------------------------------------------------------
+# preemption bit-identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("temp", [0.0, 0.7])
+def test_preempted_run_bit_identical(tiny_model, temp):
+    """Oversubscribed pool: the third request preempts a victim; the
+    victim resumes; every token must match the uncontended run."""
+    ref_srv = _server(tiny_model, temperature=temp)
+    ref = _submit_three(ref_srv)
+    _drive(ref_srv, ref)
+    assert ref_srv.stats["preemptions"] == 0
+
+    srv = _server(tiny_model, temperature=temp, num_pages=SMALL_POOL)
+    got = _submit_three(srv)
+    _drive(srv, got)
+    assert srv.stats["preemptions"] >= 1
+    assert srv.stats["resumes"] >= 1
+    assert srv.stats["sheds"] == 0
+    assert srv.stats["audits"] > 0
+    for a, b in zip(ref, got):
+        assert a.output == b.output, (temp, a.uid, a.output, b.output)
+        assert b.error is None
+
+
+@pytest.mark.parametrize("policy", ["fewest_pages", "lowest_progress"])
+def test_preemption_policy_seam(tiny_model, policy):
+    ref_srv = _server(tiny_model, temperature=0.7)
+    ref = _submit_three(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(tiny_model, temperature=0.7, num_pages=SMALL_POOL,
+                  preempt_policy=policy)
+    got = _submit_three(srv)
+    _drive(srv, got)
+    assert srv.stats["preemptions"] >= 1
+    assert [r.output for r in ref] == [r.output for r in got]
+
+
+def test_preemption_with_prefix_sharing_bit_identical(tiny_model):
+    """Prefix-shared admissions + preemption: shared pages are stashed
+    and restored private, sharing is dropped under pressure — tokens
+    must not notice either."""
+    sys_toks = np.arange(3, 15, dtype=np.int32)        # 3 whole pages
+
+    def submit_all(server):
+        return [server.submit(
+            np.concatenate([sys_toks, np.asarray([50 + i, 60 + i],
+                                                 np.int32)]),
+            max_new_tokens=16) for i in range(3)]
+
+    ref_srv = _server(tiny_model, temperature=0.7, prefix_cache=True)
+    ref = submit_all(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(tiny_model, temperature=0.7, prefix_cache=True,
+                  num_pages=SMALL_POOL)
+    got = submit_all(srv)
+    _drive(srv, got)
+    assert srv.stats["preemptions"] >= 1
+    assert [r.output for r in ref] == [r.output for r in got]
+
+
+def test_disabled_preemption_still_completes_fifo(tiny_model):
+    """preempt=False keeps the old waiting behaviour (and the same
+    tokens): the blocked request admits only after reclamation."""
+    srv = _server(tiny_model, num_pages=SMALL_POOL, preempt=False)
+    reqs = _submit_three(srv)
+    _drive(srv, reqs)
+    assert srv.stats["preemptions"] == 0
+    ref_srv = _server(tiny_model)
+    ref = _submit_three(ref_srv)
+    _drive(ref_srv, ref)
+    assert [r.output for r in ref] == [r.output for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# fault injection: transfer failures, spikes, pool exhaustion
+# ---------------------------------------------------------------------------
+
+def test_transfer_faults_retried_to_identical_tokens(tiny_model):
+    ref_srv = _server(tiny_model, temperature=0.7)
+    ref = _submit_three(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(tiny_model, temperature=0.7, num_pages=SMALL_POOL)
+    got = _submit_three(srv)
+    with fault_plan(FaultPlan(fail_first_n=2)):    # swap-out fails twice
+        _drive(srv, got)
+    assert srv.stats["preemptions"] >= 1
+    assert srv.stats["swap_retries"] >= 2          # both failures retried
+    assert srv.stats["sheds"] == 0
+    assert [r.output for r in ref] == [r.output for r in got]
+
+
+def test_unrecoverable_swap_fault_sheds_victim_with_structured_error(
+        tiny_model):
+    srv = _server(tiny_model, num_pages=SMALL_POOL, swap_retries=1)
+    reqs = _submit_three(srv)
+    with fault_plan(FaultPlan(fail_rate=1.0, seed=7)):
+        _drive(srv, reqs)
+    shed = [r for r in reqs if r.error is not None]
+    assert len(shed) == 1, [r.error for r in reqs]
+    err = shed[0].error
+    assert err["reason"] == "preempt_swap_failed"
+    assert "attempts" in err["detail"]
+    assert err["uid"] == shed[0].uid
+    assert shed[0].done.is_set()
+    assert srv.stats["sheds"] == 1
+    for r in reqs:
+        if r.error is None:
+            assert len(r.output) == 24     # survivors fully served
+    # the server survived: it serves new work after the fault clears
+    extra = srv.submit(np.asarray([7, 8], np.int32), max_new_tokens=4)
+    _drive(srv, [extra])
+    assert len(extra.output) == 4 and extra.error is None
+
+
+def test_latency_spikes_flag_slow_transfers():
+    """The serving StragglerMonitor is reused for tier transfers: a
+    spiked transfer lands >> 3x the median and is flagged."""
+    mon = ft.StragglerMonitor(factor=3.0)
+    payload = np.zeros(1024, np.uint8)
+    for _ in range(6):
+        tiers.transfer_with_retry(lambda: time.sleep(0.002),
+                                  what="warm", nbytes=payload.nbytes,
+                                  monitor=mon)
+    assert mon.flags == 0
+    with fault_plan(FaultPlan(spike_first_n=1, spike_s=0.1)):
+        tiers.transfer_with_retry(lambda: time.sleep(0.002),
+                                  what="spiked", nbytes=payload.nbytes,
+                                  monitor=mon)
+    assert mon.flags == 1
+
+
+def test_server_wires_monitor_into_swapper(tiny_model):
+    srv = _server(tiny_model, num_pages=SMALL_POOL)
+    assert srv.swapper.monitor is srv.transfer_monitor
+
+
+def test_pool_exhaustion_mid_decode_recovers_bit_identical(tiny_model):
+    """Injected mid-decode exhaustion: a dispatch's page growth fails,
+    the fault latches, emergency preemption frees a victim, decode
+    proceeds, the victim resumes — tokens match the fault-free run."""
+    def submit_two(server):
+        return [server.submit(np.arange(1, 5, dtype=np.int32),
+                              max_new_tokens=24) for _ in range(2)]
+
+    ref_srv = _server(tiny_model, temperature=0.7, batch_size=2)
+    ref = submit_two(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(tiny_model, temperature=0.7, batch_size=2,
+                  num_pages=SMALL_POOL)
+    got = submit_two(srv)
+    with fault_plan(FaultPlan(exhaust_at_block=1, exhaust_blocks=2)):
+        _drive(srv, got)
+    assert srv.stats["pool_faults"] == 1
+    assert srv.stats["preemptions"] >= 1       # emergency preemption
+    assert srv.stats["resumes"] >= 1
+    assert srv.stats["sheds"] == 0
+    assert [r.output for r in ref] == [r.output for r in got]
+
+
+def test_pool_exhaustion_with_single_sequence_sheds(tiny_model):
+    """Degradation floor: exhaustion with nothing to preempt FOR the
+    blocked slot sheds it with a structured error, not a crash."""
+    srv = _server(tiny_model, batch_size=1, num_pages=SMALL_POOL)
+    req = srv.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=24)
+    with fault_plan(FaultPlan(exhaust_at_block=1, exhaust_blocks=64)):
+        _drive(srv, [req])
+    assert req.error is not None and req.error["reason"] == "pool_exhausted"
+    assert req.error["tokens_emitted"] == len(req.output)
+    assert srv.stats["sheds"] == 1
+    # server alive after the fault window
+    extra = srv.submit(np.asarray([7, 8], np.int32), max_new_tokens=4)
+    _drive(srv, [extra])
+    assert extra.error is None and len(extra.output) == 4
+
+
+def test_offload_fault_degrades_to_local_residency():
+    """Unrecoverable remote-tier fault while placing the KV pool: the
+    orchestrator falls back to local residency (documented degradation)
+    and records it, instead of failing placement."""
+    cfg = get_config("qwen2.5-14b").reduced().with_pager(
+        enabled=True, offload_kv=True)
+    m = MemoryOrchestrator.plan(cfg)
+    assert type(m.policies["kv_pool"]).__name__ == "OffloadBetweenSteps"
+    cache = {"k_pages": np.zeros((4, 2, 2, 2), np.float32),
+             "v_pages": np.zeros((4, 2, 2, 2), np.float32)}
+    with fault_plan(FaultPlan(fail_first_n=8)):
+        placed = m.place_kv_pool(cache)
+    assert "kv_pool" in m.degraded
+    assert type(m.policies["kv_pool"]).__name__ == "PinLocal"
+    assert m.config.offload_kv is False
+    assert "degraded" in m.describe()
+    np.testing.assert_array_equal(np.asarray(placed["k_pages"]),
+                                  cache["k_pages"])
+    # subsequent placements go local without touching the faulty tier
+    with fault_plan(FaultPlan(fail_rate=1.0)):
+        m.place_kv_pool(cache)
+
+
+# ---------------------------------------------------------------------------
+# invariant auditor
+# ---------------------------------------------------------------------------
+
+def _manager_with_slots() -> BlockManager:
+    m = BlockManager(num_pages=10, page_size=4)
+    m.ensure(0, 8)
+    m.ensure(1, 12)
+    m.note_tokens(0, 7)
+    m.note_tokens(1, 9)
+    return m
+
+
+def test_audit_clean_on_healthy_manager():
+    m = _manager_with_slots()
+    out = m.audit()
+    assert out["pages_in_use"] == 5
+    assert out["free_pages"] == 4
+
+
+@pytest.mark.parametrize("corrupt,needle", [
+    (lambda m: m._free.append(m._free[0]), "duplicates"),
+    (lambda m: m._free.append(m.pages[0][0]), "both free and owned"),
+    (lambda m: m.refcount.__setitem__(m.pages[1][0], 2), "refcount"),
+    (lambda m: m.pages[0].append(m.pages[0][0]), "twice"),
+    (lambda m: m.pages[0].append(0), "null page"),
+    (lambda m: m.lens.__setitem__(0, 99), "covers only"),
+    (lambda m: setattr(m, "hwm", 0), "hwm"),
+])
+def test_audit_detects_corruption(corrupt, needle):
+    m = _manager_with_slots()
+    corrupt(m)
+    with pytest.raises(BlockPoolAuditError, match=needle):
+        m.audit()
+
+
+def test_audit_cross_checks_ledger_residency(tiny_model):
+    srv = _server(tiny_model)
+    req = srv.submit(np.asarray([1, 2, 3], np.int32), max_new_tokens=4)
+    _drive(srv, [req])
+    srv.kv.audit()                                  # clean
+    srv.kv.ledger.record(srv.kv.tier, srv.kv.tensor_class, 1 << 40)
+    with pytest.raises(BlockPoolAuditError, match="ledger"):
+        srv.kv.audit()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/restart of in-flight serving state
+# ---------------------------------------------------------------------------
+
+def test_kill_and_restore_resumes_bit_identical(tiny_model, tmp_path):
+    """Snapshot a server mid-decode, "kill" it, restore into a fresh
+    server (disk round trip included): every sequence finishes with the
+    tokens the uninterrupted run produced."""
+    model, params = tiny_model
+    ref_srv = _server(tiny_model, temperature=0.7, num_pages=SMALL_POOL)
+    ref = _submit_three(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(tiny_model, temperature=0.7, num_pages=SMALL_POOL)
+    reqs = _submit_three(srv)
+    early = srv.run_once(max_blocks=1)          # partial progress only
+    snap = ft.snapshot_server(srv)
+    path = ft.save_server_snapshot(tmp_path / "serve_ckpt", snap)
+    del srv                                      # the "crash"
+
+    srv2 = _server(tiny_model, temperature=0.7, num_pages=SMALL_POOL)
+    ft.restore_server(srv2, ft.load_server_snapshot(path))
+    finished = list(early)
+    for _ in range(50):
+        finished += srv2.run_once()
+        if len(finished) == 3:
+            break
+    by_uid = {r.uid: r for r in finished}
+    assert len(by_uid) == 3
+    for a in ref:
+        b = by_uid[a.uid]
+        assert a.output == b.output, (a.uid, a.output, b.output)
+        assert b.error is None
+    assert srv2.stats["resumes"] >= 1
+
+
+def test_restore_rejects_seed_mismatch(tiny_model):
+    srv = _server(tiny_model, num_pages=SMALL_POOL)
+    srv.submit(np.asarray([1, 2], np.int32), max_new_tokens=4)
+    snap = srv.snapshot()
+    other = _server(tiny_model, num_pages=SMALL_POOL, seed=1)
+    with pytest.raises(ValueError, match="seed"):
+        other.restore(snap)
+
+
+SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import dataclasses
+import jax, numpy as np
+from repro.configs import get_config, build_model
+from repro.launch.mesh import make_serving_mesh
+from repro.runtime.serve import BatchedServer
+
+cfg = get_config("qwen2.5-14b").reduced()
+cfg = dataclasses.replace(cfg, remat=False, page_size=4)
+params = build_model(cfg).init(jax.random.PRNGKey(0))
+mesh = make_serving_mesh(model=2)
+
+def serve(num_pages):
+    srv = BatchedServer(build_model(cfg), params, batch_size=3, max_seq=64,
+                        page_size=4, num_pages=num_pages, temperature=0.7,
+                        paged=True, mesh=mesh, audit=True)
+    reqs = [srv.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=24)
+            for _ in range(3)]
+    for _ in range(50):
+        srv.run_once()
+        if all(r.done.is_set() for r in reqs):
+            break
+    return [tuple(r.output) for r in reqs], srv
+
+ref, _ = serve(None)                       # uncontended
+got, srv = serve(18)                       # oversubscribed -> preemption
+assert srv.stats["model_shards"] == 2
+assert srv.stats["preemptions"] >= 1, srv.stats
+assert srv.stats["resumes"] >= 1, srv.stats
+assert srv.stats["sheds"] == 0, srv.stats
+assert got == ref, f"sharded preemption diverged:\n  {ref}\n  {got}"
+print("SHARDED_PREEMPT_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_preemption_bit_identical():
+    """Preempt/swap/resume must round-trip a model-sharded block pool
+    (the swap gather/scatter crosses the "model" axis) without changing
+    a single token."""
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT, src],
+                         capture_output=True, text=True, timeout=600,
+                         env=env)
+    assert "SHARDED_PREEMPT_OK" in out.stdout, \
+        out.stdout[-1500:] + out.stderr[-3000:]
+
+
+def test_swapper_ledger_accounts_stash_bytes(tiny_model):
+    """Preempted KV bytes show up in the remote tier under kv_swap while
+    stashed, and drain on resume."""
+    srv = _server(tiny_model, num_pages=SMALL_POOL)
+    reqs = _submit_three(srv)
+    _drive(srv, reqs)
+    assert srv.stats["preemptions"] >= 1
+    led = srv.mem.ledger
+    remote = tiers.REMOTE
+    assert led.classes(remote).get("kv_swap", 0) == 0   # drained
+    assert led.hwm(remote) > 0                          # but it peaked

@@ -1,6 +1,6 @@
 """repro.memory subsystem: tier registry scoping/reset, the orchestrator's
 policy matrix, accounting parity between the live ledger and the Table 4.3
-simulator, expert-paging residency/churn, and the core.pager shim."""
+simulator, and expert-paging residency/churn."""
 import dataclasses
 import random
 
@@ -11,7 +11,6 @@ import pytest
 
 from repro import memory
 from repro.configs import build_model, get_config
-from repro.core import pager as pager_shim
 from repro.core import simulator as S
 from repro.core.graphs import Node
 from repro.memory import (MemoryLedger, MemoryOrchestrator, TopKExpertPrefetch,
@@ -298,20 +297,17 @@ def test_moe_server_expert_paging_matches_dense(temperature, enabled):
 
 
 # ---------------------------------------------------------------------------
-# core.pager shim
+# repro.memory is the one import surface (the core.pager shim is gone)
 # ---------------------------------------------------------------------------
 
-def test_pager_shim_reexports():
-    assert pager_shim.paged_scan is memory.paged_scan
-    assert pager_shim.donating_jit is memory.donating_jit
-    assert pager_shim.tree_bytes is memory.tree_bytes
-    assert pager_shim.host_put is tiers.host_put
-    assert pager_shim.PagerConfig is PagerConfig
-
-    cache = {"k_pages": jnp.zeros((2, 3, 4)), "lens": jnp.zeros((2,))}
-    same = pager_shim.place_kv_pool(cache, PagerConfig())
-    assert same["k_pages"] is cache["k_pages"]
-    off = pager_shim.place_kv_pool(
-        cache, PagerConfig(enabled=True, offload_kv=True))
-    np.testing.assert_array_equal(np.asarray(off["k_pages"]),
-                                  np.asarray(cache["k_pages"]))
+def test_memory_exports_the_pager_surface():
+    with pytest.raises(ImportError):
+        from repro.core import pager  # noqa: F401 - removed after one release
+    for name in ("paged_scan", "paged_scan_cache", "donating_jit",
+                 "tree_bytes", "host_put", "page_in", "page_out",
+                 "supports_memory_spaces", "resident_window_bytes",
+                 "PagerConfig", "PageSwapper", "FaultPlan",
+                 "transfer_with_retry"):
+        assert hasattr(memory, name), name
+    assert memory.host_put is tiers.host_put
+    assert memory.PagerConfig is PagerConfig

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import pager
+from repro import memory as pager
 
 
 @pytest.fixture(scope="module")

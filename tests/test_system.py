@@ -10,8 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import memory
 from repro.configs import get_config, build_model
-from repro.core import pager
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.runtime import optim
 from repro.runtime.ft import FTConfig, FaultTolerantLoop
@@ -59,7 +59,7 @@ def test_paged_model_matches_unpaged():
     paged_model = build_model(paged_cfg)
     # move the stacked layers to the remote tier
     params_paged = dict(params)
-    params_paged["layers"] = pager.host_put(params["layers"])
+    params_paged["layers"] = memory.host_put(params["layers"])
     got = jax.jit(paged_model.forward)(params_paged, tokens)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                atol=1e-5, rtol=1e-5)
