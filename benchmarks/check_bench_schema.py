@@ -12,6 +12,14 @@ gates the headline numbers so they cannot silently rot:
 
 * ``server_paged`` tokens/s must stay >= 0.95x ``server_dense``;
 * ``bytes_per_active_token_paged`` must not exceed the dense value;
+* the quantized pools must earn their keep: each ``kv_quant`` dtype's
+  effective bytes per active token (dequant scales INCLUDED) must be
+  <= 0.55x the bf16 pool, ``server_paged_q8`` tokens/s must stay
+  >= 0.9x ``server_paged``, and the accuracy record (greedy token
+  agreement, one-step max |Δlogit|) must stay inside its envelope;
+* every reported tier with a provisioned capacity must satisfy
+  ``hwm_bytes <= capacity_bytes`` (residency never exceeded what the
+  ledger says was provisioned) — including the per-shard snapshot;
 * the prefix-cache row must show a real residency reduction with
   bit-identical tokens;
 * the ``server_sharded`` row must be token-identical to single-device,
@@ -34,12 +42,13 @@ from pathlib import Path
 TOP_KEYS = {
     "model", "batch", "prompt", "new_tokens", "block_size", "max_seq",
     "tokens_per_s", "speedup_block_vs_per_token",
-    "paged_vs_dense_tokens_identical", "kv_memory", "pipeline",
-    "prefix_cache", "sharded", "preemption", "tiers", "tiers_peak",
-    "attention_scaling",
+    "paged_vs_dense_tokens_identical", "kv_memory", "kv_quant",
+    "pipeline", "prefix_cache", "sharded", "preemption", "tiers",
+    "tiers_peak", "attention_scaling",
 }
 TOKENS_PER_S_KEYS = {"per_token_dense", "block_dense", "server_dense",
-                     "server_paged"}
+                     "server_paged", "server_paged_q8",
+                     "server_paged_fp8"}
 KV_MEMORY_KEYS = {
     "page_size", "dense_slab_bytes", "paged_pool_capacity_bytes",
     "paged_hwm_bytes", "peak_live_tokens", "bytes_per_active_token_dense",
@@ -60,6 +69,14 @@ SHARDED_KEYS = {
     "tokens_identical_to_single_device",
     "collective_bytes_per_step_by_axis",
     "collective_bytes_per_token_by_axis", "tiers_peak_per_shard",
+    "row_parallel",
+}
+KV_QUANT_DTYPES = ("int8", "fp8_e4m3")
+KV_QUANT_DTYPE_KEYS = {
+    "tokens_per_s", "pool_capacity_bytes", "kv_hwm_bytes",
+    "bytes_per_active_token", "bytes_ratio_vs_bf16",
+    "capacity_gain_vs_bf16", "greedy_match_rate_vs_bf16",
+    "greedy_match_rate_first8", "max_abs_logit_err",
 }
 PREEMPTION_KEYS = {
     "policy", "num_pages", "page_size", "hogs", "shorts",
@@ -74,6 +91,19 @@ TIER_KEYS = {"in_use_bytes", "hwm_bytes", "capacity_bytes", "by_class"}
 # server_paged may not drop below this fraction of server_dense (the
 # tentpole claim; headroom for CI timing noise)
 PAGED_VS_DENSE_FLOOR = 0.95
+# quantized pool gates: true bytes (scales included) must at least
+# halve-ish the bf16 pool, and the fused-dequant read path may not give
+# the throughput back
+KV_QUANT_BYTES_CEIL = 0.55
+Q8_VS_PAGED_FLOOR = 0.9
+# accuracy envelope for the quantized-vs-bf16 comparison.  Greedy
+# decoding cascades — one flipped argmax rewrites the rest of the
+# sequence — so the GATE sits on the first-8-token agreement (the
+# stable KV-fidelity readout) plus the one-step max |Δlogit|; the
+# full-horizon rate is recorded but not thresholded (on the random
+# -weight smoke model it mostly measures when the first flip happened)
+KV_QUANT_MATCH_FLOOR = 0.75
+KV_QUANT_LOGIT_CEIL = 1.0
 
 
 def check(path: Path, *, require_sharded: bool = False) -> list[str]:
@@ -101,30 +131,101 @@ def check(path: Path, *, require_sharded: bool = False) -> list[str]:
         errors.append(f"missing prefix_cache keys: {sorted(px_missing)}")
 
     for block in ("tiers", "tiers_peak"):
-        tiers = bench.get(block, {})
-        if not isinstance(tiers, dict) or not tiers:
-            errors.append(f"{block} must be a non-empty per-tier mapping")
-        for name, t in (tiers.items() if isinstance(tiers, dict) else ()):
-            tk_missing = TIER_KEYS - (t.keys() if isinstance(t, dict)
-                                      else set())
-            if tk_missing:
-                errors.append(
-                    f"{block} tier '{name}' missing {sorted(tk_missing)}")
-            elif not isinstance(t["by_class"], dict):
-                errors.append(f"{block} tier '{name}' by_class must be a "
-                              f"mapping")
-            else:
-                for field in ("in_use_bytes", "hwm_bytes", "capacity_bytes"):
-                    if not isinstance(t[field], int) or t[field] < 0:
-                        errors.append(
-                            f"{block} tier '{name}' {field} must be a "
-                            f"non-negative int, got {t[field]!r}")
-        if isinstance(tiers, dict) and "local" not in tiers:
-            errors.append(f"{block} must include the 'local' tier")
+        errors.extend(_check_tier_block(block, bench.get(block, {})))
     errors.extend(_check_peak_snapshot(bench))
+    errors.extend(_check_kv_quant(bench))
     errors.extend(_check_sharded(bench, require_multi=require_sharded))
     errors.extend(_check_preemption(bench))
     errors.extend(_check_regressions(bench))
+    return errors
+
+
+def _check_tier_block(block: str, tiers) -> list[str]:
+    """One per-tier residency mapping: key shape, non-negative byte
+    counters, and the ledger invariant ``hwm_bytes <= capacity_bytes``
+    for every tier that declares a provisioned capacity (a tier whose
+    high-water mark exceeds what was provisioned means some placement
+    registered residency without registering capacity)."""
+    errors: list[str] = []
+    if not isinstance(tiers, dict) or not tiers:
+        errors.append(f"{block} must be a non-empty per-tier mapping")
+    for name, t in (tiers.items() if isinstance(tiers, dict) else ()):
+        tk_missing = TIER_KEYS - (t.keys() if isinstance(t, dict)
+                                  else set())
+        if tk_missing:
+            errors.append(
+                f"{block} tier '{name}' missing {sorted(tk_missing)}")
+        elif not isinstance(t["by_class"], dict):
+            errors.append(f"{block} tier '{name}' by_class must be a "
+                          f"mapping")
+        else:
+            for field in ("in_use_bytes", "hwm_bytes", "capacity_bytes"):
+                if not isinstance(t[field], int) or t[field] < 0:
+                    errors.append(
+                        f"{block} tier '{name}' {field} must be a "
+                        f"non-negative int, got {t[field]!r}")
+                    break
+            else:
+                if t["capacity_bytes"] > 0 and \
+                        t["hwm_bytes"] > t["capacity_bytes"]:
+                    errors.append(
+                        f"{block} tier '{name}' hwm_bytes "
+                        f"({t['hwm_bytes']}) exceeds capacity_bytes "
+                        f"({t['capacity_bytes']}): some placement "
+                        f"records residency without capacity")
+    if isinstance(tiers, dict) and "local" not in tiers:
+        errors.append(f"{block} must include the 'local' tier")
+    return errors
+
+
+def _check_kv_quant(bench: dict) -> list[str]:
+    """The quantized-pool record: both dtypes present with the full
+    per-dtype schema, true-bytes ratio (scales included) at or under
+    the 0.55x ceiling, q8 throughput at or above 0.9x the bf16 paged
+    row, and the accuracy envelope respected."""
+    kq = bench.get("kv_quant")
+    if not isinstance(kq, dict):
+        return ["kv_quant must be a mapping (the quantized-pool record)"]
+    errors: list[str] = []
+    bf16 = kq.get("bytes_per_active_token_bf16")
+    if not isinstance(bf16, int) or bf16 <= 0:
+        errors.append(f"kv_quant bytes_per_active_token_bf16 must be a "
+                      f"positive int, got {bf16!r}")
+    for kd in KV_QUANT_DTYPES:
+        d = kq.get(kd)
+        if not isinstance(d, dict):
+            errors.append(f"kv_quant must contain a '{kd}' mapping")
+            continue
+        missing = KV_QUANT_DTYPE_KEYS - d.keys()
+        if missing:
+            errors.append(f"kv_quant.{kd} missing {sorted(missing)}")
+            continue
+        ratio = d["bytes_ratio_vs_bf16"]
+        if not isinstance(ratio, (int, float)) or \
+                ratio > KV_QUANT_BYTES_CEIL:
+            errors.append(
+                f"kv_quant.{kd} bytes_ratio_vs_bf16 ({ratio!r}) exceeds "
+                f"{KV_QUANT_BYTES_CEIL} (scales ate the capacity win)")
+        match = d["greedy_match_rate_first8"]
+        if not isinstance(match, (int, float)) or \
+                match < KV_QUANT_MATCH_FLOOR:
+            errors.append(
+                f"kv_quant.{kd} greedy_match_rate_first8 ({match!r}) "
+                f"below {KV_QUANT_MATCH_FLOOR}: quantized decodes "
+                f"diverged from bf16 immediately")
+        err = d["max_abs_logit_err"]
+        if not isinstance(err, (int, float)) or err > KV_QUANT_LOGIT_CEIL:
+            errors.append(
+                f"kv_quant.{kd} max_abs_logit_err ({err!r}) exceeds "
+                f"{KV_QUANT_LOGIT_CEIL}")
+    tps = bench.get("tokens_per_s", {})
+    q8, paged = tps.get("server_paged_q8"), tps.get("server_paged")
+    if isinstance(q8, (int, float)) and isinstance(paged, (int, float)) \
+            and paged > 0 and q8 < Q8_VS_PAGED_FLOOR * paged:
+        errors.append(
+            f"server_paged_q8 ({q8} tok/s) dropped below "
+            f"{Q8_VS_PAGED_FLOOR}x server_paged ({paged} tok/s): fused "
+            f"dequant gave the throughput back")
     return errors
 
 
@@ -187,6 +288,28 @@ def _check_sharded(bench: dict, *, require_multi: bool = False) -> list[str]:
     tiers = sh.get("tiers_peak_per_shard")
     if not isinstance(tiers, dict) or "local" not in tiers:
         errors.append("sharded tiers_peak_per_shard must include 'local'")
+    else:
+        errors.extend(_check_tier_block("sharded.tiers_peak_per_shard",
+                                        tiers))
+    rp = sh.get("row_parallel")
+    if not isinstance(rp, dict):
+        errors.append("sharded row_parallel must be a mapping (the "
+                      "deterministic=False Megatron placement row)")
+    else:
+        if rp.get("deterministic") is not False:
+            errors.append("sharded row_parallel.deterministic must be "
+                          "false (that is the point of the row)")
+        if not isinstance(rp.get("collective_bytes_per_token_by_axis"),
+                          dict):
+            errors.append("sharded row_parallel must record "
+                          "collective_bytes_per_token_by_axis")
+        elif shards >= 2 and \
+                rp["collective_bytes_per_token_by_axis"] \
+                .get("model", 0) <= 0:
+            errors.append(
+                f"row_parallel run with {shards} model shards shows no "
+                f"model-axis collective bytes: the partial-sum "
+                f"all-reduce is missing from the decode executable")
     if shards >= 2:
         per_tok = sh.get("collective_bytes_per_token_by_axis", {})
         if not isinstance(per_tok, dict) or \

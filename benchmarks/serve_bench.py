@@ -24,6 +24,7 @@ count for CI smoke runs.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
@@ -158,12 +159,13 @@ def _measure_rounds(servers: list, submit_all) -> tuple[list[float], list]:
 
 
 def _serve_requests(cfg, params):
-    """Serve BATCH identical-shape requests through a dense-slab and a
-    block-pool server; returns (dt_dense, dt_paged, out_dense, out_paged,
-    server_dense, server_paged).  Each server gets a FRESH model: a
-    server reports through its model's orchestrator ledger, and two live
-    servers on one model would share (and overwrite) one kv_pool
-    residency class."""
+    """Serve BATCH identical-shape requests through four interleaved
+    servers: dense slab, bf16 block pool, and the int8 / fp8 quantized
+    page pools (same requests, same params — kv_dtype only changes the
+    pool storage).  Returns ``(dts, outs, servers)`` in that order.
+    Each server gets a FRESH model: a server reports through its model's
+    orchestrator ledger, and two live servers on one model would share
+    (and overwrite) one kv_pool residency class."""
     def submit_all(server):
         rng = np.random.RandomState(5)
         return [server.submit(rng.randint(0, cfg.vocab, PROMPT)
@@ -171,13 +173,97 @@ def _serve_requests(cfg, params):
                               max_new_tokens=NEW_TOKENS)
                 for _ in range(BATCH)]
 
-    dense, paged = (BatchedServer(build_model(cfg), params,
-                                  batch_size=BATCH, max_seq=MAX_SEQ,
-                                  block_size=BLOCK, paged=p)
-                    for p in (False, True))
-    (dt_d, dt_p), (out_d, out_p) = _measure_rounds([dense, paged],
-                                                   submit_all)
-    return dt_d, dt_p, out_d, out_p, dense, paged
+    cfgs = [cfg, cfg,
+            dataclasses.replace(cfg, kv_dtype="int8"),
+            dataclasses.replace(cfg, kv_dtype="fp8_e4m3")]
+    servers = [BatchedServer(build_model(c), params, batch_size=BATCH,
+                             max_seq=MAX_SEQ, block_size=BLOCK, paged=p)
+               for c, p in zip(cfgs, (False, True, True, True))]
+    dts, outs = _measure_rounds(servers, submit_all)
+    return dts, outs, servers
+
+
+def _kv_logit_err(cfg, params, prompts) -> dict:
+    """Max |Δlogit| of ONE decode step reading a quantized pool vs the
+    bf16 pool.  Prefill attends the full-precision activations on the
+    fly (its logits are bit-identical across kv dtypes) and the fed
+    token comes from the bf16 argmax, so the difference isolates exactly
+    the KV-pool quantization error seen by decode."""
+    page = cfg.page_size
+    n = -(-(PROMPT + 1) // page)
+    pages = jnp.asarray(
+        1 + np.arange(BATCH * n, dtype=np.int32).reshape(BATCH, n))
+    pos = jnp.full((BATCH,), PROMPT, jnp.int32)
+
+    def step_logits(c):
+        m = build_model(c)
+        cache = m.init_paged_cache(1 + BATCH * n)
+        logits, cache = jax.jit(m.prefill_paged)(params, prompts, cache,
+                                                 pages)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        out, _ = jax.jit(m.decode_step)(params, cur, cache, pos, None,
+                                        pages)
+        return np.asarray(out, np.float32)
+
+    ref = step_logits(cfg)
+    return {kd: float(np.max(np.abs(
+                step_logits(dataclasses.replace(cfg, kv_dtype=kd)) - ref)))
+            for kd in ("int8", "fp8_e4m3")}
+
+
+def _greedy_match_rate(out_q, out_ref, horizon: int | None = None) -> float:
+    """Position-wise token agreement between a quantized server's greedy
+    outputs and the bf16 paged reference (same requests, same budgets).
+    ``horizon`` restricts the comparison to each request's first N
+    tokens: greedy decoding cascades (one flipped argmax rewrites the
+    rest of the sequence), so the short-horizon rate is the stable
+    readout of KV fidelity while the full-horizon rate mostly measures
+    how early the first flip happened."""
+    total = same = 0
+    for rq, rr in zip(out_q, out_ref):
+        for tq, tr in zip(rq[:horizon], rr[:horizon]):
+            total += 1
+            same += int(tq == tr)
+    return same / max(total, 1)
+
+
+def _kv_quant_block(cfg, params, prompts, servers, dts, outs,
+                    peak_tokens) -> dict:
+    """Machine-readable KV-precision record: per-dtype effective bytes
+    per active token (scales INCLUDED — true bytes, Table-4.3
+    comparable), throughput vs the interleaved bf16 paged row, greedy
+    token agreement, and the one-step max |Δlogit|."""
+    srv_paged, srv_q8, srv_fp8 = servers[1:]
+    dt_paged, dt_q8, dt_fp8 = dts[1:]
+    out_paged, out_q8, out_fp8 = outs[1:]
+    total = BATCH * NEW_TOKENS
+    err = _kv_logit_err(cfg, params, prompts)
+
+    def per_page(srv):
+        return srv.kv_bytes_capacity() // srv.num_pages
+
+    bpt_bf16 = srv_paged.manager.hwm * per_page(srv_paged) / peak_tokens
+    block = {"bytes_per_active_token_bf16": round(bpt_bf16)}
+    for kd, srv, dt, out in (("int8", srv_q8, dt_q8, out_q8),
+                             ("fp8_e4m3", srv_fp8, dt_fp8, out_fp8)):
+        hwm_bytes = srv.manager.hwm * per_page(srv)
+        bpt = hwm_bytes / peak_tokens
+        block[kd] = {
+            "tokens_per_s": round(total / dt, 1),
+            "pool_capacity_bytes": srv.kv_bytes_capacity(),
+            "kv_hwm_bytes": hwm_bytes,
+            "bytes_per_active_token": round(bpt),
+            "bytes_ratio_vs_bf16": round(bpt / bpt_bf16, 4),
+            # same pool budget holds 1/ratio times the tokens — the
+            # "doubling effective pool capacity" headline
+            "capacity_gain_vs_bf16": round(bpt_bf16 / bpt, 2),
+            "greedy_match_rate_vs_bf16": round(
+                _greedy_match_rate(out, out_paged), 4),
+            "greedy_match_rate_first8": round(
+                _greedy_match_rate(out, out_paged, horizon=8), 4),
+            "max_abs_logit_err": round(err[kd], 5),
+        }
+    return block
 
 
 def _serve_prefix(cfg, params):
@@ -264,6 +350,23 @@ def _serve_sharded(cfg, params, out_paged) -> dict:
                                      None).compile().as_text()
     per_step = collective_bytes_by_axis(hlo, mesh)
     total = BATCH * NEW_TOKENS
+
+    # opt-in Megatron row-parallel placement (deterministic=False): wo
+    # stays contraction-sharded and the per-layer all-gather becomes a
+    # partial-sum all-reduce.  Tokens may drift from the all-gather row
+    # once shards >= 2 (reduction-order ambiguity in bf16), so identity
+    # is recorded, not asserted; the collective-bytes row lands next to
+    # the all-gather one for a like-for-like wire-traffic comparison.
+    srv_rp = BatchedServer(build_model(cfg), params, batch_size=BATCH,
+                           max_seq=MAX_SEQ, block_size=BLOCK, paged=True,
+                           mesh=mesh, deterministic=False)
+    (dt_rp,), (out_rp,) = _measure_rounds([srv_rp], submit_all)
+    with srv_rp._mesh_ctx():
+        hlo_rp = srv_rp._decode_loop.lower(
+            srv_rp.params, srv_rp.cache, srv_rp.state,
+            None).compile().as_text()
+    rp_step = collective_bytes_by_axis(hlo_rp, mesh)
+
     return {
         "devices": jax.device_count(),
         "model_shards": shards,
@@ -274,6 +377,14 @@ def _serve_sharded(cfg, params, out_paged) -> dict:
         "collective_bytes_per_token_by_axis": {
             axis: round(b / BATCH) for axis, b in per_step.items()},
         "tiers_peak_per_shard": srv.tier_stats_peak(),
+        "row_parallel": {
+            "deterministic": False,
+            "tokens_per_s_sharded": round(total / dt_rp, 1),
+            "tokens_identical_to_single_device": out_rp == out_paged,
+            "collective_bytes_per_step_by_axis": rp_step,
+            "collective_bytes_per_token_by_axis": {
+                axis: round(b / BATCH) for axis, b in rp_step.items()},
+        },
     }
 
 
@@ -389,8 +500,10 @@ def run() -> list[str]:
     assert disp_new == NEW_TOKENS // BLOCK         # 1 dispatch / block
     assert sync_new == NEW_TOKENS // BLOCK         # 1 host sync / block
 
-    (dt_dense, dt_paged, out_dense, out_paged,
-     srv_dense, srv_paged) = _serve_requests(cfg, params)
+    dts, outs, servers = _serve_requests(cfg, params)
+    dt_dense, dt_paged, dt_q8, dt_fp8 = dts
+    out_dense, out_paged, out_q8, out_fp8 = outs
+    srv_dense, srv_paged = servers[:2]
     assert out_paged == out_dense, \
         "paged serving must emit identical tokens to the dense cache"
     prefix = _serve_prefix(cfg, params)
@@ -408,6 +521,9 @@ def run() -> list[str]:
 
     tps_old, tps_new = total / dt_old, total / dt_new
     tps_dense, tps_paged = total / dt_dense, total / dt_paged
+    tps_q8, tps_fp8 = total / dt_q8, total / dt_fp8
+    kvq = _kv_quant_block(cfg, params, prompts, servers, dts, outs,
+                          peak_tokens)
 
     bench = {
         "model": cfg.name,
@@ -418,6 +534,8 @@ def run() -> list[str]:
             "block_dense": round(tps_new, 1),
             "server_dense": round(tps_dense, 1),
             "server_paged": round(tps_paged, 1),
+            "server_paged_q8": round(tps_q8, 1),
+            "server_paged_fp8": round(tps_fp8, 1),
         },
         "speedup_block_vs_per_token": round(tps_new / tps_old, 2),
         "paged_vs_dense_tokens_identical": True,
@@ -448,6 +566,12 @@ def run() -> list[str]:
             "table_rebuilds": srv_paged.stats["table_rebuilds"],
             "table_delta_entries": srv_paged.stats["table_delta_entries"],
         },
+        # quantized page pools: int8 / fp8 values + per-(slot, head)
+        # bf16 scales, dequant fused into the pool reads.  Effective
+        # bytes per active token (scales included) vs the bf16 pool,
+        # greedy agreement and the one-step logit error — the gated
+        # KV-precision trade-off record.
+        "kv_quant": kvq,
         "prefix_cache": prefix,
         # tensor-parallel serving: mesh shape, tokens/s, bit-identity to
         # the single-device server, per-axis collective bytes of one
@@ -471,6 +595,9 @@ def run() -> list[str]:
 
     km = bench["kv_memory"]
     pl = bench["pipeline"]
+    rp = sharded["row_parallel"]
+    rp_tps = rp["tokens_per_s_sharded"]
+    rp_bytes = sum(rp["collective_bytes_per_token_by_axis"].values())
     rows = [
         f"serve_per_token,{dt_old / NEW_TOKENS * 1e6:.0f},"
         f"tok_s={tps_old:.0f} dispatches_per_step="
@@ -486,6 +613,18 @@ def run() -> list[str]:
         f" kv_reduction={km['local_kv_reduction_vs_dense']:.1%}"
         f" compiles={pl['compiles']} table_rebuilds={pl['table_rebuilds']}"
         f" identical_tokens=True json={JSON_PATH.name}",
+        f"server_paged_q8,{dt_q8 / NEW_TOKENS * 1e6:.0f},"
+        f"tok_s={tps_q8:.0f} vs_bf16_paged={tps_q8 / tps_paged:.2f}x"
+        f" bytes_ratio={kvq['int8']['bytes_ratio_vs_bf16']:.3f}"
+        f" capacity_gain={kvq['int8']['capacity_gain_vs_bf16']:.2f}x"
+        f" greedy_match={kvq['int8']['greedy_match_rate_vs_bf16']:.3f}"
+        f" max_dlogit={kvq['int8']['max_abs_logit_err']:.4f}",
+        f"server_paged_fp8,{dt_fp8 / NEW_TOKENS * 1e6:.0f},"
+        f"tok_s={tps_fp8:.0f} vs_bf16_paged={tps_fp8 / tps_paged:.2f}x"
+        f" bytes_ratio={kvq['fp8_e4m3']['bytes_ratio_vs_bf16']:.3f}"
+        f" capacity_gain={kvq['fp8_e4m3']['capacity_gain_vs_bf16']:.2f}x"
+        f" greedy_match={kvq['fp8_e4m3']['greedy_match_rate_vs_bf16']:.3f}"
+        f" max_dlogit={kvq['fp8_e4m3']['max_abs_logit_err']:.4f}",
         f"serve_prefix_cache,"
         f"{BATCH / prefix['tokens_per_s_shared'] * 1e6:.0f},"
         f"tok_s={prefix['tokens_per_s_shared']:.0f}"
@@ -503,6 +642,9 @@ def run() -> list[str]:
         f" collective_B_per_tok="
         f"{sum(sharded['collective_bytes_per_token_by_axis'].values())}"
         f" identical_tokens=True",
+        f"server_rowparallel,{BATCH / rp_tps * 1e6:.0f},"
+        f"tok_s={rp_tps:.0f}"
+        f" deterministic=False collective_B_per_tok={rp_bytes}",
         f"serve_preemption,"
         f"{preemption['drain_s_preempt'] * 1e6:.0f},"
         f"preemptions={preemption['preemptions']}"

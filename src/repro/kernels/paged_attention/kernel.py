@@ -32,7 +32,10 @@ NEG_INF = -1e30
 
 def _kernel(page_table_ref, seq_lens_ref,      # scalar-prefetch refs
             q_ref, k_ref, v_ref, *rest,
-            page: int, n_pages: int, scale: float, has_extra: bool):
+            page: int, n_pages: int, scale: float, has_extra: bool,
+            has_scales: bool):
+    if has_scales:
+        ks_ref, vs_ref, *rest = rest
     if has_extra:
         k0_ref, v0_ref, o_ref, m_ref, l_ref, acc_ref = rest
     else:
@@ -49,6 +52,15 @@ def _kernel(page_table_ref, seq_lens_ref,      # scalar-prefetch refs
     q = q_ref[0, 0]                               # (G, d)
     k = k_ref[0, :, 0, :]                         # (page, d)
     v = v_ref[0, :, 0, :]
+    if has_scales:
+        # fused dequant: the quantized page is widened and rescaled in
+        # VMEM right before the dots — full-precision KV never exists
+        # outside this (page, d) tile
+        q = q.astype(jnp.float32)
+        k = k.astype(jnp.float32) * ks_ref[0, :, 0].astype(
+            jnp.float32)[:, None]
+        v = v.astype(jnp.float32) * vs_ref[0, :, 0].astype(
+            jnp.float32)[:, None]
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
@@ -76,6 +88,10 @@ def _kernel(page_table_ref, seq_lens_ref,      # scalar-prefetch refs
             # exactly zeroes the garbage accumulated from masked pages.
             k0 = k0_ref[0]                        # (1, d)
             v0 = v0_ref[0]
+            if has_scales:
+                # extra_kv stays full precision (it is the CURRENT
+                # token, never pooled); only q was widened above
+                k0 = k0.astype(jnp.float32)
             s0 = jax.lax.dot_general(
                 q, k0, (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32) * scale   # (G, 1)
@@ -91,19 +107,27 @@ def _kernel(page_table_ref, seq_lens_ref,      # scalar-prefetch refs
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     page_table: jax.Array, seq_lens: jax.Array, *,
                     extra_kv: tuple[jax.Array, jax.Array] | None = None,
+                    k_scales: jax.Array | None = None,
+                    v_scales: jax.Array | None = None,
                     interpret: bool = False) -> jax.Array:
     """q: (B, Hkv, G, d); pages: (P, page, Hkv, d);
     page_table: (B, n_pages) int32; seq_lens: (B,) int32;
     extra_kv: optional current-token (k0, v0), each (B, Hkv, d), attended
-    in addition to the first ``seq_lens`` pooled positions.
+    in addition to the first ``seq_lens`` pooled positions;
+    k_scales/v_scales: optional (P, page, Hkv) dequant scales for a
+    quantized pool — DMA'd per page next to the KV tiles and multiplied
+    into the fp32 widening inside the online-softmax loop.
     Returns (B, Hkv, G, d)."""
     b, hkv, g, d = q.shape
     n_pages = page_table.shape[1]
     if n_pages < 1:
         raise ValueError("page_table must map at least one page per row")
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("k_scales and v_scales must be given together")
     page = k_pages.shape[1]
     scale = 1.0 / math.sqrt(d)
     has_extra = extra_kv is not None
+    has_scales = k_scales is not None
 
     in_specs = [
         pl.BlockSpec((1, 1, g, d), lambda bb, h, p, pt, sl: (bb, h, 0, 0)),
@@ -114,6 +138,14 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                      lambda bb, h, p, pt, sl: (pt[bb, p], 0, h, 0)),
     ]
     inputs = [page_table, seq_lens, q, k_pages, v_pages]
+    if has_scales:
+        in_specs += [
+            pl.BlockSpec((1, page, 1),
+                         lambda bb, h, p, pt, sl: (pt[bb, p], 0, h)),
+            pl.BlockSpec((1, page, 1),
+                         lambda bb, h, p, pt, sl: (pt[bb, p], 0, h)),
+        ]
+        inputs += [k_scales, v_scales]
     if has_extra:
         in_specs += [
             pl.BlockSpec((1, 1, d), lambda bb, h, p, pt, sl: (bb, h, 0)),
@@ -135,7 +167,7 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     )
     return pl.pallas_call(
         functools.partial(_kernel, page=page, n_pages=n_pages, scale=scale,
-                          has_extra=has_extra),
+                          has_extra=has_extra, has_scales=has_scales),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
         interpret=interpret,

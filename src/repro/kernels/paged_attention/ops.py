@@ -26,14 +26,20 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels.paged_attention.kernel import paged_attention
-from repro.kernels.paged_attention.ref import gather_pages, paged_attention_ref
+from repro.kernels.paged_attention.ref import (gather_pages, gather_scales,
+                                               paged_attention_ref)
 
 # Logical specs for the block pool under tensor parallelism: the KV-heads
 # axis is "model"-sharded (each device owns its head shard of EVERY
 # page), page ids and per-slot tables are replicated host bookkeeping.
+# Quantized pools carry per-(token-slot, head) dequant scales that shard
+# exactly like their pages (head axis on "model").
 POOL_SPEC = P(None, None, "model", None)                 # (P, page, Hkv, hd)
 STACKED_POOL_SPEC = P(None, None, None, "model", None)   # (L, P, ...)
+SCALE_SPEC = P(None, None, "model")                      # (P, page, Hkv)
+STACKED_SCALE_SPEC = P(None, None, None, "model")        # (L, P, page, Hkv)
 GATHERED_KV_SPEC = P(None, "model", None, None)          # (B, Hkv, n*pg, hd)
+GATHERED_SCALE_SPEC = P(None, "model", None)             # (B, Hkv, n*pg)
 PAGE_TABLE_SPEC = P()                                    # replicated
 
 
@@ -46,6 +52,15 @@ def gather_pages_sharded(pages: jax.Array, page_table: jax.Array) -> jax.Array:
     from repro.runtime.sharding import maybe_constraint
     return maybe_constraint(gather_pages(pages, page_table),
                             GATHERED_KV_SPEC)
+
+
+def gather_scales_sharded(scales: jax.Array,
+                          page_table: jax.Array) -> jax.Array:
+    """:func:`gather_scales` with the head axis kept "model"-sharded,
+    mirroring :func:`gather_pages_sharded` for the dequant scales."""
+    from repro.runtime.sharding import maybe_constraint
+    return maybe_constraint(gather_scales(scales, page_table),
+                            GATHERED_SCALE_SPEC)
 
 
 @functools.lru_cache(maxsize=None)
@@ -62,16 +77,21 @@ def use_pallas_kernel() -> bool:
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
            page_table: jax.Array, seq_lens: jax.Array,
-           extra_kv: tuple[jax.Array, jax.Array] | None = None, *,
+           extra_kv: tuple[jax.Array, jax.Array] | None = None,
+           k_scales: jax.Array | None = None,
+           v_scales: jax.Array | None = None, *,
            interpret: bool = False) -> jax.Array:
     """q: (B, Hkv, G, d) single decode token -> (B, Hkv, G, d)."""
     return paged_attention(q, k_pages, v_pages, page_table, seq_lens,
-                           extra_kv=extra_kv, interpret=interpret)
+                           extra_kv=extra_kv, k_scales=k_scales,
+                           v_scales=v_scales, interpret=interpret)
 
 
-def attend_ref(q, k_pages, v_pages, page_table, seq_lens, extra_kv=None):
+def attend_ref(q, k_pages, v_pages, page_table, seq_lens, extra_kv=None,
+               k_scales=None, v_scales=None):
     return paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens,
-                               extra_kv=extra_kv)
+                               extra_kv=extra_kv, k_scales=k_scales,
+                               v_scales=v_scales)
 
 
 def pages_for(tokens: int, page_size: int) -> int:
@@ -292,15 +312,25 @@ class BlockManager:
                      f"covers only {cover}")
         if self.hwm < self.pages_in_use:
             fail(f"hwm {self.hwm} < pages in use {self.pages_in_use}")
+        if self.hwm > self.capacity:
+            fail(f"hwm {self.hwm} > capacity {self.capacity} (occupancy "
+                 f"exceeded the provisioned pool)")
         return {"pages_in_use": self.pages_in_use,
                 "free_pages": len(free), "slots": len(self.pages),
                 "shared_pages": self.shared_pages}
 
     # ----- accounting -------------------------------------------------------
     def bytes_per_page(self, kv_heads: int, head_dim: int,
-                       itemsize: int = 2, num_layers: int = 1) -> int:
-        """Bytes ONE page occupies across both pools and all layers."""
-        return 2 * num_layers * self.page_size * kv_heads * head_dim * itemsize
+                       itemsize: int = 2, num_layers: int = 1,
+                       scale_itemsize: int = 0) -> int:
+        """Bytes ONE page occupies across both pools and all layers.
+
+        ``scale_itemsize`` > 0 adds the per-(token-slot, head) dequant
+        scale storage of a quantized pool (one scale per position per KV
+        head per pool), so quantized accounting charges TRUE bytes —
+        scales included — and ``capacity_reduction`` stays comparable."""
+        return (2 * num_layers * self.page_size * kv_heads
+                * (head_dim * itemsize + scale_itemsize))
 
     def fragmentation(self) -> float:
         """Fraction of in-use page slots holding no live token (tail

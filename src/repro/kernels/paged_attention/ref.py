@@ -23,8 +23,21 @@ def gather_pages(pages: jax.Array, page_table: jax.Array) -> jax.Array:
     return g.reshape(b, n_pages * page, hkv, d).transpose(0, 2, 1, 3)
 
 
+def gather_scales(scales: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Materialize the per-sequence view of a per-page scale array.
+
+    scales: (P, page, Hkv) — one dequant scale per (token slot, head);
+    page_table: (B, n_pages) int32.  Returns (B, Hkv, n_pages * page),
+    aligned position-for-position with :func:`gather_pages`.
+    """
+    b, n_pages = page_table.shape
+    page, hkv = scales.shape[1:]
+    g = scales[page_table]                  # (B, n_pages, page, Hkv)
+    return g.reshape(b, n_pages * page, hkv).transpose(0, 2, 1)
+
+
 def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens,
-                        extra_kv=None):
+                        extra_kv=None, k_scales=None, v_scales=None):
     """Decode attention over a paged KV cache.
 
     q:          (B, Hkv, G, d)       one query token, grouped heads
@@ -34,6 +47,10 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens,
     seq_lens:   (B,)                 valid tokens per sequence
     extra_kv:   optional current-token (k0, v0), each (B, Hkv, d),
                 attended as one extra column past the pooled positions
+    k_scales:   optional (P, page, Hkv) dequant scales for a quantized
+                pool — multiplied into the fp32 view inline, so the
+                full-precision KV never materializes outside this gather
+    v_scales:   same, for the value pool
     returns     (B, Hkv, G, d)
     """
     b, hkv, g, d = q.shape
@@ -44,6 +61,12 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens,
     v = v_pages[page_table]
     k = k.reshape(b, pages_per_seq * page, hkv, d)
     v = v.reshape(b, pages_per_seq * page, hkv, d)
+    if k_scales is not None:
+        ks = k_scales[page_table].reshape(b, pages_per_seq * page, hkv)
+        k = k.astype(jnp.float32) * ks.astype(jnp.float32)[..., None]
+    if v_scales is not None:
+        vs = v_scales[page_table].reshape(b, pages_per_seq * page, hkv)
+        v = v.astype(jnp.float32) * vs.astype(jnp.float32)[..., None]
 
     s = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32),
                    k.astype(jnp.float32)) / math.sqrt(d)

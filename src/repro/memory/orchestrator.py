@@ -354,7 +354,13 @@ class MemoryOrchestrator:
                 local += nb
         if remote:
             self.ledger.record(tiers.REMOTE, "params", remote)
+            self.ledger.record_capacity(tiers.REMOTE, "params", remote)
         self.ledger.record(tiers.LOCAL, "params", local)
+        # placements provision exactly what they hold: registering the
+        # bytes as capacity too keeps the per-tier ``hwm_bytes <=
+        # capacity_bytes`` invariant meaningful (a placed class that only
+        # recorded residency used to push hwm past the provisioned total)
+        self.ledger.record_capacity(tiers.LOCAL, "params", local)
         return placed
 
     @property
@@ -376,7 +382,9 @@ class MemoryOrchestrator:
         record the residency."""
         policy = self.policies.get(tensor_class, PinLocal())
         placed = policy.place(tree)
-        self.ledger.record(policy.tier, tensor_class, tree_bytes(tree))
+        nb = tree_bytes(tree)
+        self.ledger.record(policy.tier, tensor_class, nb)
+        self.ledger.record_capacity(policy.tier, tensor_class, nb)
         return placed
 
     def place_layer_weights(self, stacked: Any) -> Any:
@@ -400,20 +408,27 @@ class MemoryOrchestrator:
                 for p, x in jax.tree_util.tree_leaves_with_path(stacked)
                 if ep.matches(jax.tree_util.keystr(p)))
             self.ledger.record(ep.tier, ep.tensor_class, expert_bytes)
+            self.ledger.record_capacity(ep.tier, ep.tensor_class,
+                                        expert_bytes)
         total = tree_bytes(stacked)
         if wp.tier == tiers.REMOTE:
             self.ledger.record(tiers.REMOTE, "layer_weights",
                                total - expert_bytes)
+            self.ledger.record_capacity(tiers.REMOTE, "layer_weights",
+                                        total - expert_bytes)
             # the prefetch window covers only leaves the scan fetches —
             # expert banks stay at rest (rows gather on demand instead)
             num_layers = jax.tree.leaves(stacked)[0].shape[0]
             per_layer = (total - expert_bytes) // max(num_layers, 1)
-            self.ledger.record(
-                tiers.LOCAL, "layer_weights_window",
-                int(paged_window_bytes(per_layer, self.config.lookahead)))
+            window = int(paged_window_bytes(per_layer, self.config.lookahead))
+            self.ledger.record(tiers.LOCAL, "layer_weights_window", window)
+            self.ledger.record_capacity(tiers.LOCAL, "layer_weights_window",
+                                        window)
         else:
             self.ledger.record(tiers.LOCAL, "layer_weights",
                                total - expert_bytes)
+            self.ledger.record_capacity(tiers.LOCAL, "layer_weights",
+                                        total - expert_bytes)
         return placed
 
     def place_kv_pool(self, cache: Any, specs: Any = None) -> Any:

@@ -122,7 +122,7 @@ class OffloadBetweenSteps:
     carry of ``paged_scan_cache``).  Small leaves (page tables, lengths)
     stay local — only ``pool_keys`` move."""
 
-    pool_keys: tuple[str, ...] = ("k_pages", "v_pages")
+    pool_keys: tuple[str, ...] = ("k_pages", "v_pages", "k_scale", "v_scale")
     tier: str = tiers.REMOTE
 
     def place(self, tree: Any) -> Any:
@@ -183,11 +183,15 @@ class BlockPoolResidency:
         return tiers.tier_sharding(mesh, spec, self.tier)
 
     def bind_kv_shape(self, kv_heads: int, head_dim: int, itemsize: int,
-                      num_layers: int = 1) -> None:
+                      num_layers: int = 1, scale_itemsize: int = 0) -> None:
         """Derive per-page bytes from the served cache's shape (single
-        source: :meth:`BlockManager.bytes_per_page`)."""
+        source: :meth:`BlockManager.bytes_per_page`).  Quantized pools
+        pass ``scale_itemsize`` (bf16 scales -> 2) so the ledger's
+        ``kv_pool`` line reports TRUE quantized bytes, scales included —
+        keeping ``capacity_reduction`` Table-4.3-comparable."""
         self._bytes_per_page = self.manager.bytes_per_page(
-            kv_heads, head_dim, itemsize, num_layers=num_layers)
+            kv_heads, head_dim, itemsize, num_layers=num_layers,
+            scale_itemsize=scale_itemsize)
 
     # ----- bookkeeping (delegated) -----------------------------------------
     @property
@@ -311,8 +315,9 @@ class TopKExpertPrefetch:
 
     def place(self, tree: Any) -> Any:
         if self.ledger is not None:
-            self.ledger.record(self.tier, self.tensor_class,
-                               tree_bytes(tree))
+            nb = tree_bytes(tree)
+            self.ledger.record(self.tier, self.tensor_class, nb)
+            self.ledger.record_capacity(self.tier, self.tensor_class, nb)
         return tiers.host_put(tree)
 
     def sharding(self, mesh, spec):
@@ -335,7 +340,11 @@ class TopKExpertPrefetch:
         shape-derived, so it is recorded at trace time."""
         n = int(ids.shape[0])
         if self.ledger is not None:
-            self.ledger.record(tiers.LOCAL, self.tensor_class,
-                               self.resident_bytes(banks, n))
+            nb = self.resident_bytes(banks, n)
+            self.ledger.record(tiers.LOCAL, self.tensor_class, nb)
+            # gather staging is provisioned at its largest routed set
+            cap = max(getattr(self, "_local_cap", 0), nb)
+            self._local_cap = cap
+            self.ledger.record_capacity(tiers.LOCAL, self.tensor_class, cap)
         return {k: tiers.page_in(jnp.take(banks[k], ids, axis=0))
                 for k in self.bank_keys}

@@ -32,12 +32,19 @@ from repro.memory.accounting import MemoryLedger
 
 @dataclasses.dataclass
 class SwapHandle:
-    """Remote-tier stash of one sequence's KV pages (host arrays)."""
+    """Remote-tier stash of one sequence's KV pages (host arrays).
+
+    Quantized pools stash their per-slot dequant scales alongside the
+    values (``k_scale``/``v_scale``, (L, n, page, Hkv)) so a restore is
+    byte-for-byte the pages that were swapped out — the quantized
+    preemption bit-identity contract."""
 
     page_count: int
     k: np.ndarray            # (L, n, page, Hkv, hd)
     v: np.ndarray
     nbytes: int
+    k_scale: np.ndarray | None = None
+    v_scale: np.ndarray | None = None
 
 
 def _bucket_pages(n: int, quantum: int = 4) -> int:
@@ -73,6 +80,7 @@ class PageSwapper:
         self.swap_ins = 0
         self.retry_attempts = 0      # failed attempts that were retried
         self._stash_bytes = 0
+        self._stash_hwm = 0
         self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
 
     # ----- ledger ------------------------------------------------------------
@@ -80,6 +88,12 @@ class PageSwapper:
         if self.ledger is not None:
             self.ledger.record(self.tier, self.tensor_class,
                                self._stash_bytes)
+            # the stash arena grows on demand: its provisioned capacity
+            # is the largest footprint it ever held, keeping the tier's
+            # hwm <= capacity invariant auditable
+            self._stash_hwm = max(self._stash_hwm, self._stash_bytes)
+            self.ledger.record_capacity(self.tier, self.tensor_class,
+                                        self._stash_hwm)
 
     def _transfer(self, fn, *, what: str, nbytes: int):
         before = (tiers.active_fault_plan().failures
@@ -101,32 +115,48 @@ class PageSwapper:
         the retry budget is exhausted (the caller's degradation policy —
         shed the victim — takes over)."""
         pids = jnp.asarray(page_ids, jnp.int32)
-        k = jnp.take(cache["k_pages"], pids, axis=1)
-        v = jnp.take(cache["v_pages"], pids, axis=1)
-        nbytes = (k.size + v.size) * k.dtype.itemsize
+        grab = [jnp.take(cache["k_pages"], pids, axis=1),
+                jnp.take(cache["v_pages"], pids, axis=1)]
+        quant = "k_scale" in cache
+        if quant:
+            grab += [jnp.take(cache["k_scale"], pids, axis=1),
+                     jnp.take(cache["v_scale"], pids, axis=1)]
+        # per-array bytes: a quantized stash mixes int8/fp8 values with
+        # bf16 scales, so a single shared itemsize would misaccount
+        nbytes = sum(a.size * a.dtype.itemsize for a in grab)
 
         def pull():
-            k_h, v_h = jax.device_get((k, v))
-            return np.asarray(k_h), np.asarray(v_h)
+            return [np.asarray(a) for a in jax.device_get(grab)]
 
-        k_h, v_h = self._transfer(pull, what="kv_swap_out", nbytes=nbytes)
+        host = self._transfer(pull, what="kv_swap_out", nbytes=nbytes)
         self.swap_outs += 1
         self._stash_bytes += nbytes
         self._record()
-        return SwapHandle(page_count=len(page_ids), k=k_h, v=v_h,
-                          nbytes=nbytes)
+        return SwapHandle(page_count=len(page_ids), k=host[0], v=host[1],
+                          nbytes=nbytes,
+                          k_scale=host[2] if quant else None,
+                          v_scale=host[3] if quant else None)
 
     # ----- swap in -----------------------------------------------------------
     def _scatter_fn(self, cache: dict, pids: jax.Array, k: jax.Array,
-                    v: jax.Array) -> dict:
+                    v: jax.Array, k_scale: jax.Array | None = None,
+                    v_scale: jax.Array | None = None) -> dict:
         from repro.runtime.sharding import maybe_constraint
         from jax.sharding import PartitionSpec as P
         k = maybe_constraint(k, P(None, None, None, "model", None))
         v = maybe_constraint(v, P(None, None, None, "model", None))
-        return {"k_pages": cache["k_pages"].at[:, pids].set(
-                    k.astype(cache["k_pages"].dtype)),
-                "v_pages": cache["v_pages"].at[:, pids].set(
-                    v.astype(cache["v_pages"].dtype))}
+        out = dict(cache)
+        out["k_pages"] = cache["k_pages"].at[:, pids].set(
+            k.astype(cache["k_pages"].dtype))
+        out["v_pages"] = cache["v_pages"].at[:, pids].set(
+            v.astype(cache["v_pages"].dtype))
+        if k_scale is not None:
+            sc = P(None, None, None, "model")
+            out["k_scale"] = cache["k_scale"].at[:, pids].set(
+                maybe_constraint(k_scale, sc))
+            out["v_scale"] = cache["v_scale"].at[:, pids].set(
+                maybe_constraint(v_scale, sc))
+        return out
 
     def swap_in(self, cache: dict, page_ids: list[int],
                 handle: SwapHandle) -> dict:
@@ -144,10 +174,15 @@ class PageSwapper:
         pad = ((0, 0), (0, cap - n)) + ((0, 0),) * (handle.k.ndim - 2)
         k = np.pad(handle.k, pad)
         v = np.pad(handle.v, pad)
+        scales = ()
+        if handle.k_scale is not None:
+            spad = pad[:-1]
+            scales = (jnp.asarray(np.pad(handle.k_scale, spad)),
+                      jnp.asarray(np.pad(handle.v_scale, spad)))
 
         def push():
             return self._scatter(cache, jnp.asarray(pids), jnp.asarray(k),
-                                 jnp.asarray(v))
+                                 jnp.asarray(v), *scales)
 
         new_cache = self._transfer(push, what="kv_swap_in",
                                    nbytes=handle.nbytes)

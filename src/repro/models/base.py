@@ -152,6 +152,10 @@ class ModelConfig:
     # numerics / system
     dtype: Any = jnp.bfloat16
     kv_quant: bool = False           # int8 KV cache (per-token-per-head scale)
+    kv_dtype: str | None = None      # paged-pool KV precision: None = cfg.dtype
+                                     # (full precision), "int8" or "fp8_e4m3"
+                                     # store quantized pages + per-token-slot
+                                     # per-head scales alongside the pool
     page_size: int = 16              # tokens per KV page (block-pool serving)
     norm_eps: float = 1e-6
     tp: int = DEFAULT_TP             # model-axis size the config targets
@@ -199,6 +203,35 @@ class ModelConfig:
 
     def with_pager(self, **kw) -> "ModelConfig":
         return dataclasses.replace(self, pager=PagerPolicy(**kw))
+
+    # ---------- paged-pool KV precision -------------------------------------
+    #: quantized page-pool dtypes -> (jnp dtype, quantization clip range).
+    #: fp8_e4m3 uses the finite max of float8_e4m3fn (448); int8 the
+    #: symmetric signed range.  Scales are always stored bf16.
+    KV_DTYPES = {"int8": (jnp.int8, 127.0),
+                 "fp8_e4m3": (jnp.float8_e4m3fn, 448.0)}
+
+    @property
+    def kv_quantized(self) -> bool:
+        """True when the paged page pools hold quantized KV."""
+        return self.kv_dtype is not None
+
+    def kv_pool_dtype(self):
+        """The jnp dtype paged KV pools are allocated with."""
+        if self.kv_dtype is None:
+            return self.dtype
+        try:
+            return self.KV_DTYPES[self.kv_dtype][0]
+        except KeyError:
+            raise ValueError(
+                f"unknown kv_dtype {self.kv_dtype!r}; expected one of "
+                f"{sorted(self.KV_DTYPES)}") from None
+
+    def kv_qmax(self) -> float:
+        """Symmetric clip range of the quantized pool dtype."""
+        if self.kv_dtype is None:
+            raise ValueError("kv_qmax is only defined for quantized KV")
+        return self.KV_DTYPES[self.kv_dtype][1]
 
     def assert_mesh_compatible(self, axis_sizes: dict) -> None:
         """Fail fast when a serving mesh cannot shard this config.

@@ -302,17 +302,34 @@ def attn_forward(p: dict, x: jax.Array, positions: jax.Array,
     return o.reshape(b, s, -1) @ p["wo"]
 
 
+def _kv_roundtripped(k: jax.Array, v: jax.Array, cfg: ModelConfig):
+    """The quantize->dequantize fixed point of (k, v) — exactly the
+    values every later POOL read (shared-prefix gather, paged decode)
+    dequantizes.  Quantized prefill attends these instead of the raw
+    projections so a prefix-cached admission is bit-identical to an
+    unshared one: both see the same round-tripped KV, whether it comes
+    off the pool or is recomputed on the fly."""
+    qdt, qmax = cfg.kv_pool_dtype(), cfg.kv_qmax()
+    return (kv_dequantize(*kv_pool_quantize(k, qdt, qmax), k.dtype),
+            kv_dequantize(*kv_pool_quantize(v, qdt, qmax), v.dtype))
+
+
 def attn_prefill_kv(p: dict, x: jax.Array, positions: jax.Array,
-                    cfg: ModelConfig):
+                    cfg: ModelConfig, *, kv_roundtrip: bool = False):
     """Like attn_forward but also returns (k, v) for cache seeding.
     Serving path: the head axis is gathered before the out projection
-    (all-gather TP — see :func:`_tp_gathered`)."""
+    (all-gather TP — see :func:`_tp_gathered`).  ``kv_roundtrip``
+    (quantized page pools) attends the quantize->dequantize round trip
+    of K/V while still returning the raw projections for the pool
+    write — scattering quantizes them to the very bytes the round trip
+    came from."""
     q, k, v = _project_qkv(p, x, x, cfg)
     q = _heads_sharded(apply_rope(q, positions, cfg.rope_theta))
     k = _heads_sharded(apply_rope(k, positions, cfg.rope_theta))
     v = _heads_sharded(v)
+    ka, va = _kv_roundtripped(k, v, cfg) if kv_roundtrip else (k, v)
     o = _tp_gathered(
-        flash_attention(q, k, v, causal=True, window=cfg.sliding_window,
+        flash_attention(q, ka, va, causal=True, window=cfg.sliding_window,
                         q_block=cfg.q_block, kv_block=cfg.kv_block))
     b, s = x.shape[:2]
     return o.reshape(b, s, -1) @ p["wo"], (k, v)
@@ -320,7 +337,8 @@ def attn_prefill_kv(p: dict, x: jax.Array, positions: jax.Array,
 
 def attn_prefill_prefix_kv(p: dict, x: jax.Array, positions: jax.Array,
                            k_prefix: jax.Array, v_prefix: jax.Array,
-                           cfg: ModelConfig):
+                           cfg: ModelConfig, *,
+                           kv_roundtrip: bool = False):
     """Prefill attention for a prompt SUFFIX against a cached prefix.
 
     x: (B, S_new, d) hidden states of the suffix chunk only; positions:
@@ -340,9 +358,13 @@ def attn_prefill_prefix_kv(p: dict, x: jax.Array, positions: jax.Array,
     q = _heads_sharded(apply_rope(q, positions, cfg.rope_theta))
     k = _heads_sharded(apply_rope(k, positions, cfg.rope_theta))
     v = _heads_sharded(v)
+    # quantized pools: the gathered prefix is already the round-tripped
+    # values; round-trip the suffix too so the concatenated KV equals a
+    # full quantized prefill's (bit-identity across shared/unshared)
+    ka, va = _kv_roundtripped(k, v, cfg) if kv_roundtrip else (k, v)
     prefix_len = k_prefix.shape[1]
-    kf = jnp.concatenate([k_prefix.astype(k.dtype), k], axis=1)
-    vf = jnp.concatenate([v_prefix.astype(v.dtype), v], axis=1)
+    kf = jnp.concatenate([k_prefix.astype(k.dtype), ka], axis=1)
+    vf = jnp.concatenate([v_prefix.astype(v.dtype), va], axis=1)
     o = _tp_gathered(
         flash_attention(q, kf, vf, causal=True, window=cfg.sliding_window,
                         q_block=cfg.q_block, kv_block=cfg.kv_block,
@@ -438,17 +460,21 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, page_table: jax.Array,
                            cur_pos: jax.Array,
                            extra_kv: tuple[jax.Array, jax.Array], *,
+                           k_scales: jax.Array | None = None,
+                           v_scales: jax.Array | None = None,
                            use_kernel: bool | None = None,
                            interpret: bool = False) -> jax.Array:
     """Single-token attention against a (P, page, Hkv, hd) page pool.
 
     q: (B, 1, Hq, hd); page_table: (B, n_pages) int32 (null-page padded);
     cur_pos: (B,) — pooled positions < cur_pos are live, the current
-    token arrives via ``extra_kv``.  Routed once per backend: the Pallas
-    ``paged_attention`` kernel on TPU (scalar-prefetched page tables),
-    the gather + :func:`decode_attention` composition elsewhere — the
-    fallback reuses the dense decode path verbatim on the gathered view,
-    so paged and dense decode share every floating-point op.
+    token arrives via ``extra_kv``.  ``k_scales``/``v_scales``
+    ((P, page, Hkv), quantized pools only) dequantize inline: the kernel
+    rescales each page tile inside its online-softmax loop; the fallback
+    rescales the gathered fp32 view — full-precision KV never
+    materializes pool-wide either way.  Routed once per backend: the
+    Pallas ``paged_attention`` kernel on TPU (scalar-prefetched page
+    tables), the gather + :func:`decode_attention` composition elsewhere.
     """
     from repro.kernels.paged_attention import ops as paged_ops
 
@@ -460,24 +486,34 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
         qg = q.reshape(b, hkv, hq // hkv, hd)
         from repro.kernels.paged_attention.kernel import paged_attention
         o = paged_attention(qg, k_pages, v_pages, page_table, cur_pos,
-                            extra_kv=extra_kv, interpret=interpret)
+                            extra_kv=extra_kv, k_scales=k_scales,
+                            v_scales=v_scales, interpret=interpret)
         return o.reshape(b, 1, hq, hd).astype(q.dtype)
     # spec-threaded gather: each device gathers only its "model" head
     # shard of the mapped pages, so tensor-parallel paged decode reads
     # stay collective-free (see ops.GATHERED_KV_SPEC)
     k = paged_ops.gather_pages_sharded(k_pages, page_table)
     v = paged_ops.gather_pages_sharded(v_pages, page_table)
+    if k_scales is not None:
+        ks = paged_ops.gather_scales_sharded(k_scales, page_table)
+        vs = paged_ops.gather_scales_sharded(v_scales, page_table)
+        k = k.astype(jnp.float32) * ks.astype(jnp.float32)[..., None]
+        v = v.astype(jnp.float32) * vs.astype(jnp.float32)[..., None]
     return decode_attention(q, k, v, cur_pos, extra_kv=extra_kv)
 
 
 def attn_decode_paged(p: dict, x: jax.Array, k_pages: jax.Array,
                       v_pages: jax.Array, page_table: jax.Array,
-                      cur_pos: jax.Array, cfg: ModelConfig):
+                      cur_pos: jax.Array, cfg: ModelConfig,
+                      k_scales: jax.Array | None = None,
+                      v_scales: jax.Array | None = None):
     """One-token self-attention over this layer's page pool (read-only —
     the (k, v) returned are written post-scan in one batched scatter).
 
     x: (B, 1, d); [kv]_pages: (P, page, Hkv, hd); page_table: (B, n);
-    cur_pos: (B,).  Returns (out (B,1,d), k0 (B,Hkv,hd), v0 (B,Hkv,hd)).
+    cur_pos: (B,); [kv]_scales: (P, page, Hkv) dequant scales when the
+    pool is quantized.  Returns (out (B,1,d), k0 (B,Hkv,hd), v0
+    (B,Hkv,hd)) — k0/v0 full precision; the post-scan scatter quantizes.
     """
     q, k, v = _project_qkv(p, x, x, cfg)
     pos = cur_pos[:, None]                               # (B, 1)
@@ -487,7 +523,8 @@ def attn_decode_paged(p: dict, x: jax.Array, k_pages: jax.Array,
     k0 = k[:, 0]                                         # (B, Hkv, hd)
     v0 = v[:, 0]
     o = paged_decode_attention(q, k_pages, v_pages, page_table, cur_pos,
-                               (k0, v0))
+                               (k0, v0), k_scales=k_scales,
+                               v_scales=v_scales)
     out = _tp_gathered(o).reshape(b, 1, -1) @ p["wo"]
     return out, k0, v0
 
@@ -500,11 +537,26 @@ def attn_decode_paged(p: dict, x: jax.Array, k_pages: jax.Array,
 
 def kv_quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     """x: (..., hd) -> (int8 values, scale (...,) bf16)."""
+    return kv_pool_quantize(x, jnp.int8, 127.0)
+
+
+def kv_pool_quantize(x: jax.Array, qdtype,
+                     qmax: float) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-(..., head)-vector absmax quantization shared by the
+    int8 (qmax=127) and fp8_e4m3 (qmax=448) page pools.
+
+    x: (..., hd) -> (``qdtype`` values, scale (...,) bf16).  The scale is
+    computed from its own bf16 storage value so a write/read round trip
+    reproduces exactly what the attention read path dequantizes — the
+    invariant the quantized-vs-quantized bit-identity contract rests on.
+    """
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
-    scale = jnp.maximum(amax / 127.0, 1e-8)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
-                 -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.bfloat16)
+    scale = jnp.maximum(amax / qmax, 1e-8).astype(jnp.bfloat16)
+    y = x.astype(jnp.float32) / scale.astype(jnp.float32)[..., None]
+    if jnp.issubdtype(jnp.dtype(qdtype), jnp.integer):
+        y = jnp.round(y)
+    q = jnp.clip(y, -qmax, qmax).astype(qdtype)
+    return q, scale
 
 
 def kv_dequantize(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:

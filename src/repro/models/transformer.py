@@ -25,13 +25,17 @@ from repro.runtime.sharding import SEQ_SHARDED_ACTS, maybe_constraint
 
 
 def _scatter_pages(cache: dict, pages: jax.Array, k_new: jax.Array,
-                   v_new: jax.Array) -> dict:
+                   v_new: jax.Array, cfg: ModelConfig) -> dict:
     """Write (L, B, S, Hkv, hd) prompt KV into the page pools: ONE
     scatter per pool covering every layer, page and head.  ``pages``:
     (B, n) page ids with n * page >= S; KV positions start at the first
     mapped page's base, extra positions receive only padding (written —
     so a freshly filled page is valid in its entirety — but masked by
-    seq_lens on every read)."""
+    seq_lens on every read).  Quantized pools (``cfg.kv_dtype``)
+    quantize on write: per-(position, head) absmax scales land in the
+    ``k_scale``/``v_scale`` arrays with the same scatter pattern, so a
+    page's bytes are a pure function of the tokens it covers (the
+    prefix-sharing contract)."""
     page = cache["k_pages"].shape[2]
     n = pages.shape[1]
     seq = k_new.shape[2]
@@ -40,18 +44,29 @@ def _scatter_pages(cache: dict, pages: jax.Array, k_new: jax.Array,
         raise ValueError(f"page table maps {n * page} positions but the "
                          f"prompt chunk has {seq}")
 
-    def scatter(pool, val):
-        # (L, B, S, Hkv, hd) -> (L, B, n, page, Hkv, hd), one scatter
-        val = jnp.pad(val, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    def scatter(pool, val, spec):
+        # (L, B, S, ...) -> (L, B, n, page, ...), one scatter
+        val = jnp.pad(val, ((0, 0), (0, 0), (0, pad))
+                      + ((0, 0),) * (val.ndim - 3))
         l_, b_ = val.shape[:2]
-        val = val.reshape(l_, b_, n, page, val.shape[3], val.shape[4])
+        val = val.reshape((l_, b_, n, page) + val.shape[3:])
         # under a mesh the update's head axis matches the pool's shard
         # layout, so the scatter stays device-local per head shard
-        val = maybe_constraint(val, P(None, None, None, None, "model", None))
+        val = maybe_constraint(val, spec)
         return pool.at[:, pages].set(val.astype(pool.dtype))
 
-    return {"k_pages": scatter(cache["k_pages"], k_new),
-            "v_pages": scatter(cache["v_pages"], v_new)}
+    kv_spec = P(None, None, None, None, "model", None)
+    if cfg.kv_quantized:
+        qdt, qmax = cfg.kv_pool_dtype(), cfg.kv_qmax()
+        k_new, ks = L.kv_pool_quantize(k_new, qdt, qmax)
+        v_new, vs = L.kv_pool_quantize(v_new, qdt, qmax)
+        sc_spec = P(None, None, None, None, "model")
+        return {"k_pages": scatter(cache["k_pages"], k_new, kv_spec),
+                "v_pages": scatter(cache["v_pages"], v_new, kv_spec),
+                "k_scale": scatter(cache["k_scale"], ks, sc_spec),
+                "v_scale": scatter(cache["v_scale"], vs, sc_spec)}
+    return {"k_pages": scatter(cache["k_pages"], k_new, kv_spec),
+            "v_pages": scatter(cache["v_pages"], v_new, kv_spec)}
 
 
 class DenseLM:
@@ -138,11 +153,12 @@ class DenseLM:
             SEQ_SHARDED_ACTS)
         return h + f
 
-    def block_prefill(self, lp: dict, x: jax.Array, positions: jax.Array):
+    def block_prefill(self, lp: dict, x: jax.Array, positions: jax.Array,
+                      kv_roundtrip: bool = False):
         cfg = self.cfg
         a, kv = L.attn_prefill_kv(lp["attn"],
                                   L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
-                                  positions, cfg)
+                                  positions, cfg, kv_roundtrip=kv_roundtrip)
         h = x + a
         return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps),
                             gather_tp=True), kv
@@ -159,24 +175,28 @@ class DenseLM:
                             gather_tp=True), k0, v0
 
     def block_prefill_prefix(self, lp: dict, x: jax.Array,
-                             positions: jax.Array, k_prefix, v_prefix):
+                             positions: jax.Array, k_prefix, v_prefix,
+                             kv_roundtrip: bool = False):
         """block_prefill for a prompt suffix whose prefix KV already
         lives in the page pool (prefix-cached admission)."""
         cfg = self.cfg
         a, kv = L.attn_prefill_prefix_kv(
             lp["attn"], L.rmsnorm(x, lp["ln1"], cfg.norm_eps), positions,
-            k_prefix, v_prefix, cfg)
+            k_prefix, v_prefix, cfg, kv_roundtrip=kv_roundtrip)
         h = x + a
         return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps),
                             gather_tp=True), kv
 
     def block_decode_paged(self, lp: dict, x: jax.Array, k_pages, v_pages,
-                           pages, cur_pos):
-        """block_decode against this layer's page pool (also read-only)."""
+                           pages, cur_pos, k_scales=None, v_scales=None):
+        """block_decode against this layer's page pool (also read-only);
+        ``k_scales``/``v_scales`` carry a quantized pool's per-slot
+        dequant scales into the fused attention read."""
         cfg = self.cfg
         a, k0, v0 = L.attn_decode_paged(lp["attn"],
                                         L.rmsnorm(x, lp["ln1"], cfg.norm_eps),
-                                        k_pages, v_pages, pages, cur_pos, cfg)
+                                        k_pages, v_pages, pages, cur_pos, cfg,
+                                        k_scales=k_scales, v_scales=v_scales)
         h = x + a
         return h + self.ffn(lp, L.rmsnorm(h, lp["ln2"], cfg.norm_eps),
                             gather_tp=True), k0, v0
@@ -248,7 +268,12 @@ class DenseLM:
     def init_paged_cache(self, num_pages: int,
                          page_size: int | None = None) -> dict:
         """Stacked multi-layer page pools, (L, P, page, Hkv, hd).  Page 0
-        is the null page (never allocated; absorbs idle-slot writes)."""
+        is the null page (never allocated; absorbs idle-slot writes).
+
+        With ``cfg.kv_dtype`` set the pools hold int8 / fp8 values and
+        per-(page, slot, head) bf16 absmax scales ride alongside in
+        ``k_scale``/``v_scale`` (L, P, page, Hkv) — dequant is fused into
+        every pool read, so full-precision KV never materializes."""
         cfg = self.cfg
         if not self.supports_paged_kv():
             raise ValueError(
@@ -257,12 +282,23 @@ class DenseLM:
         page = page_size or cfg.page_size
         shape = (cfg.num_layers, num_pages, page, cfg.padded_kv_heads,
                  cfg.head_dim)
-        return {"k_pages": jnp.zeros(shape, cfg.dtype),
-                "v_pages": jnp.zeros(shape, cfg.dtype)}
+        pool_dt = cfg.kv_pool_dtype()
+        cache = {"k_pages": jnp.zeros(shape, pool_dt),
+                 "v_pages": jnp.zeros(shape, pool_dt)}
+        if cfg.kv_quantized:
+            cache["k_scale"] = jnp.zeros(shape[:-1], jnp.bfloat16)
+            cache["v_scale"] = jnp.zeros(shape[:-1], jnp.bfloat16)
+        return cache
 
     def paged_cache_specs(self) -> dict:
         spec = P(None, None, None, "model", None)
-        return {"k_pages": spec, "v_pages": spec}
+        specs = {"k_pages": spec, "v_pages": spec}
+        if self.cfg.kv_quantized:
+            # scales shard on the head axis exactly like their pools
+            sc = P(None, None, None, "model")
+            specs["k_scale"] = sc
+            specs["v_scale"] = sc
+        return specs
 
     def prefill(self, params: dict, tokens: jax.Array, cache: dict,
                 extra: dict | None = None):
@@ -324,14 +360,18 @@ class DenseLM:
             x = jnp.concatenate([extra["patches"].astype(x.dtype), x], axis=1)
         seq = x.shape[1]
         positions = jnp.arange(seq)
+        quant = cfg.kv_quantized
 
         def body(h, lp):
             # keep (B, S, Hkv, hd) attention layout: the page reshape
-            # below wants seq-major
-            return self.block_prefill(lp, h, positions)
+            # below wants seq-major.  Quantized pools attend the
+            # quantize->dequantize round trip of the fresh KV — the same
+            # values any pool read dequantizes — so a prefix-shared
+            # admission is bit-identical to this unshared one.
+            return self.block_prefill(lp, h, positions, kv_roundtrip=quant)
 
         x, (k_new, v_new) = self.mem.layer_scan(body, x, params["layers"])
-        cache = _scatter_pages(cache, pages, k_new, v_new)
+        cache = _scatter_pages(cache, pages, k_new, v_new, cfg)
         x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
         return L.lm_head(params["embed"], x, cfg), cache
 
@@ -350,9 +390,15 @@ class DenseLM:
         length — the prefix contributes only the attention reads — and
         the suffix hidden states are bit-identical to a full unshared
         prefill (see :func:`repro.models.layers.attn_prefill_prefix_kv`).
+        Quantized pools dequantize the gathered prefix through its
+        stored scales, and an unshared :meth:`prefill_paged` attends the
+        same quantize->dequantize round trip of its fresh KV, so the
+        bit-identity guarantee holds for quantized pools too: sharing or
+        not sharing a prefix never changes a token.
         Returns (last-position logits, cache).
         """
-        from repro.kernels.paged_attention.ops import gather_pages_sharded
+        from repro.kernels.paged_attention.ops import (gather_pages_sharded,
+                                                       gather_scales_sharded)
 
         cfg = self.cfg
         x = self._embed(params, tokens)
@@ -360,18 +406,33 @@ class DenseLM:
         page = cache["k_pages"].shape[2]
         prefix_len = prefix_pages.shape[1] * page
         positions = prefix_len + jnp.arange(seq)
+        quant = cfg.kv_quantized
 
         def body(h, lp, cl):
-            kp, vp = cl
-            # (B, Hkv, pre, hd) cache layout -> (B, pre, Hkv, hd)
-            kpre = gather_pages_sharded(kp, prefix_pages).transpose(0, 2, 1, 3)
-            vpre = gather_pages_sharded(vp, prefix_pages).transpose(0, 2, 1, 3)
-            return self.block_prefill_prefix(lp, h, positions, kpre, vpre)
+            if quant:
+                kp, vp, ksc, vsc = cl
+            else:
+                kp, vp = cl
+            # (B, Hkv, pre, hd) cache layout
+            kpre = gather_pages_sharded(kp, prefix_pages)
+            vpre = gather_pages_sharded(vp, prefix_pages)
+            if quant:
+                ks = gather_scales_sharded(ksc, prefix_pages)  # (B, Hkv, pre)
+                vs = gather_scales_sharded(vsc, prefix_pages)
+                kpre = L.kv_dequantize(kpre, ks, cfg.dtype)
+                vpre = L.kv_dequantize(vpre, vs, cfg.dtype)
+            # -> (B, pre, Hkv, hd) attention layout
+            kpre = kpre.transpose(0, 2, 1, 3)
+            vpre = vpre.transpose(0, 2, 1, 3)
+            return self.block_prefill_prefix(lp, h, positions, kpre, vpre,
+                                             kv_roundtrip=quant)
 
-        x, (k_new, v_new) = self.mem.layer_scan(
-            body, x, params["layers"],
-            xs=(cache["k_pages"], cache["v_pages"]))
-        cache = _scatter_pages(cache, pages, k_new, v_new)
+        xs = ((cache["k_pages"], cache["v_pages"],
+               cache["k_scale"], cache["v_scale"]) if quant
+              else (cache["k_pages"], cache["v_pages"]))
+        x, (k_new, v_new) = self.mem.layer_scan(body, x, params["layers"],
+                                                xs=xs)
+        cache = _scatter_pages(cache, pages, k_new, v_new, cfg)
         x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
         return L.lm_head(params["embed"], x, cfg), cache
 
@@ -486,39 +547,69 @@ class DenseLM:
         pids = jnp.where(pi < n_pages,
                          pages[bidx, jnp.minimum(pi, n_pages - 1)], 0)
         slots = cur_pos % page
+        quant = cfg.kv_quantized
+        if quant:
+            qdt, qmax = cfg.kv_pool_dtype(), cfg.kv_qmax()
 
         if cfg.pager.offload_kv:
             def body(h, lp, cl):
-                kp, vp = cl
-                h, k0, v0 = self.block_decode_paged(lp, h, kp, vp, pages,
-                                                    cur_pos)
+                if quant:
+                    kp, vp, ksc, vsc = cl
+                    h, k0, v0 = self.block_decode_paged(
+                        lp, h, kp, vp, pages, cur_pos,
+                        k_scales=ksc, v_scales=vsc)
+                    k0, k0s = L.kv_pool_quantize(k0, qdt, qmax)
+                    v0, v0s = L.kv_pool_quantize(v0, qdt, qmax)
+                    ksc = ksc.at[pids, slots].set(k0s)
+                    vsc = vsc.at[pids, slots].set(v0s)
+                else:
+                    kp, vp = cl
+                    h, k0, v0 = self.block_decode_paged(lp, h, kp, vp, pages,
+                                                        cur_pos)
                 kp = kp.at[pids, slots].set(k0.astype(kp.dtype))
                 vp = vp.at[pids, slots].set(v0.astype(vp.dtype))
-                return h, (kp, vp)
+                return h, (kp, vp, ksc, vsc) if quant else (kp, vp)
 
-            x, (kp, vp) = self.mem.layer_scan_cache(
-                body, x, params["layers"],
-                (cache["k_pages"], cache["v_pages"]))
-            return x, {"k_pages": kp, "v_pages": vp}
+            pools = ((cache["k_pages"], cache["v_pages"],
+                      cache["k_scale"], cache["v_scale"]) if quant
+                     else (cache["k_pages"], cache["v_pages"]))
+            x, out = self.mem.layer_scan_cache(body, x, params["layers"],
+                                               pools)
+            cache = {"k_pages": out[0], "v_pages": out[1]}
+            if quant:
+                cache["k_scale"], cache["v_scale"] = out[2], out[3]
+            return x, cache
 
         def body(h, lp, cl):
+            scales = {"k_scales": cl[2], "v_scales": cl[3]} if quant else {}
             h, k0, v0 = self.block_decode_paged(lp, h, cl[0], cl[1], pages,
-                                                cur_pos)
+                                                cur_pos, **scales)
             return h, (k0, v0)
 
+        xs = ((cache["k_pages"], cache["v_pages"],
+               cache["k_scale"], cache["v_scale"]) if quant
+              else (cache["k_pages"], cache["v_pages"]))
         x, (k_new, v_new) = self.mem.layer_scan(
-            body, x, params["layers"],
-            xs=(cache["k_pages"], cache["v_pages"]),
+            body, x, params["layers"], xs=xs,
             unroll=cfg.decode_unroll)
         # one scatter per pool for all L layers and B slots — the fix for
         # the old host-side PagePool.append's dispatch-per-token writes;
         # the (L, B, Hkv, hd) updates keep the pool's head-shard layout
+        if quant:
+            k_new, ks = L.kv_pool_quantize(k_new, qdt, qmax)
+            v_new, vs = L.kv_pool_quantize(v_new, qdt, qmax)
         k_new = maybe_constraint(k_new, P(None, None, "model", None))
         v_new = maybe_constraint(v_new, P(None, None, "model", None))
-        cache = {"k_pages": cache["k_pages"].at[:, pids, slots].set(
-                     k_new.astype(cache["k_pages"].dtype)),
-                 "v_pages": cache["v_pages"].at[:, pids, slots].set(
-                     v_new.astype(cache["v_pages"].dtype))}
+        cache = dict(cache)
+        cache["k_pages"] = cache["k_pages"].at[:, pids, slots].set(
+            k_new.astype(cache["k_pages"].dtype))
+        cache["v_pages"] = cache["v_pages"].at[:, pids, slots].set(
+            v_new.astype(cache["v_pages"].dtype))
+        if quant:
+            ks = maybe_constraint(ks, P(None, None, "model"))
+            vs = maybe_constraint(vs, P(None, None, "model"))
+            cache["k_scale"] = cache["k_scale"].at[:, pids, slots].set(ks)
+            cache["v_scale"] = cache["v_scale"].at[:, pids, slots].set(vs)
         return x, cache
 
     def decode_loop(self, params: dict, cache: dict, state: DecodeState, *,

@@ -171,7 +171,11 @@ def save_server_snapshot(path, snap: dict):
         entry = {k: s[k] for k in ("uid", "max_new_tokens", "output", "pos")}
         arrays[f"seq{i}_prompt"] = np.asarray(s["prompt"], np.int32)
         if s["pos"]:
-            for pool in ("k", "v"):
+            # quantized pools persist their dequant scales alongside the
+            # values so a restored server resumes bit-identically
+            for pool in ("k", "v", "k_scale", "v_scale"):
+                if pool not in s:
+                    continue
                 arr = np.asarray(s[pool])
                 entry[f"{pool}_dtype"] = arr.dtype.name
                 arrays[f"seq{i}_{pool}"] = checkpoint._storage_view(arr)
@@ -202,7 +206,9 @@ def load_server_snapshot(path) -> dict:
         s = dict(entry)
         s["prompt"] = data[f"seq{i}_prompt"]
         if s["pos"]:
-            for pool in ("k", "v"):
+            for pool in ("k", "v", "k_scale", "v_scale"):
+                if f"{pool}_dtype" not in s:
+                    continue
                 s[pool] = checkpoint._unstorage_view(
                     data[f"seq{i}_{pool}"], s.pop(f"{pool}_dtype"))
         snap["sequences"].append(s)

@@ -214,6 +214,15 @@ class BatchedServer:
     shard's partial rounds separately and flips greedy ties — that path
     is kept for training only.)  Models without ``serving_param_specs``
     are rejected rather than served with silently diverging tokens.
+
+    ``deterministic=False`` opts OUT of that contract for raw speed:
+    the output projections keep their Megatron row-parallel contraction
+    shard (plain ``param_specs``) and the all-gather constraints stay
+    disarmed, so XLA lowers a partial-sum all-reduce per projection —
+    less wire per step on wide models, but each shard's partials round
+    separately, so tokens may differ from the single-device server
+    (greedy ties can flip).  Single-run determinism is preserved; only
+    cross-placement bit-identity is traded away.
     """
 
     def __init__(self, model, params, *, batch_size: int = 4,
@@ -223,7 +232,8 @@ class BatchedServer:
                  num_pages: int | None = None, pipeline: bool = True,
                  prefix_cache: bool = True, mesh=None, preempt: bool = True,
                  preempt_policy="lru", audit: bool | None = None,
-                 swap_retries: int = 3, swap_timeout_s: float | None = None):
+                 swap_retries: int = 3, swap_timeout_s: float | None = None,
+                 deterministic: bool = True):
         self.model = model
         self.batch = batch_size
         self.max_seq = max_seq
@@ -248,19 +258,25 @@ class BatchedServer:
         # models without one get a fresh plan from their config.
         self.mem: MemoryOrchestrator = (
             getattr(model, "mem", None) or MemoryOrchestrator.plan(model.cfg))
+        self.deterministic = bool(deterministic)
         # validate BEFORE binding: a rejected mesh must not leave the
         # model's shared orchestrator/ledger in sharded mode
         spec_fn = None
         if mesh is not None:
             model.cfg.assert_mesh_compatible(mesh_axis_sizes(mesh))
-            spec_fn = getattr(model, "serving_param_specs", None)
-            if spec_fn is None:
-                raise ValueError(
-                    f"{type(model).__name__} does not expose "
-                    f"serving_param_specs; its family is not wired for "
-                    f"the all-gather-TP serving placement, and serving "
-                    f"it over a mesh would emit silently diverging "
-                    f"tokens (partial-sum rounding)")
+            if self.deterministic:
+                spec_fn = getattr(model, "serving_param_specs", None)
+                if spec_fn is None:
+                    raise ValueError(
+                        f"{type(model).__name__} does not expose "
+                        f"serving_param_specs; its family is not wired for "
+                        f"the all-gather-TP serving placement, and serving "
+                        f"it over a mesh would emit silently diverging "
+                        f"tokens (partial-sum rounding)")
+            else:
+                # opt-in Megatron row-parallel serving: wo stays
+                # contraction-sharded, partial sums all-reduce
+                spec_fn = model.param_specs
         self.mesh = mesh
         self.mem.bind_mesh(mesh)
         try:
@@ -283,7 +299,8 @@ class BatchedServer:
         if spec_fn is not None:
             # serving placement: all-gather TP (output projections
             # replicated) so sharded tokens are bit-identical — see
-            # DenseLM.serving_param_specs
+            # DenseLM.serving_param_specs.  deterministic=False keeps
+            # the training-layout row-parallel shards instead.
             params = self.mem.place_params(params, spec_fn())
         self.params = params
         self.pipeline = bool(pipeline)
@@ -303,9 +320,12 @@ class BatchedServer:
             self.num_pages = num_pages or batch_size * per_seq + 1
             self.kv = self.mem.block_pool(self.num_pages, self.page_size)
             self.manager = self.kv.manager
+            quantized = bool(getattr(cfg, "kv_quantized", False))
+            pool_dt = (cfg.kv_pool_dtype() if quantized else cfg.dtype)
             self.kv.bind_kv_shape(cfg.padded_kv_heads, cfg.head_dim,
-                                  jnp.dtype(cfg.dtype).itemsize,
-                                  cfg.num_layers)
+                                  jnp.dtype(pool_dt).itemsize,
+                                  cfg.num_layers,
+                                  scale_itemsize=2 if quantized else 0)
             self.cache = self.mem.place_kv_pool(
                 model.init_paged_cache(self.num_pages, self.page_size),
                 specs=(model.paged_cache_specs() if mesh is not None
@@ -387,7 +407,8 @@ class BatchedServer:
             return contextlib.nullcontext()
         stack = contextlib.ExitStack()
         stack.enter_context(activate_mesh(self.mesh))
-        stack.enter_context(gather_tp_mode())
+        if self.deterministic:
+            stack.enter_context(gather_tp_mode())
         return stack
 
     def _dev(self, x: jax.Array) -> jax.Array:
@@ -1247,12 +1268,14 @@ class BatchedServer:
         self._drain_queue()
         seqs = []
 
-        def entry(req, pos, k=None, v=None):
+        def entry(req, pos, h=None):
             e = {"uid": req.uid, "prompt": np.asarray(req.prompt, np.int32),
                  "max_new_tokens": req.max_new_tokens,
                  "output": list(req.output), "pos": int(pos)}
             if pos:
-                e["k"], e["v"] = k, v
+                e["k"], e["v"] = h.k, h.v
+                if h.k_scale is not None:    # quantized pool: scales too
+                    e["k_scale"], e["v_scale"] = h.k_scale, h.v_scale
             return e
 
         for i, req in enumerate(self.slots):
@@ -1263,9 +1286,9 @@ class BatchedServer:
             with self._mesh_ctx():
                 h = self.swapper.swap_out(self.cache, pids)
             self.swapper.release(h)     # accounting-neutral read-out
-            seqs.append(entry(req, pos, h.k, h.v))
+            seqs.append(entry(req, pos, h))
         for ps in self._preempted:
-            seqs.append(entry(ps.req, ps.pos, ps.handle.k, ps.handle.v))
+            seqs.append(entry(ps.req, ps.pos, ps.handle))
         for req in self._backlog:
             seqs.append(entry(req, 0))
         seqs.sort(key=lambda e: e["uid"])
@@ -1292,9 +1315,13 @@ class BatchedServer:
             if int(s["pos"]):
                 k = np.asarray(s["k"])
                 v = np.asarray(s["v"])
+                ksc = (np.asarray(s["k_scale"]) if "k_scale" in s else None)
+                vsc = (np.asarray(s["v_scale"]) if "v_scale" in s else None)
+                arrs = [a for a in (k, v, ksc, vsc) if a is not None]
                 handle = SwapHandle(
                     page_count=k.shape[1], k=k, v=v,
-                    nbytes=(k.size + v.size) * k.dtype.itemsize)
+                    nbytes=sum(a.size * a.dtype.itemsize for a in arrs),
+                    k_scale=ksc, v_scale=vsc)
                 self.swapper.adopt(handle)
                 key = np.asarray(jax.device_get(self._req_key(req.uid)))
                 self._preempted.append(_Preempted(
@@ -1309,9 +1336,11 @@ class BatchedServer:
         if not self.paged:
             return memory.tree_bytes(self.cache)
         kp = self.cache["k_pages"]
+        sc = self.cache.get("k_scale")
         per_page = self.manager.bytes_per_page(
             kp.shape[3], kp.shape[4], kp.dtype.itemsize,
-            num_layers=kp.shape[0])
+            num_layers=kp.shape[0],
+            scale_itemsize=(sc.dtype.itemsize if sc is not None else 0))
         return self.manager.pages_in_use * per_page
 
     def kv_bytes_capacity(self) -> int:
