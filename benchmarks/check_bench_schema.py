@@ -29,7 +29,20 @@ gates the headline numbers so they cannot silently rot:
 * the ``preemption`` deep-queue scenario must show real preemption
   activity (>= 1 preemption AND resume, 0 sheds), bit-identical tokens,
   a clean allocator audit trail, and a shorter worst-case admission
-  wait than the no-preemption server.
+  wait than the no-preemption server;
+* the ``disagg`` interference scenario must show the async prefill
+  engine earning its keep: worst-case decode stall <= 1 block vs >= 3
+  for monolithic admission, tokens bit-identical at temperature 0.0 AND
+  0.7, and ``server_disagg`` steady throughput >= 0.95x
+  ``server_paged``;
+* ``server_paged_fp8`` tokens/s must stay >= 0.8x ``server_paged``
+  (the fp8 gather/dequant cliff must not come back).
+
+Throughput-RATIO floors bind only on single-device runs: the forced
+multi-device CPU job timeshares one physical core across its virtual
+devices, so relative tokens/s between server variants is scheduler
+noise there — its deterministic gates (identity, stall/wait block
+counts, collective bytes, ledger invariants) still apply in full.
 
 Exits nonzero with a readable message on any violation.
 """
@@ -43,12 +56,12 @@ TOP_KEYS = {
     "model", "batch", "prompt", "new_tokens", "block_size", "max_seq",
     "tokens_per_s", "speedup_block_vs_per_token",
     "paged_vs_dense_tokens_identical", "kv_memory", "kv_quant",
-    "pipeline", "prefix_cache", "sharded", "preemption", "tiers",
-    "tiers_peak", "attention_scaling",
+    "pipeline", "prefix_cache", "sharded", "preemption", "disagg",
+    "tiers", "tiers_peak", "attention_scaling",
 }
 TOKENS_PER_S_KEYS = {"per_token_dense", "block_dense", "server_dense",
                      "server_paged", "server_paged_q8",
-                     "server_paged_fp8"}
+                     "server_paged_fp8", "server_disagg"}
 KV_MEMORY_KEYS = {
     "page_size", "dense_slab_bytes", "paged_pool_capacity_bytes",
     "paged_hwm_bytes", "peak_live_tokens", "bytes_per_active_token_dense",
@@ -87,6 +100,17 @@ PREEMPTION_KEYS = {
     "drain_s_preempt", "drain_s_no_preempt",
     "tokens_identical_to_uncontended",
 }
+DISAGG_KEYS = {
+    "steady_new_tokens", "long_prompt", "long_new_tokens", "n_long",
+    "prefill_chunk_tokens", "handoffs", "prefill_chunks",
+    "decode_stall_blocks_max_monolithic", "decode_stall_blocks_max_disagg",
+    "decode_stall_blocks_total_monolithic",
+    "decode_stall_blocks_total_disagg",
+    "ttft_p50_blocks_monolithic", "ttft_p50_blocks_disagg",
+    "ttft_p99_blocks_monolithic", "ttft_p99_blocks_disagg",
+    "drain_s_monolithic", "drain_s_disagg",
+    "tokens_identical_t0", "tokens_identical_t07", "chunk_sweep",
+}
 TIER_KEYS = {"in_use_bytes", "hwm_bytes", "capacity_bytes", "by_class"}
 # server_paged may not drop below this fraction of server_dense (the
 # tentpole claim; headroom for CI timing noise)
@@ -96,6 +120,27 @@ PAGED_VS_DENSE_FLOOR = 0.95
 # the throughput back
 KV_QUANT_BYTES_CEIL = 0.55
 Q8_VS_PAGED_FLOOR = 0.9
+# fp8 pages gather through a uint8 bit-view + LUT dequant; this floor
+# keeps the fp8 serving cliff (0.64x bf16 before the fix) from coming
+# back via a slow-gather or slow-convert regression
+FP8_VS_PAGED_FLOOR = 0.8
+# the async prefill engine must not tax steady-state decode throughput
+DISAGG_VS_PAGED_FLOOR = 0.95
+
+
+def _timing_floors_apply(bench: dict) -> bool:
+    """Throughput-RATIO floors are gated only on single-device runs.
+    The forced-multi-device CI job (--require-sharded) timeshares one
+    physical core across 8 virtual devices, so relative tokens/s between
+    server variants is scheduler noise there — the deterministic gates
+    (token identity, stall/wait block counts, collective bytes, ledger
+    invariants) still apply in full.  The single-device smoke jobs keep
+    every ratio floor binding."""
+    return bench.get("sharded", {}).get("devices", 1) <= 1
+# worst-case decode stall (blocks) with/without disaggregation: the
+# interference headline — one chunk vs the whole mid-stream prompt
+DISAGG_STALL_CEIL = 1
+MONO_STALL_FLOOR = 3
 # accuracy envelope for the quantized-vs-bf16 comparison.  Greedy
 # decoding cascades — one flipped argmax rewrites the rest of the
 # sequence — so the GATE sits on the first-8-token agreement (the
@@ -136,6 +181,7 @@ def check(path: Path, *, require_sharded: bool = False) -> list[str]:
     errors.extend(_check_kv_quant(bench))
     errors.extend(_check_sharded(bench, require_multi=require_sharded))
     errors.extend(_check_preemption(bench))
+    errors.extend(_check_disagg(bench))
     errors.extend(_check_regressions(bench))
     return errors
 
@@ -219,6 +265,8 @@ def _check_kv_quant(bench: dict) -> list[str]:
                 f"kv_quant.{kd} max_abs_logit_err ({err!r}) exceeds "
                 f"{KV_QUANT_LOGIT_CEIL}")
     tps = bench.get("tokens_per_s", {})
+    if not _timing_floors_apply(bench):
+        return errors
     q8, paged = tps.get("server_paged_q8"), tps.get("server_paged")
     if isinstance(q8, (int, float)) and isinstance(paged, (int, float)) \
             and paged > 0 and q8 < Q8_VS_PAGED_FLOOR * paged:
@@ -226,6 +274,62 @@ def _check_kv_quant(bench: dict) -> list[str]:
             f"server_paged_q8 ({q8} tok/s) dropped below "
             f"{Q8_VS_PAGED_FLOOR}x server_paged ({paged} tok/s): fused "
             f"dequant gave the throughput back")
+    fp8 = tps.get("server_paged_fp8")
+    if isinstance(fp8, (int, float)) and isinstance(paged, (int, float)) \
+            and paged > 0 and fp8 < FP8_VS_PAGED_FLOOR * paged:
+        errors.append(
+            f"server_paged_fp8 ({fp8} tok/s) dropped below "
+            f"{FP8_VS_PAGED_FLOOR}x server_paged ({paged} tok/s): the "
+            f"fp8 gather/dequant cliff is back (pages must gather as a "
+            f"uint8 bit-view and dequantize through the LUT)")
+    return errors
+
+
+def _check_disagg(bench: dict) -> list[str]:
+    """The disaggregated prefill/decode scenario: bit-identity at both
+    temperatures, the one-chunk stall bound vs the monolithic
+    whole-prompt stall, and steady throughput within noise of the
+    monolithic paged server."""
+    dg = bench.get("disagg")
+    if not isinstance(dg, dict):
+        return ["disagg must be a mapping (the server_disagg scenario)"]
+    missing = DISAGG_KEYS - dg.keys()
+    if missing:
+        return [f"missing disagg keys: {sorted(missing)}"]
+    errors: list[str] = []
+    for flag in ("tokens_identical_t0", "tokens_identical_t07"):
+        if dg[flag] is not True:
+            errors.append(f"disagg {flag} must be true (the async engine "
+                          f"changed the tokens)")
+    stall_d = dg["decode_stall_blocks_max_disagg"]
+    stall_m = dg["decode_stall_blocks_max_monolithic"]
+    if not isinstance(stall_d, int) or stall_d > DISAGG_STALL_CEIL:
+        errors.append(
+            f"disagg decode_stall_blocks_max_disagg ({stall_d!r}) exceeds "
+            f"{DISAGG_STALL_CEIL}: chunked prefill is stalling decode for "
+            f"more than one chunk")
+    if not isinstance(stall_m, int) or stall_m < MONO_STALL_FLOOR:
+        errors.append(
+            f"disagg decode_stall_blocks_max_monolithic ({stall_m!r}) "
+            f"below {MONO_STALL_FLOOR}: the interference scenario is "
+            f"degenerate (long prompts never stalled the baseline)")
+    if not isinstance(dg["chunk_sweep"], dict) or not dg["chunk_sweep"]:
+        errors.append("disagg chunk_sweep must be a non-empty mapping")
+    for field in ("handoffs", "prefill_chunks"):
+        v = dg.get(field)
+        if not isinstance(v, int) or v < 1:
+            errors.append(f"disagg {field} must be an int >= 1, got {v!r}: "
+                          f"the engine never ran")
+    tps = bench.get("tokens_per_s", {})
+    dis, paged = tps.get("server_disagg"), tps.get("server_paged")
+    if _timing_floors_apply(bench) \
+            and isinstance(dis, (int, float)) \
+            and isinstance(paged, (int, float)) \
+            and paged > 0 and dis < DISAGG_VS_PAGED_FLOOR * paged:
+        errors.append(
+            f"server_disagg ({dis} tok/s) dropped below "
+            f"{DISAGG_VS_PAGED_FLOOR}x server_paged ({paged} tok/s): the "
+            f"async engine is taxing steady-state decode")
     return errors
 
 
@@ -311,6 +415,16 @@ def _check_sharded(bench: dict, *, require_multi: bool = False) -> list[str]:
                 f"model-axis collective bytes: the partial-sum "
                 f"all-reduce is missing from the decode executable")
     if shards >= 2:
+        # an EMPTY by-axis block at >= 2 shards means the HLO parser
+        # attributed no collectives at all — a dead mesh or a broken
+        # attribution, either way the wire-traffic record is vacuous
+        for key in ("collective_bytes_per_step_by_axis",
+                    "collective_bytes_per_token_by_axis"):
+            blk = sh.get(key)
+            if not isinstance(blk, dict) or not blk:
+                errors.append(
+                    f"sharded.{key} must be a non-empty per-axis mapping "
+                    f"at {shards} model shards, got {blk!r}")
         per_tok = sh.get("collective_bytes_per_token_by_axis", {})
         if not isinstance(per_tok, dict) or \
                 per_tok.get("model", 0) <= 0:
@@ -352,7 +466,9 @@ def _check_regressions(bench: dict) -> list[str]:
     errors: list[str] = []
     tps = bench.get("tokens_per_s", {})
     paged, dense = tps.get("server_paged"), tps.get("server_dense")
-    if isinstance(paged, (int, float)) and isinstance(dense, (int, float)) \
+    if _timing_floors_apply(bench) \
+            and isinstance(paged, (int, float)) \
+            and isinstance(dense, (int, float)) \
             and dense > 0 and paged < PAGED_VS_DENSE_FLOOR * dense:
         errors.append(
             f"server_paged ({paged} tok/s) dropped below "

@@ -159,13 +159,15 @@ def _measure_rounds(servers: list, submit_all) -> tuple[list[float], list]:
 
 
 def _serve_requests(cfg, params):
-    """Serve BATCH identical-shape requests through four interleaved
-    servers: dense slab, bf16 block pool, and the int8 / fp8 quantized
+    """Serve BATCH identical-shape requests through five interleaved
+    servers: dense slab, bf16 block pool, the int8 / fp8 quantized
     page pools (same requests, same params — kv_dtype only changes the
-    pool storage).  Returns ``(dts, outs, servers)`` in that order.
-    Each server gets a FRESH model: a server reports through its model's
-    orchestrator ledger, and two live servers on one model would share
-    (and overwrite) one kv_pool residency class."""
+    pool storage), and the disaggregated bf16 server (async prefill
+    engine + handoff adoption) on the same steady workload.  Returns
+    ``(dts, outs, servers)`` in that order.  Each server gets a FRESH
+    model: a server reports through its model's orchestrator ledger, and
+    two live servers on one model would share (and overwrite) one
+    kv_pool residency class."""
     def submit_all(server):
         rng = np.random.RandomState(5)
         return [server.submit(rng.randint(0, cfg.vocab, PROMPT)
@@ -173,12 +175,17 @@ def _serve_requests(cfg, params):
                               max_new_tokens=NEW_TOKENS)
                 for _ in range(BATCH)]
 
-    cfgs = [cfg, cfg,
-            dataclasses.replace(cfg, kv_dtype="int8"),
-            dataclasses.replace(cfg, kv_dtype="fp8_e4m3")]
+    variants = [
+        (cfg, {"paged": False}),
+        (cfg, {"paged": True}),
+        (dataclasses.replace(cfg, kv_dtype="int8"), {"paged": True}),
+        (dataclasses.replace(cfg, kv_dtype="fp8_e4m3"), {"paged": True}),
+        (cfg, {"paged": True, "prefill_async": True,
+               "prefill_chunk_tokens": BLOCK}),
+    ]
     servers = [BatchedServer(build_model(c), params, batch_size=BATCH,
-                             max_seq=MAX_SEQ, block_size=BLOCK, paged=p)
-               for c, p in zip(cfgs, (False, True, True, True))]
+                             max_seq=MAX_SEQ, block_size=BLOCK, **kw)
+               for c, kw in variants]
     dts, outs = _measure_rounds(servers, submit_all)
     return dts, outs, servers
 
@@ -233,9 +240,9 @@ def _kv_quant_block(cfg, params, prompts, servers, dts, outs,
     per active token (scales INCLUDED — true bytes, Table-4.3
     comparable), throughput vs the interleaved bf16 paged row, greedy
     token agreement, and the one-step max |Δlogit|."""
-    srv_paged, srv_q8, srv_fp8 = servers[1:]
-    dt_paged, dt_q8, dt_fp8 = dts[1:]
-    out_paged, out_q8, out_fp8 = outs[1:]
+    srv_paged, srv_q8, srv_fp8 = servers[1:4]
+    dt_paged, dt_q8, dt_fp8 = dts[1:4]
+    out_paged, out_q8, out_fp8 = outs[1:4]
     total = BATCH * NEW_TOKENS
     err = _kv_logit_err(cfg, params, prompts)
 
@@ -466,6 +473,102 @@ def _serve_preemption(cfg, params) -> dict:
     }
 
 
+DISAGG_LONG_PROMPT = 128      # the mid-stream arrival that stalls decode
+DISAGG_LONG_NEW = 8
+DISAGG_N_LONG = 2
+# staggered steady budgets: slots free at different blocks, so the long
+# prompts really do arrive MID-STREAM beside live decoders
+DISAGG_STEADY_NEW = (32, 64, 96, 96)
+
+
+def _serve_disagg(cfg, params) -> dict:
+    """Prefill/decode interference scenario: a steady decode batch with
+    two long prompts arriving mid-stream (they admit as slots free while
+    the rest of the batch is still decoding).  Monolithic admission
+    prefills each 128-token prompt in ONE synchronous dispatch between
+    decode blocks — a multi-block stall for every live slot; the
+    disaggregated server chunks the same prefill through the async
+    engine and hands the pages off, bounding the worst-case stall to
+    ``ceil(chunk / block)`` = 1 block.  Tokens must be bit-identical at
+    temperature 0.0 AND 0.7; the chunk-size sweep records the
+    stall-vs-overhead trade-off (smaller chunks = shorter stalls, more
+    dispatches)."""
+    def submit_all(server):
+        rng = np.random.RandomState(17)
+        reqs = [server.submit(rng.randint(0, cfg.vocab, PROMPT)
+                              .astype(np.int32), max_new_tokens=m)
+                for m in DISAGG_STEADY_NEW]
+        reqs += [server.submit(rng.randint(0, cfg.vocab, DISAGG_LONG_PROMPT)
+                               .astype(np.int32),
+                               max_new_tokens=DISAGG_LONG_NEW)
+                 for _ in range(DISAGG_N_LONG)]
+        return reqs
+
+    def serve(disagg: bool, temp: float, chunk: int = BLOCK):
+        kw = dict(batch_size=BATCH, max_seq=MAX_SEQ, block_size=BLOCK,
+                  paged=True, temperature=temp)
+        if disagg:
+            kw.update(prefill_async=True, prefill_chunk_tokens=chunk)
+        srv = BatchedServer(build_model(cfg), params, **kw)
+        reqs = submit_all(srv)
+        t0 = time.perf_counter()
+        srv.run_once()
+        dt = time.perf_counter() - t0
+        assert all(r.done.is_set() and r.error is None for r in reqs), \
+            [(r.uid, r.error) for r in reqs]
+        if disagg:
+            srv.manager.audit()
+            assert srv.manager.handoff_pages == 0, "leaked handoff pages"
+        return [tuple(r.output) for r in reqs], srv, dt
+
+    out_m0, srv_m0, dt_m = serve(False, 0.0)
+    out_d0, srv_d0, dt_d = serve(True, 0.0)
+    out_m7, _, _ = serve(False, 0.7)
+    out_d7, _, _ = serve(True, 0.7)
+    stall_mono = srv_m0.stats["decode_stall_blocks_max"]
+    stall_dis = srv_d0.stats["decode_stall_blocks_max"]
+    assert out_d0 == out_m0, "disaggregated serving diverged at temp 0.0"
+    assert out_d7 == out_m7, "disaggregated serving diverged at temp 0.7"
+    assert stall_mono >= 3, (stall_mono, srv_m0.stats)
+    assert stall_dis <= 1, (stall_dis, srv_d0.stats)
+    # chunk-size trade-off: stall bound vs prefill dispatch count
+    sweep = {}
+    for chunk in (BLOCK, 2 * BLOCK, DISAGG_LONG_PROMPT):
+        _, srv_c, dt_c = serve(True, 0.0, chunk=chunk)
+        sweep[str(chunk)] = {
+            "decode_stall_blocks_max": srv_c.stats[
+                "decode_stall_blocks_max"],
+            "prefill_chunks": srv_c.stats["prefill_chunks"],
+            "ttft_p50_blocks": srv_c.stats["ttft_p50_blocks"],
+            "ttft_p99_blocks": srv_c.stats["ttft_p99_blocks"],
+            "drain_s": round(dt_c, 3),
+        }
+    return {
+        "steady_new_tokens": list(DISAGG_STEADY_NEW),
+        "long_prompt": DISAGG_LONG_PROMPT,
+        "long_new_tokens": DISAGG_LONG_NEW,
+        "n_long": DISAGG_N_LONG,
+        "prefill_chunk_tokens": srv_d0.prefill.chunk_tokens,
+        "handoffs": srv_d0.stats["handoffs"],
+        "prefill_chunks": srv_d0.stats["prefill_chunks"],
+        "decode_stall_blocks_max_monolithic": stall_mono,
+        "decode_stall_blocks_max_disagg": stall_dis,
+        "decode_stall_blocks_total_monolithic": srv_m0.stats[
+            "decode_stall_blocks_total"],
+        "decode_stall_blocks_total_disagg": srv_d0.stats[
+            "decode_stall_blocks_total"],
+        "ttft_p50_blocks_monolithic": srv_m0.stats["ttft_p50_blocks"],
+        "ttft_p50_blocks_disagg": srv_d0.stats["ttft_p50_blocks"],
+        "ttft_p99_blocks_monolithic": srv_m0.stats["ttft_p99_blocks"],
+        "ttft_p99_blocks_disagg": srv_d0.stats["ttft_p99_blocks"],
+        "drain_s_monolithic": round(dt_m, 3),
+        "drain_s_disagg": round(dt_d, 3),
+        "tokens_identical_t0": out_d0 == out_m0,
+        "tokens_identical_t07": out_d7 == out_m7,
+        "chunk_sweep": sweep,
+    }
+
+
 def _attention_scaling(model) -> dict:
     """Per-decode-step attention read cost at several live sequence
     lengths: the dense slab always scans max_seq columns; the paged path
@@ -501,14 +604,17 @@ def run() -> list[str]:
     assert sync_new == NEW_TOKENS // BLOCK         # 1 host sync / block
 
     dts, outs, servers = _serve_requests(cfg, params)
-    dt_dense, dt_paged, dt_q8, dt_fp8 = dts
-    out_dense, out_paged, out_q8, out_fp8 = outs
+    dt_dense, dt_paged, dt_q8, dt_fp8, dt_disagg = dts
+    out_dense, out_paged, out_q8, out_fp8, out_disagg = outs
     srv_dense, srv_paged = servers[:2]
     assert out_paged == out_dense, \
         "paged serving must emit identical tokens to the dense cache"
+    assert out_disagg == out_paged, \
+        "disaggregated serving must emit identical tokens to monolithic"
     prefix = _serve_prefix(cfg, params)
     sharded = _serve_sharded(cfg, params, out_paged)
     preemption = _serve_preemption(cfg, params)
+    disagg = _serve_disagg(cfg, params)
 
     mgr = srv_paged.manager
     bytes_per_page = srv_paged.kv_bytes_capacity() // (mgr.num_pages)
@@ -522,6 +628,7 @@ def run() -> list[str]:
     tps_old, tps_new = total / dt_old, total / dt_new
     tps_dense, tps_paged = total / dt_dense, total / dt_paged
     tps_q8, tps_fp8 = total / dt_q8, total / dt_fp8
+    tps_disagg = total / dt_disagg
     kvq = _kv_quant_block(cfg, params, prompts, servers, dts, outs,
                           peak_tokens)
 
@@ -536,6 +643,7 @@ def run() -> list[str]:
             "server_paged": round(tps_paged, 1),
             "server_paged_q8": round(tps_q8, 1),
             "server_paged_fp8": round(tps_fp8, 1),
+            "server_disagg": round(tps_disagg, 1),
         },
         "speedup_block_vs_per_token": round(tps_new / tps_old, 2),
         "paged_vs_dense_tokens_identical": True,
@@ -582,6 +690,12 @@ def run() -> list[str]:
         # magnitude earlier than waiting on hog reclamation, with
         # bit-identical tokens and a clean allocator audit every block
         "preemption": preemption,
+        # disaggregated prefill/decode: mid-stream long-prompt arrivals
+        # stall monolithic decode for whole-prompt prefills; the async
+        # engine bounds the stall to one chunk with bit-identical tokens
+        # at temp 0.0 and 0.7 (steady throughput lands in tokens_per_s
+        # as server_disagg, interleave-measured against server_paged)
+        "disagg": disagg,
         # per-tier residency from the orchestrator's ledger: every tier
         # carries in_use_bytes / hwm_bytes / by_class (schema-checked in
         # CI).  ``tiers`` is the drained end state; ``tiers_peak`` is the
@@ -654,6 +768,15 @@ def run() -> list[str]:
         f"{preemption['max_admission_wait_blocks_no_preempt']}"
         f" wait_reduction={preemption['admission_wait_reduction']:.1%}"
         f" audits={preemption['audits']} identical_tokens=True",
+        f"server_disagg,{dt_disagg / NEW_TOKENS * 1e6:.0f},"
+        f"tok_s={tps_disagg:.0f}"
+        f" vs_paged={tps_disagg / tps_paged:.2f}x"
+        f" stall_blocks={disagg['decode_stall_blocks_max_disagg']}"
+        f" vs_monolithic={disagg['decode_stall_blocks_max_monolithic']}"
+        f" handoffs={disagg['handoffs']}"
+        f" chunks={disagg['prefill_chunks']}"
+        f" ttft_p50={disagg['ttft_p50_blocks_disagg']}"
+        f" identical_tokens=True",
         _continuous(model, params),
     ]
     return rows

@@ -134,6 +134,13 @@ class BlockManager:
         self.refcount: dict[int, int] = {}
         self._prefix_index: dict[bytes, int] = {}
         self._page_key: dict[int, bytes] = {}
+        # prefill->decode handoffs: pages detached from a prefill slot
+        # and parked under an opaque token until a decode slot adopts
+        # them.  Handoff pages are owned by NO slot but stay refcounted
+        # (the handoff IS the owner) — audit() treats each in-flight
+        # handoff as a pseudo-slot.
+        self._handoffs: dict[int, tuple[list[int], int]] = {}
+        self._next_handoff = 1
 
     # ----- capacity ---------------------------------------------------------
     @property
@@ -197,12 +204,12 @@ class BlockManager:
         (drives the fragmentation accounting; monotone per slot)."""
         self.lens[slot] = max(self.lens.get(slot, 0), tokens)
 
-    def free_slot(self, slot: int) -> None:
-        """Release every page owned by ``slot`` (EOS / eviction).  Pages
-        still referenced by another sharer survive; a page whose last
-        reference drops returns to the free list (LIFO) and leaves the
-        prefix index."""
-        for p in reversed(self.pages.pop(slot, [])):
+    def _release_pages(self, page_ids: list[int]) -> None:
+        """Drop one reference from each page (reverse order so LIFO
+        reuse favors hot pages).  Pages still referenced by another
+        sharer survive; a page whose last reference drops returns to the
+        free list and leaves the prefix index."""
+        for p in reversed(page_ids):
             rc = self.refcount.get(p, 1) - 1
             if rc > 0:
                 self.refcount[p] = rc
@@ -212,7 +219,54 @@ class BlockManager:
             key = self._page_key.pop(p, None)
             if key is not None:
                 self._prefix_index.pop(key, None)
+
+    def free_slot(self, slot: int) -> None:
+        """Release every page owned by ``slot`` (EOS / eviction)."""
+        self._release_pages(self.pages.pop(slot, []))
         self.lens.pop(slot, None)
+
+    # ----- prefill->decode handoffs ------------------------------------------
+    def detach_to_handoff(self, slot: int) -> int:
+        """Detach ``slot``'s pages into a handoff token: the slot
+        disappears, its pages keep their refcounts (ownership moves to
+        the handoff), and the returned token later rebinds them to a
+        decode slot via :meth:`adopt_from_handoff`.  This is the
+        allocator half of the prefill->decode page handoff — no page is
+        copied, freed, or reallocated across the engine boundary."""
+        if slot not in self.pages:
+            raise KeyError(f"slot {slot} owns no pages to hand off")
+        token = self._next_handoff
+        self._next_handoff += 1
+        self._handoffs[token] = (self.pages.pop(slot),
+                                 self.lens.pop(slot, 0))
+        return token
+
+    def adopt_from_handoff(self, slot: int, token: int) -> list[int]:
+        """Rebind a handoff's pages to a fresh decode ``slot`` (refcounts
+        unchanged — ownership transfers back from the handoff).  Returns
+        the page ids, now ``slot``'s table."""
+        if token not in self._handoffs:
+            raise KeyError(f"unknown handoff token {token}")
+        if self.pages.get(slot):
+            raise ValueError(
+                f"slot {slot} already owns pages; cannot adopt handoff")
+        pages, tokens = self._handoffs.pop(token)
+        self.pages[slot] = pages
+        if tokens:
+            self.note_tokens(slot, tokens)
+        return list(pages)
+
+    def release_handoff(self, token: int) -> None:
+        """Drop an in-flight handoff without adopting it (shed /
+        restore-into-snapshot): its pages lose the handoff's reference
+        exactly like :meth:`free_slot` releases a slot's."""
+        pages, _ = self._handoffs.pop(token, ([], 0))
+        self._release_pages(pages)
+
+    @property
+    def handoff_pages(self) -> int:
+        """Pages currently parked in prefill->decode handoffs."""
+        return sum(len(p) for p, _ in self._handoffs.values())
 
     # ----- prompt-prefix index ----------------------------------------------
     def register_prefix(self, key: bytes, page_id: int) -> None:
@@ -263,9 +317,11 @@ class BlockManager:
         equals its owner count across tables; free + allocated ==
         capacity; the prefix index and its page->key inverse agree and
         only reference live pages; recorded lengths fit their tables;
-        the high-water mark bounds current occupancy.  Called after
-        every decode block in the server's audit mode — the
-        race/corruption detector for the whole paged stack."""
+        the high-water mark bounds current occupancy.  In-flight
+        prefill->decode handoffs participate as pseudo-slots (owned by
+        no slot, refcounted by the handoff).  Called after every decode
+        block in the server's audit mode — the race/corruption detector
+        for the whole paged stack."""
         def fail(msg: str):
             raise BlockPoolAuditError(f"block-pool audit: {msg}")
 
@@ -277,7 +333,13 @@ class BlockManager:
         if bad:
             fail(f"free list holds out-of-range/null pages {sorted(bad)}")
         owners: dict[int, int] = {}
-        for slot, table in self.pages.items():
+        # in-flight prefill->decode handoffs are pseudo-slots: their
+        # pages are owned by no slot but must stay refcounted, in range,
+        # and disjoint from the free list until adopted or released
+        tables = list(self.pages.items()) + [
+            (f"handoff:{tok}", pages)
+            for tok, (pages, _) in self._handoffs.items()]
+        for slot, table in tables:
             if len(set(table)) != len(table):
                 fail(f"slot {slot} maps a page twice: {table}")
             for p in table:
@@ -310,6 +372,10 @@ class BlockManager:
             if n > cover:
                 fail(f"slot {slot} records {n} tokens but its table "
                      f"covers only {cover}")
+        for tok, (pages, n) in self._handoffs.items():
+            if n > len(pages) * self.page_size:
+                fail(f"handoff {tok} records {n} tokens but covers only "
+                     f"{len(pages) * self.page_size}")
         if self.hwm < self.pages_in_use:
             fail(f"hwm {self.hwm} < pages in use {self.pages_in_use}")
         if self.hwm > self.capacity:
@@ -317,7 +383,8 @@ class BlockManager:
                  f"exceeded the provisioned pool)")
         return {"pages_in_use": self.pages_in_use,
                 "free_pages": len(free), "slots": len(self.pages),
-                "shared_pages": self.shared_pages}
+                "shared_pages": self.shared_pages,
+                "handoff_pages": self.handoff_pages}
 
     # ----- accounting -------------------------------------------------------
     def bytes_per_page(self, kv_heads: int, head_dim: int,

@@ -15,6 +15,13 @@ Two halves:
   high-water residency per (tier, tensor class), fed by the
   orchestrator's placements, the block-pool manager and the expert
   pager, and dumped into ``BENCH_serve.json`` per tier.
+
+Remote-tier KV traffic posts under two tensor classes: ``"kv_swap"``
+(preemption stashes — pages evicted under pressure and restored later)
+and ``"kv_handoff"`` (the disaggregated prefill->decode staging buffer
+— completed prefill pages in flight between engines).  Keeping them
+separate lets the ledger answer "how much remote capacity does
+disaggregation itself need" independently of pressure behaviour.
 """
 from __future__ import annotations
 

@@ -480,6 +480,20 @@ class MemoryOrchestrator:
         return BlockPoolResidency(num_pages, page_size,
                                   ledger=self.ledger, **kwargs)
 
+    def staging_swapper(self, *, tensor_class: str = "kv_handoff",
+                        **kwargs):
+        """A ledger-connected :class:`repro.memory.swap.PageSwapper`
+        whose stash lines post under ``tensor_class`` (default
+        ``"kv_handoff"`` — the prefill->decode staging buffer in the
+        remote tier), keeping engine-handoff bytes separate from the
+        preemption swapper's ``"kv_swap"`` lines.  The engine boundary
+        runs entirely through this staging contract, so a later
+        multi-host deployment only has to re-point the transfer
+        functions at a real remote peer."""
+        from repro.memory.swap import PageSwapper
+        return PageSwapper(ledger=self.ledger, tensor_class=tensor_class,
+                           **kwargs)
+
     # ----- execution --------------------------------------------------------
     def layer_scan(self, body, carry, stacked_weights, xs=None, **kw):
         kw.setdefault("fetch_filter", self.weights_fetch_filter())

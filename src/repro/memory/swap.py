@@ -37,14 +37,33 @@ class SwapHandle:
     Quantized pools stash their per-slot dequant scales alongside the
     values (``k_scale``/``v_scale``, (L, n, page, Hkv)) so a restore is
     byte-for-byte the pages that were swapped out — the quantized
-    preemption bit-identity contract."""
+    preemption bit-identity contract.
+
+    A DEFERRED stash (``swap_out(..., defer=True)``) holds the staged
+    copy as device arrays behind ``_pull`` until someone actually reads
+    the bytes (snapshot serialization, swap-in) — callers touching
+    ``k``/``v`` directly must :meth:`materialize` first.  Accounting and
+    fault injection are NOT deferred: the stash's bytes joined the
+    remote-tier ledger line and its transfer slot fired when it was
+    created."""
 
     page_count: int
-    k: np.ndarray            # (L, n, page, Hkv, hd)
-    v: np.ndarray
+    k: np.ndarray | None     # (L, n, page, Hkv, hd)
+    v: np.ndarray | None
     nbytes: int
     k_scale: np.ndarray | None = None
     v_scale: np.ndarray | None = None
+    _pull: object = None     # () -> [k, v(, k_scale, v_scale)] host pull
+
+    def materialize(self) -> "SwapHandle":
+        """Resolve a deferred stash to host arrays (idempotent)."""
+        if self._pull is not None:
+            host = self._pull()
+            self.k, self.v = host[0], host[1]
+            if len(host) > 2:
+                self.k_scale, self.v_scale = host[2], host[3]
+            self._pull = None
+        return self
 
 
 def _bucket_pages(n: int, quantum: int = 4) -> int:
@@ -64,12 +83,15 @@ class PageSwapper:
     without copying it.
     """
 
-    tensor_class = "kv_swap"
-
     def __init__(self, *, ledger: MemoryLedger | None = None,
                  tier: str = tiers.REMOTE, retries: int = 3,
                  backoff_s: float = 0.001, timeout_s: float | None = None,
-                 monitor=None):
+                 monitor=None, tensor_class: str = "kv_swap"):
+        # "kv_swap" for preemption stashes; "kv_handoff" when the same
+        # gather/stash machinery stages prefill->decode page handoffs
+        # (see repro.runtime.prefill) — separate ledger lines so the two
+        # uses of the remote tier stay independently auditable
+        self.tensor_class = tensor_class
         self.ledger = ledger
         self.tier = tier
         self.retries = retries
@@ -82,6 +104,7 @@ class PageSwapper:
         self._stash_bytes = 0
         self._stash_hwm = 0
         self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
+        self._gather = jax.jit(self._gather_fn)
 
     # ----- ledger ------------------------------------------------------------
     def _record(self) -> None:
@@ -109,33 +132,70 @@ class PageSwapper:
                 self.retry_attempts += plan.failures - before
 
     # ----- swap out ----------------------------------------------------------
-    def swap_out(self, cache: dict, page_ids: list[int]) -> SwapHandle:
+    def _gather_fn(self, cache: dict, pids: jax.Array) -> list[jax.Array]:
+        """One fused dispatch for the whole stash gather (the un-jitted
+        per-pool ``jnp.take`` chain costs a device round trip per pool,
+        which dominates small swaps — e.g. every prefill handoff)."""
+        from repro.kernels.paged_attention.ref import gatherable_view
+
+        def take(pool):
+            # fp8 pools gather as a uint8 bit-view and bitcast back —
+            # bit-preserving, and it keeps the stash gather off XLA:CPU's
+            # ~8x-slower fp8 gather kernel
+            g = jnp.take(gatherable_view(pool), pids, axis=1)
+            if g.dtype != pool.dtype:
+                g = jax.lax.bitcast_convert_type(g, pool.dtype)
+            return g
+
+        out = [take(cache["k_pages"]), take(cache["v_pages"])]
+        if "k_scale" in cache:
+            out += [jnp.take(cache["k_scale"], pids, axis=1),
+                    jnp.take(cache["v_scale"], pids, axis=1)]
+        return out
+
+    def swap_out(self, cache: dict, page_ids: list[int],
+                 defer: bool = False) -> SwapHandle:
         """Gather ``page_ids`` from the stacked pools and stash them in
         the remote tier; raises :class:`tiers.TierTransferError` after
         the retry budget is exhausted (the caller's degradation policy —
-        shed the victim — takes over)."""
-        pids = jnp.asarray(page_ids, jnp.int32)
-        grab = [jnp.take(cache["k_pages"], pids, axis=1),
-                jnp.take(cache["v_pages"], pids, axis=1)]
+        shed the victim — takes over).
+
+        ``defer=True`` keeps the staged copy on device and postpones the
+        host byte movement until the stash is read (a handoff adopted
+        in-process releases it unread, so the hot path never pays the
+        pull).  The transfer SLOT is not deferred: seeded fault/latency
+        injection, the straggler monitor and the retry budget all fire
+        here, at the same schedule position as an eager swap."""
+        # bucket the gather width so the jitted executable is reused
+        # across nearby page counts (pad with the null page, slice the
+        # true count back out on the host)
+        n = len(page_ids)
+        b = _bucket_pages(n)
+        pids = jnp.asarray(list(page_ids) + [0] * (b - n), jnp.int32)
+        grab = self._gather(cache, pids)
         quant = "k_scale" in cache
-        if quant:
-            grab += [jnp.take(cache["k_scale"], pids, axis=1),
-                     jnp.take(cache["v_scale"], pids, axis=1)]
-        # per-array bytes: a quantized stash mixes int8/fp8 values with
-        # bf16 scales, so a single shared itemsize would misaccount
-        nbytes = sum(a.size * a.dtype.itemsize for a in grab)
+        # per-array bytes (true pages only): a quantized stash mixes
+        # int8/fp8 values with bf16 scales, so a single shared itemsize
+        # would misaccount
+        nbytes = sum(a.size // b * n * a.dtype.itemsize for a in grab)
 
         def pull():
-            return [np.asarray(a) for a in jax.device_get(grab)]
+            return [np.asarray(a[:, :n]) for a in jax.device_get(grab)]
 
-        host = self._transfer(pull, what="kv_swap_out", nbytes=nbytes)
+        if defer:
+            self._transfer(lambda: None, what="kv_swap_out", nbytes=nbytes)
+            handle = SwapHandle(page_count=n, k=None, v=None,
+                                nbytes=nbytes, _pull=pull)
+        else:
+            host = self._transfer(pull, what="kv_swap_out", nbytes=nbytes)
+            handle = SwapHandle(page_count=n, k=host[0], v=host[1],
+                                nbytes=nbytes,
+                                k_scale=host[2] if quant else None,
+                                v_scale=host[3] if quant else None)
         self.swap_outs += 1
         self._stash_bytes += nbytes
         self._record()
-        return SwapHandle(page_count=len(page_ids), k=host[0], v=host[1],
-                          nbytes=nbytes,
-                          k_scale=host[2] if quant else None,
-                          v_scale=host[3] if quant else None)
+        return handle
 
     # ----- swap in -----------------------------------------------------------
     def _scatter_fn(self, cache: dict, pids: jax.Array, k: jax.Array,
@@ -167,6 +227,7 @@ class PageSwapper:
         if len(page_ids) != handle.page_count:
             raise ValueError(f"swap_in got {len(page_ids)} pages for a "
                              f"{handle.page_count}-page stash")
+        handle.materialize()
         n = handle.page_count
         cap = _bucket_pages(max(n, 1))
         pids = np.zeros(cap, np.int32)

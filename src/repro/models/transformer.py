@@ -436,6 +436,29 @@ class DenseLM:
         x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
         return L.lm_head(params["embed"], x, cfg), cache
 
+    def prefill_paged_chunk(self, params: dict, tokens: jax.Array,
+                            cache: dict, done_pages: jax.Array,
+                            pages: jax.Array):
+        """Continue a CHUNKED prefill: process the next page-aligned
+        slice of the prompt against the request's own earlier chunks.
+
+        tokens: (B, S_chunk) prompt slice starting at position
+        ``done_pages.shape[1] * page``; done_pages: (B, n_done) pages
+        already filled by prior chunks of the SAME request; pages:
+        (B, n_new) fresh pages for this chunk.  This is exactly
+        :meth:`prefill_paged_prefix` with the "prefix" being the
+        request's own completed chunks instead of a shared prompt
+        prefix — same gather-dequant read of pool-resident KV, same
+        kv-roundtrip attention, so a prompt prefilled in page-aligned
+        chunks is **bit-identical** (logits and pool bytes) to one
+        monolithic :meth:`prefill_paged`.  The async prefill engine
+        (``repro.runtime.prefill``) leans on this to bound the work a
+        single dispatch injects ahead of decode.
+        Returns (last-position logits, cache).
+        """
+        return self.prefill_paged_prefix(params, tokens, cache,
+                                         done_pages, pages)
+
     def decode_step(self, params: dict, tokens: jax.Array, cache: dict,
                     cur_pos: jax.Array, extra: dict | None = None,
                     pages: jax.Array | None = None):

@@ -138,8 +138,12 @@ def jax_scalarize(metrics: dict) -> dict:
 def snapshot_server(server) -> dict:
     """Capture a server's in-flight serving state (see
     ``BatchedServer.snapshot``): every live / preempted / queued
-    sequence with its partial output, position and KV pages.  Call
-    between ``run_once`` calls (no block in flight)."""
+    sequence with its partial output, position and KV pages.  Under
+    async prefill (``prefill_async=True``) completed-but-unadopted
+    KV handoffs are serialized too (their staged remote-tier pages
+    ride along like preemption stashes), so a server killed
+    mid-handoff restores and finishes bit-identically.  Call between
+    ``run_once`` calls (no block in flight)."""
     return server.snapshot()
 
 

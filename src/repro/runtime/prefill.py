@@ -1,0 +1,269 @@
+"""Disaggregated prefill: an async prefill engine feeding the decode
+engine through KV page handoffs staged in the remote tier.
+
+Monolithic admission (``BatchedServer._admit``) prefills the whole
+prompt in one synchronous dispatch between decode blocks, so a long
+prompt arriving mid-stream stalls every live decode slot for the full
+prefill.  :class:`PrefillEngine` splits serving into two engines that
+communicate ONLY through KV pages:
+
+* The **prefill engine** drains the admission backlog asynchronously in
+  page-aligned chunks of ``chunk_tokens`` prompt tokens — each
+  scheduling round injects at most one chunk of prefill work ahead of
+  decode, bounding the decode stall to ``ceil(chunk / block_size)``
+  blocks regardless of prompt length.  Chunk continuations resume from
+  the request's own pool-resident earlier chunks
+  (:meth:`~repro.models.transformer.DenseLM.prefill_paged_chunk`), so a
+  chunked prompt is **bit-identical** — logits and pool bytes — to a
+  monolithic prefill.
+* A completed prefill becomes a transferable :class:`KVHandoff`: the
+  page ids (detached from the prefill's pseudo-slot into the
+  :class:`~repro.kernels.paged_attention.ops.BlockManager` handoff
+  registry — owned by no slot, refcounted by the handoff), the
+  quantized page bytes + scales staged through a ledger-accounted
+  remote-tier buffer (a ``"kv_handoff"``
+  :class:`~repro.memory.swap.PageSwapper`), the first sampled token and
+  the request's PRNG key.
+* The **decode engine** adopts ready handoffs into free slots with a
+  cheap bucketed-delta splice (ownership transfer + ``.at[slot]``
+  state writes — never a blocking prefill dispatch); the staged bytes
+  are released on adoption because the pages never left the shared
+  pool.  The engine boundary runs entirely through the staging
+  swapper's gather/scatter contract, so a multi-host deployment only
+  has to re-point those transfers at a real remote peer — the
+  scheduling, accounting and determinism story is already this one.
+
+Determinism: sampling stays a pure function of ``(seed, uid,
+position)`` — the engine samples the first token from
+``fold_in(req_key, plen)`` exactly like monolithic admission, and
+adoption installs ``req_key`` as the slot key at ``pos = plen`` exactly
+like a resume — so disaggregated tokens are bit-identical to the
+monolithic server at any temperature, including prefix-shared,
+quantized and tensor-parallel serving.
+
+Fairness: a prefill RESERVES its worst-case page count when it STARTS,
+and starts are strictly FIFO (the backlog head is never overtaken).
+Completions may land out of order — a later short prompt finishes in
+fewer chunks — but the earlier long prompt's pages are already
+reserved, so it can never be starved by the overtaker.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.memory import tiers as memtiers
+from repro.memory.swap import SwapHandle
+from repro.models.transformer import sample_tokens
+
+
+@dataclasses.dataclass
+class KVHandoff:
+    """A completed prefill in flight between the engines: everything the
+    decode engine needs to adopt the sequence without recomputing or
+    copying a single KV byte."""
+
+    req: object                      # runtime.serve.Request
+    plen: int                        # bucketed prompt length (positions)
+    token: int                       # BlockManager handoff-registry token
+    handle: SwapHandle               # staged page bytes in the remote tier
+    nxt: jax.Array                   # (1, 1) token sampled at
+                                     # fold_in(req_key, plen), device
+    key: jax.Array                   # (2,) uint32 per-request PRNG key
+    pslot: int                       # prefill pseudo-slot (reservation key)
+    pages: int                       # page count (stats)
+
+    @functools.cached_property
+    def first_token(self) -> int:
+        """Host view of the sampled token.  Materialized lazily (and
+        cached) so completing a prefill never blocks on the device —
+        the sync lands at adoption/snapshot time, after every queued
+        engine dispatch is already in flight."""
+        return int(jax.device_get(self.nxt)[0, 0])
+
+
+@dataclasses.dataclass
+class _InflightPrefill:
+    """A prefill in progress: chunk cursor over the padded prompt."""
+
+    req: object
+    slot: int                        # negative pseudo-slot id
+    toks: np.ndarray                 # (1, plen) left-padded prompt
+    plen: int
+    done: int                        # positions already in the pool
+    share: bool                      # publishing prefix pages on finish
+    key: jax.Array                   # per-request PRNG key (device)
+
+
+class PrefillEngine:
+    """Async chunked prefill engine sharing the decode server's model,
+    params, cache, page pool and reservation accounting.
+
+    Prefill work runs in pseudo-slots (negative ids ``-1000 - uid``) of
+    the shared :class:`BlockManager` — reservations live in the
+    server's ``_reserved`` dict under the pseudo-slot key, so the
+    admission/resume page gates and the pressure predicate see engine
+    demand exactly like live-slot demand.  ``pump_once`` advances ONE
+    chunk of one in-flight prefill (round-robin) per call; the server
+    calls it once per scheduling round while decode is live and loops
+    it freely when idle.
+    """
+
+    def __init__(self, server, *, chunk_tokens: int | None = None,
+                 max_inflight: int = 2):
+        self.srv = server
+        page = server.page_size
+        if chunk_tokens is None:
+            chunk_tokens = 4 * page
+        # page-aligned chunks keep every continuation boundary exact:
+        # a chunk's positions start where the previous chunk's pages end
+        self.chunk_tokens = max(page, (chunk_tokens // page) * page)
+        self.max_inflight = max_inflight
+        self.inflight: list[_InflightPrefill] = []
+        self.ready: collections.deque[KVHandoff] = collections.deque()
+        self._rr = 0
+        self.staging = server.mem.staging_swapper(
+            retries=server._swap_retries,
+            timeout_s=server._swap_timeout_s,
+            monitor=server.transfer_monitor)
+        model = server.model
+        vocab, temperature = model.cfg.vocab, server.temperature
+
+        def first_step(params, toks, cache, ptable, req_key, plen):
+            """First chunk: prefill into fresh pages; sample the
+            prompt's next token from fold_in(req_key, plen) — the SAME
+            rule as monolithic admission, so the sampled value is only
+            meaningful (and only used) when this chunk is the last."""
+            logits, cache = model.prefill_paged(params, toks, cache, ptable)
+            k = jax.random.fold_in(req_key, plen)
+            return sample_tokens(logits, vocab, temperature, k), cache
+
+        def cont_step(params, toks, cache, done_pages, new_pages, req_key,
+                      plen):
+            """Chunk continuation (also the prefix-shared first chunk —
+            adopted prefix pages ARE completed chunks): attend the
+            request's pool-resident earlier pages, write this chunk."""
+            logits, cache = model.prefill_paged_chunk(
+                params, toks, cache, done_pages, new_pages)
+            k = jax.random.fold_in(req_key, plen)
+            return sample_tokens(logits, vocab, temperature, k), cache
+
+        self._first_step = server.mem.donating_jit(first_step,
+                                                   donate_argnums=(2,))
+        self._cont_step = server.mem.donating_jit(cont_step,
+                                                  donate_argnums=(2,))
+
+    # ----- intake -------------------------------------------------------------
+    def start(self, req) -> None:
+        """Begin prefilling ``req`` (caller holds FIFO order and the
+        page gate): reserve its worst-case page count under the
+        pseudo-slot, adopt any shared prefix pages, set the chunk
+        cursor.  Reservation-at-start is the fairness anchor — once
+        started, a prefill can always finish and admit."""
+        srv = self.srv
+        slot = -1000 - req.uid
+        srv._reserved[slot] = srv._worst_pages(len(req.prompt),
+                                               req.max_new_tokens)
+        plen = srv._admit_plen(len(req.prompt), req.max_new_tokens)
+        toks = np.zeros((1, plen), np.int32)
+        toks[0, plen - len(req.prompt):] = req.prompt        # left-pad
+        share = srv.prefix_cache
+        if share and srv._under_pressure():
+            share = False
+            srv.stats["prefix_drops"] += 1
+        shared = srv._shared_prefix_pages(toks, plen) if share else []
+        if shared:
+            srv.manager.adopt(slot, shared)
+            srv.stats["prefix_hits"] += 1
+            srv.stats["prefix_shared_pages"] += len(shared)
+        self.inflight.append(_InflightPrefill(
+            req=req, slot=slot, toks=toks, plen=plen,
+            done=len(shared) * srv.page_size, share=share,
+            key=srv._req_key(req.uid)))
+
+    @property
+    def idle(self) -> bool:
+        return not self.inflight and not self.ready
+
+    # ----- pump ---------------------------------------------------------------
+    def pump_once(self, finished: list) -> bool:
+        """Advance ONE chunk of one in-flight prefill (round-robin);
+        True if a chunk was dispatched.  A completed prefill is staged
+        and moved to ``ready`` for the decode engine to adopt."""
+        if not self.inflight:
+            return False
+        srv = self.srv
+        inf = self.inflight[self._rr % len(self.inflight)]
+        self._rr += 1
+        chunk = min(self.chunk_tokens, inf.plen - inf.done)
+        try:
+            new_ids = srv.manager.ensure(inf.slot, inf.done + chunk)
+        except MemoryError:
+            # physically out of pages (injected exhaustion window):
+            # the reservation guarantees this clears — retry later
+            return False
+        srv._note_prefill_dispatch(chunk)
+        tchunk = jnp.asarray(inf.toks[:, inf.done:inf.done + chunk])
+        plen_s = jnp.asarray(inf.plen, jnp.int32)
+        with srv._mesh_ctx():
+            if inf.done == 0:
+                nxt, srv.cache = self._first_step(
+                    srv.params, tchunk, srv.cache,
+                    jnp.asarray([new_ids], jnp.int32), inf.key, plen_s)
+            else:
+                done_ids = srv.manager.slot_pages(
+                    inf.slot)[:inf.done // srv.page_size]
+                nxt, srv.cache = self._cont_step(
+                    srv.params, tchunk, srv.cache,
+                    jnp.asarray([done_ids], jnp.int32),
+                    jnp.asarray([new_ids], jnp.int32), inf.key, plen_s)
+        inf.done += chunk
+        srv.manager.note_tokens(inf.slot, inf.done)
+        srv.stats["prefill_chunks"] += 1
+        srv.kv.record()
+        srv._note_peak()
+        if inf.done >= inf.plen:
+            self._complete(inf, nxt, finished)
+        return True
+
+    def _complete(self, inf: _InflightPrefill, nxt, finished: list) -> None:
+        """Last chunk done: publish prefix pages, stage the page bytes
+        through the remote tier, detach the pages into the handoff
+        registry and queue the :class:`KVHandoff`."""
+        srv = self.srv
+        self.inflight.remove(inf)
+        req = inf.req
+        if inf.share:
+            srv._register_prefix(inf.toks, inf.plen, inf.slot)
+        pids = srv.manager.slot_pages(inf.slot)
+        try:
+            with srv._mesh_ctx():
+                # deferred: the staged copy stays on device until the
+                # handle is actually read (snapshot / real transport) —
+                # an in-process adoption releases it unread, so the
+                # steady-state path never pays the host round trip.
+                # Fault injection and accounting still fire HERE.
+                handle = self.staging.swap_out(srv.cache, pids, defer=True)
+        except memtiers.TierTransferError as e:
+            # degradation: the handoff could not be staged — shed the
+            # request with a structured error (the engines survive)
+            srv.manager.free_slot(inf.slot)
+            srv._reserved.pop(inf.slot, None)
+            req.error = {"reason": "handoff_stage_failed", "detail": str(e),
+                         "uid": req.uid, "tokens_emitted": 0}
+            req.done.set()
+            finished.append(req)
+            srv.stats["sheds"] += 1
+            srv.kv.record()
+            return
+        token = srv.manager.detach_to_handoff(inf.slot)
+        self.ready.append(KVHandoff(
+            req=req, plen=inf.plen, token=token, handle=handle,
+            nxt=nxt, key=inf.key, pslot=inf.slot, pages=len(pids)))
+        srv.stats["handoffs"] += 1
+        srv.kv.record()

@@ -98,6 +98,11 @@ class Request:
     # exhaustion with no victim).  ``done`` is set either way.
     error: dict | None = None
     admitted_at_block: int | None = None   # stats["blocks"] at admission
+    # TTFT instrumentation, in decode-block units (the server's clock):
+    # stats["blocks"] when the request entered the queue and when its
+    # first token was produced (admission prefill or handoff adoption)
+    submitted_block: int | None = None
+    first_token_block: int | None = None
 
 
 @dataclasses.dataclass
@@ -198,6 +203,17 @@ class BatchedServer:
     ``prefix_cache`` (default on, paged only) shares prompt-prefix pages
     across requests via per-page refcounts.
 
+    ``prefill_async`` (default off, paged only) disaggregates serving
+    into a prefill engine and a decode engine communicating only
+    through KV pages staged in the remote tier (see
+    :mod:`repro.runtime.prefill`): prompts prefill asynchronously in
+    page-aligned ``prefill_chunk_tokens`` chunks and finished prompts
+    are adopted as page handoffs, so a long prompt arriving mid-stream
+    stalls decode by at most one chunk instead of its whole length —
+    with bit-identical tokens at any temperature
+    (``stats["decode_stall_blocks_max"]`` /
+    ``stats["ttft_p50_blocks"]`` quantify the interference).
+
     ``mesh`` (default None = single device) turns on tensor-parallel
     serving: params are placed by ``runtime.sharding.named_shardings``
     over the model's ``serving_param_specs()`` (pageable groups in the
@@ -225,6 +241,11 @@ class BatchedServer:
     cross-placement bit-identity is traded away.
     """
 
+    # async prefill engine (repro.runtime.prefill.PrefillEngine) or None
+    # (monolithic admission); a class default so scheduler-only harness
+    # subclasses that skip __init__ resolve the monolithic path
+    prefill = None
+
     def __init__(self, model, params, *, batch_size: int = 4,
                  max_seq: int = 256, temperature: float = 0.0, seed: int = 0,
                  block_size: int = 8, eos_id: int | None = None,
@@ -233,7 +254,8 @@ class BatchedServer:
                  prefix_cache: bool = True, mesh=None, preempt: bool = True,
                  preempt_policy="lru", audit: bool | None = None,
                  swap_retries: int = 3, swap_timeout_s: float | None = None,
-                 deterministic: bool = True):
+                 deterministic: bool = True, prefill_async: bool = False,
+                 prefill_chunk_tokens: int | None = None):
         self.model = model
         self.batch = batch_size
         self.max_seq = max_seq
@@ -253,6 +275,11 @@ class BatchedServer:
         if paged is None:
             paged = getattr(model, "supports_paged_kv", lambda: False)()
         self.paged = bool(paged)
+        if prefill_async and not self.paged:
+            raise ValueError("prefill_async requires the paged KV cache "
+                             "(the engines hand off pool pages)")
+        self._prefill_async = bool(prefill_async)
+        self._prefill_chunk_tokens = prefill_chunk_tokens
         # the model's orchestrator (shared ledger: weight windows, expert
         # residency and KV pool report into one per-tier accounting);
         # models without one get a fresh plan from their config.
@@ -395,7 +422,39 @@ class BatchedServer:
                       "preempted_pages": 0, "pool_faults": 0,
                       "prefix_drops": 0, "swap_retries": 0,
                       "slow_transfers": 0, "audits": 0,
-                      "model_shards": self.mem.model_shards}
+                      "model_shards": self.mem.model_shards,
+                      "prefill_chunks": 0, "handoffs": 0,
+                      "decode_stall_blocks_max": 0,
+                      "decode_stall_blocks_total": 0,
+                      "ttft_p50_blocks": 0.0, "ttft_p99_blocks": 0.0}
+        # decode-stall accounting: prompt tokens dispatched synchronously
+        # ahead of pending decode work since the last decode dispatch —
+        # folded into decode_stall_blocks_* at the next dispatch
+        self._stall_tokens = 0
+        self._ttft_samples: list[int] = []
+        # disaggregated prefill/decode: the async prefill engine drains
+        # the backlog in chunks and hands finished prompts to decode as
+        # KV page handoffs (see repro.runtime.prefill)
+        self.prefill = None
+        if self._prefill_async:
+            from repro.runtime.prefill import PrefillEngine
+            self.prefill = PrefillEngine(
+                self, chunk_tokens=self._prefill_chunk_tokens)
+
+            def adopt_step(state, nxt, slot, plen, remaining, key):
+                """Handoff adoption splice, fused into one dispatch
+                (the un-jitted ``.at[].set`` chain costs ~5 tiny device
+                round trips per adoption — measurable at smoke scale)."""
+                return dataclasses.replace(
+                    state,
+                    tokens=state.tokens.at[slot, 0].set(nxt[0, 0]),
+                    pos=state.pos.at[slot].set(plen),
+                    active=state.active.at[slot].set(True),
+                    remaining=state.remaining.at[slot].set(remaining),
+                    slot_keys=state.slot_keys.at[slot].set(key))
+
+            self._adopt_step = self.mem.donating_jit(adopt_step,
+                                                     donate_argnums=(0,))
 
     # ----- mesh plumbing -----------------------------------------------------
     def _mesh_ctx(self):
@@ -437,6 +496,7 @@ class BatchedServer:
                     f"only has {self.manager.capacity}")
         self._uid += 1
         req = Request(self._uid, prompt, max_new_tokens=max_new_tokens)
+        req.submitted_block = self.stats["blocks"]
         self.queue.put(req)
         return req
 
@@ -687,6 +747,7 @@ class BatchedServer:
                 new_ids = self.manager.ensure(slot, plen)
                 if shared:
                     suffix = toks[:, len(shared) * self.page_size:]
+                    self._note_prefill_dispatch(suffix.shape[1])
                     with self._mesh_ctx():
                         nxt, self.cache, self.state = self._admit_step_prefix(
                             self.params, jnp.asarray(suffix), self.cache,
@@ -699,6 +760,7 @@ class BatchedServer:
                     self.stats["prefix_shared_pages"] += len(shared)
                 else:
                     ptable = jnp.asarray([new_ids], jnp.int32)
+                    self._note_prefill_dispatch(plen)
                     with self._mesh_ctx():
                         nxt, self.cache, self.state = self._admit_step(
                             self.params, jnp.asarray(toks), self.cache,
@@ -711,6 +773,7 @@ class BatchedServer:
                 self.kv.record()
                 self._note_peak()
             else:
+                self._note_prefill_dispatch(plen)
                 with self._mesh_ctx():
                     nxt, self.cache, self.state = self._admit_step(
                         self.params, jnp.asarray(toks), self.cache,
@@ -726,6 +789,7 @@ class BatchedServer:
         req.admitted_at_block = self.stats["blocks"]
         first = int(jax.device_get(nxt)[0, 0])
         req.output.append(first)
+        self._record_first_token(req)
         self.stats["tokens"] += 1
         self.stats["admitted"] += 1
         if req.max_new_tokens <= 1 or (self.eos_id is not None
@@ -733,6 +797,7 @@ class BatchedServer:
             if self.paged:
                 self.manager.free_slot(slot)   # reclaim at once
                 self._reserved.pop(slot, None)
+                self.kv.record()    # ledger must track the reclaim
             req.done.set()
             return True
         self.slots[slot] = req
@@ -755,6 +820,9 @@ class BatchedServer:
             if not self._resume(ps, self._free_slots()[0], finished):
                 self._preempted.insert(0, ps)   # physically blocked
                 break
+        if self.prefill is not None:
+            self._async_admission(finished, allow_preempt)
+            return
         while True:
             free = self._free_slots()
             if not free:
@@ -784,6 +852,98 @@ class BatchedServer:
                 return
             if done_now:
                 finished.append(req)      # done at admission: slot stays free
+
+    # ----- disaggregated admission (async prefill engine) ---------------------
+    def _async_admission(self, finished: list[Request],
+                         allow_preempt: bool) -> None:
+        """Admission through the prefill engine: starts are strictly
+        FIFO behind the page gate, ONE prefill chunk advances per
+        scheduling round while decode work is pending (so a long prompt
+        never stalls decode for more than a chunk), and ready handoffs
+        are adopted into free slots.  With decode idle the loop pumps
+        freely — chunking costs nothing when there is nothing to
+        stall."""
+        eng = self.prefill
+        while True:
+            self._drain_queue()
+            started = False
+            while (self._backlog and len(eng.inflight) < eng.max_inflight
+                   and self._admission_pages_ready(self._backlog[0])):
+                eng.start(self._backlog.pop(0))
+                started = True
+            if (self._backlog and not started and allow_preempt
+                    and not self._admission_pages_ready(self._backlog[0])
+                    and self._try_preempt_for(self._backlog[0], finished)):
+                continue
+            progressed = eng.pump_once(finished)
+            if not self._can_dispatch() and (progressed or started):
+                # decode idle: finish the whole burst before adopting —
+                # the first adoption would make decode dispatchable and
+                # serialize the remaining prefills one chunk per block,
+                # ramping the batch one slot at a time.  Batching the
+                # burst here is exactly monolithic admission's timing
+                # (it too admits every queued request before decoding),
+                # and chunking costs nothing while nothing can stall.
+                continue
+            adopted = False
+            while eng.ready and self._free_slots():
+                self._adopt_handoff(eng.ready.popleft(),
+                                    self._free_slots()[0], finished)
+                adopted = True
+            if self._can_dispatch():
+                return               # decode work pending: yield to it
+            if not (progressed or adopted or started):
+                return               # engine drained or blocked
+
+    def _adopt_handoff(self, h, slot: int, finished: list[Request]) -> None:
+        """Decode-side adoption of a completed prefill: pure ownership
+        transfer — the handoff's pool-resident pages rebind to ``slot``
+        (their table lands in the next block's bucketed delta), the
+        staged remote-tier bytes are released, and the slot state is
+        spliced exactly like a resume at ``pos = plen``.  No prefill
+        compute, no KV copy, no blocking dispatch."""
+        req = h.req
+        self.manager.adopt_from_handoff(slot, h.token)
+        # worst-case reservation transfers from the prefill pseudo-slot
+        self._reserved[slot] = self._reserved.pop(
+            h.pslot, self._worst_pages(len(req.prompt), req.max_new_tokens))
+        self.prefill.staging.release(h.handle)
+        req.admitted_at_block = self.stats["blocks"]
+        req.output.append(h.first_token)
+        self._record_first_token(req)
+        self.stats["tokens"] += 1
+        self.stats["admitted"] += 1
+        if req.max_new_tokens <= 1 or (self.eos_id is not None
+                                       and h.first_token == self.eos_id):
+            self.manager.free_slot(slot)     # done at adoption
+            self._reserved.pop(slot, None)
+            req.done.set()
+            finished.append(req)
+            self.kv.record()
+            return
+        # adoption never touches the device page table — hold it aside
+        # so the splice executable is keyed on the state shape alone
+        # (same idiom as _admit), then run the fused one-dispatch splice
+        saved_pages = self.state.pages
+        if saved_pages is not None:
+            self.state = dataclasses.replace(self.state, pages=None)
+        try:
+            with self._mesh_ctx():
+                self.state = self._adopt_step(
+                    self.state, h.nxt, jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(h.plen, jnp.int32),
+                    jnp.asarray(req.max_new_tokens - 1, jnp.int32), h.key)
+        finally:
+            if saved_pages is not None and self.state.pages is None:
+                self.state = dataclasses.replace(self.state,
+                                                 pages=saved_pages)
+        self.slots[slot] = req
+        self._slot_pos[slot] = h.plen
+        self._planned[slot] = 0
+        self._sched_counter += 1
+        self._last_sched[slot] = self._sched_counter
+        self.kv.record()
+        self._note_peak()
 
     # ----- preemption & fault recovery ---------------------------------------
     def _victim_order(self, cands: list[int]) -> list[int]:
@@ -1031,6 +1191,37 @@ class BatchedServer:
     def _can_dispatch(self) -> bool:
         return any(self._live_remaining(i) > 0 for i in range(self.batch))
 
+    # ----- prefill/decode interference accounting -----------------------------
+    def _note_prefill_dispatch(self, ntokens: int) -> None:
+        """Record ``ntokens`` of synchronous prefill work dispatched
+        while decode work was pending: until the next decode block goes
+        out, those tokens ARE the decode stall.  Prefill with no decode
+        pending (engine warm-up, idle server) is free and not counted.
+        Device-work based, so the metric is deterministic."""
+        if self._can_dispatch():
+            self._stall_tokens += ntokens
+
+    def _fold_stall(self) -> None:
+        """At a decode dispatch, convert the accrued prefill tokens of
+        the preceding gap into stalled decode blocks (ceil in
+        block-size units) — the bench's worst-case interference gauge:
+        monolithic admission of a long prompt charges the whole prompt
+        to one gap; the async engine bounds every gap to one chunk."""
+        if self._stall_tokens:
+            stall = -(-self._stall_tokens // self.block_size)
+            self.stats["decode_stall_blocks_max"] = max(
+                self.stats["decode_stall_blocks_max"], stall)
+            self.stats["decode_stall_blocks_total"] += stall
+            self._stall_tokens = 0
+
+    def _record_first_token(self, req: Request) -> None:
+        """TTFT sample in decode-block units (queue entry -> first
+        token), aggregated into p50/p99 at the end of ``run_once``."""
+        req.first_token_block = self.stats["blocks"]
+        if req.submitted_block is not None:
+            self._ttft_samples.append(req.first_token_block
+                                      - req.submitted_block)
+
     # blocks a narrower bucketed width must persist before the table
     # shrinks: growth is immediate (an unmapped page would corrupt
     # decode), but shrinking only saves attention columns, so it waits
@@ -1124,6 +1315,7 @@ class BatchedServer:
             with self._mesh_ctx():
                 toks, valid, self.cache, self.state = self._decode_loop(
                     self.params, self.cache, self.state)
+        self._fold_stall()
         self.stats["dispatches"] += 1
         self.stats["blocks"] += 1
         self.stats["steps"] += self.block_size
@@ -1239,12 +1431,18 @@ class BatchedServer:
         if self.swapper is not None:
             self.stats["swap_retries"] = self.swapper.retry_attempts
         self.stats["slow_transfers"] = self.transfer_monitor.flags
+        if self._ttft_samples:
+            arr = np.asarray(self._ttft_samples, np.float64)
+            self.stats["ttft_p50_blocks"] = float(np.percentile(arr, 50))
+            self.stats["ttft_p99_blocks"] = float(np.percentile(arr, 99))
         return finished
 
     def _compiles(self) -> int:
         """Executables compiled across the serving hot path's jit entry
         points — the observable for the O(log) shape-bucketing claim."""
-        fns = (self._decode_loop, self._admit_step, self._admit_step_prefix)
+        fns = [self._decode_loop, self._admit_step, self._admit_step_prefix]
+        if self.prefill is not None:
+            fns += [self.prefill._first_step, self.prefill._cont_step]
         return sum(f._cache_size() for f in fns
                    if f is not None and hasattr(f, "_cache_size"))
 
@@ -1289,6 +1487,18 @@ class BatchedServer:
             seqs.append(entry(req, pos, h))
         for ps in self._preempted:
             seqs.append(entry(ps.req, ps.pos, ps.handle))
+        if self.prefill is not None:
+            # a completed handoff is a sequence at pos = plen whose only
+            # output is its first token — its staged stash serializes
+            # verbatim and restores through the resume path, finishing
+            # bit-identically; a mid-chunk prefill re-enters as backlog
+            # (prefill is deterministic, so recomputing it is exact)
+            for h in self.prefill.ready:
+                e = entry(h.req, h.plen, h.handle.materialize())
+                e["output"] = [h.first_token]
+                seqs.append(e)
+            for inf in self.prefill.inflight:
+                seqs.append(entry(inf.req, 0))
         for req in self._backlog:
             seqs.append(entry(req, 0))
         seqs.sort(key=lambda e: e["uid"])
@@ -1305,7 +1515,8 @@ class BatchedServer:
             raise ValueError(f"snapshot seed {snap['seed']} != server "
                              f"seed {self.seed} (tokens would diverge)")
         if any(r is not None for r in self.slots) or self._preempted \
-                or self._backlog or not self.queue.empty():
+                or self._backlog or not self.queue.empty() \
+                or (self.prefill is not None and not self.prefill.idle):
             raise ValueError("restore requires an idle server")
         self._uid = max(self._uid, int(snap["uid"]))
         for s in sorted(snap["sequences"], key=lambda e: e["uid"]):

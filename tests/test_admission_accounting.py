@@ -138,6 +138,7 @@ class _SchedHarness(BatchedServer):
         self.preempt_enabled = True
         self.preempt_policy = policy
         self.max_seq = MAX_SEQ
+        self.batch = batch
         self.manager = BlockManager(num_pages, PAGE)
         self.slots: list[Request | None] = [None] * batch
         self.queue: "queue_mod.Queue[Request]" = queue_mod.Queue()
@@ -146,6 +147,7 @@ class _SchedHarness(BatchedServer):
         self._reserved: dict[int, int] = {}
         self._last_sched = [0] * batch
         self._sched_counter = 0
+        self._planned = [0] * batch
         self.events: list[tuple[str, int]] = []
 
     # ----- fakes for the device-touching steps -----------------------------
@@ -215,6 +217,12 @@ class _SchedHarness(BatchedServer):
         for i, req in enumerate(self.slots):
             if req is not None:
                 assert len(self.manager.slot_pages(i)) <= self._reserved[i]
+        # ...and every in-flight prefill's pages by its pseudo-slot
+        # reservation, held in full from the moment it STARTED
+        if self.prefill is not None:
+            for inf in self.prefill.inflight:
+                assert len(self.manager.slot_pages(inf.slot)) \
+                    <= self._reserved[inf.slot], (inf.slot, self._reserved)
 
 
 def _run_churn(shapes: list[tuple[int, int]], schedule: list[int],
@@ -326,3 +334,231 @@ def test_resume_fifo_beats_backlog():
     assert len(admits_between) <= 1, ev
     assert all(u > victim for u in admits_between + later_admits), ev
     assert len(finished) == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# admission fairness under ASYNC prefill (the disaggregated engine)
+# ---------------------------------------------------------------------------
+
+class _HostPrefillEngine:
+    """Host-bookkeeping double of :class:`repro.runtime.prefill
+    .PrefillEngine` exposing the exact scheduling surface
+    ``_async_admission`` drives (``start`` / ``pump_once`` / ``ready``
+    / ``inflight`` / ``idle``) over the REAL BlockManager and the REAL
+    reservation dict — only the prefill dispatch and the staging
+    round-trip are faked."""
+
+    @dataclasses.dataclass
+    class _Inflight:
+        req: Request
+        slot: int
+        plen: int
+        done: int
+
+    @dataclasses.dataclass
+    class _Handoff:
+        req: Request
+        plen: int
+        token: int
+        pslot: int
+
+    def __init__(self, srv, *, chunk_tokens: int = PAGE, max_inflight=2):
+        import collections
+        self.srv = srv
+        self.chunk_tokens = chunk_tokens
+        self.max_inflight = max_inflight
+        self.inflight: list[_HostPrefillEngine._Inflight] = []
+        self.ready = collections.deque()
+        self._rr = 0
+
+    @property
+    def idle(self):
+        return not self.inflight and not self.ready
+
+    def start(self, req: Request) -> None:
+        srv = self.srv
+        slot = -1000 - req.uid
+        srv._reserved[slot] = srv._worst_pages(len(req.prompt),
+                                               req.max_new_tokens)
+        plen = srv._admit_plen(len(req.prompt), req.max_new_tokens)
+        self.inflight.append(self._Inflight(req, slot, plen, 0))
+        srv.events.append(("start", req.uid))
+
+    def pump_once(self, finished: list) -> bool:
+        if not self.inflight:
+            return False
+        srv = self.srv
+        inf = self.inflight[self._rr % len(self.inflight)]
+        self._rr += 1
+        chunk = min(self.chunk_tokens, inf.plen - inf.done)
+        try:
+            srv.manager.ensure(inf.slot, inf.done + chunk)
+        except MemoryError:
+            return False
+        inf.done += chunk
+        srv.manager.note_tokens(inf.slot, inf.done)
+        if inf.done >= inf.plen:
+            self.inflight.remove(inf)
+            tok = srv.manager.detach_to_handoff(inf.slot)
+            self.ready.append(self._Handoff(inf.req, inf.plen, tok,
+                                            inf.slot))
+            srv.events.append(("handoff", inf.req.uid))
+        return True
+
+
+class _AsyncSchedHarness(_SchedHarness):
+    """The REAL ``_async_admission`` loop (FIFO starts behind the page
+    gate, one pump per round, handoff adoption) over the host engine —
+    with only :meth:`_adopt_handoff`'s device splice faked."""
+
+    def __init__(self, *, chunk_tokens: int = PAGE, **kw):
+        super().__init__(**kw)
+        self.prefill = _HostPrefillEngine(self, chunk_tokens=chunk_tokens)
+
+    def _adopt_handoff(self, h, slot: int, finished: list) -> None:
+        self.manager.adopt_from_handoff(slot, h.token)
+        self._reserved[slot] = self._reserved.pop(h.pslot)
+        h.req.pos = h.plen
+        h.req.output.append(0)                       # first token
+        self.slots[slot] = h.req
+        self._sched_counter += 1
+        self._last_sched[slot] = self._sched_counter
+        self.events.append(("admit", h.req.uid))
+
+
+def _run_async_churn(shapes: list[tuple[int, int]], schedule: list[int],
+                     **kw) -> _AsyncSchedHarness:
+    srv = _AsyncSchedHarness(**kw)
+    pending = [Request(uid=u, prompt=np.zeros(p, np.int32),
+                       max_new_tokens=m)
+               for u, (p, m) in enumerate(shapes)
+               if p + max(m - 1, 0) <= MAX_SEQ]
+    for r in pending:
+        r.pos = 0
+    todo = list(pending)
+    finished: list[Request] = []
+    for op in schedule:
+        if op == 0 and todo:
+            srv.queue.put(todo.pop(0))
+        else:
+            srv.decode_tick(finished)
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+    while todo:
+        srv.queue.put(todo.pop(0))
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+    for _ in range(600):
+        if len(finished) == len(pending):
+            break
+        srv.decode_tick(finished)
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+    assert len(finished) == len(pending), (
+        f"starved: {len(finished)}/{len(pending)} finished, "
+        f"inflight={[i.req.uid for i in srv.prefill.inflight]}, "
+        f"ready={[h.req.uid for h in srv.prefill.ready]}, "
+        f"backlog={[r.uid for r in srv._backlog]}, events={srv.events}")
+    return srv
+
+
+@given(shapes=st.lists(st.tuples(st.integers(1, 12), st.integers(2, 12)),
+                       min_size=3, max_size=10),
+       schedule=st.lists(st.integers(0, 1), min_size=10, max_size=80))
+@settings(max_examples=40, deadline=None)
+def test_async_prefill_starts_stay_fifo_and_nothing_starves(shapes,
+                                                            schedule):
+    """Async-engine admission under churn: prefill STARTS are strictly
+    FIFO (the page gate never lets a younger request overtake the
+    backlog head), completions may land out of order, every request
+    still finishes, and the allocator + reservation invariants hold
+    after every step."""
+    srv = _run_async_churn(shapes, schedule)
+    starts = [uid for kind, uid in srv.events if kind == "start"]
+    assert starts == sorted(starts), srv.events
+    assert len(set(starts)) == len(starts)
+    assert srv.prefill.idle and not srv._preempted
+    # every started prefill handed off and adopted exactly once
+    for uid in starts:
+        kinds = [k for k, u in srv.events if u == uid]
+        assert kinds.count("handoff") == 1, srv.events
+        assert kinds.count("admit") == 1, srv.events
+
+
+def test_out_of_order_completion_cannot_starve_earlier_start():
+    """With decode work pending (one chunk per scheduling round), a
+    long prompt starts prefilling FIRST; a short one behind it
+    completes first and adopts the only free slot — the long prompt's
+    worst-case reservation (held since its start) must survive the
+    overtaking completion, so it always finishes."""
+    srv = _AsyncSchedHarness(batch=2, num_pages=40, chunk_tokens=PAGE)
+    finished: list[Request] = []
+    # a steady decoder keeps decode dispatchable for the whole churn —
+    # otherwise the idle-burst path batches both prefills before any
+    # adoption and there is no overtaking to observe
+    steady = Request(uid=9, prompt=np.zeros(2, np.int32),
+                     max_new_tokens=40)
+    steady.pos = 0
+    srv.queue.put(steady)
+    srv._admit_from_queue(finished, allow_preempt=True)
+    srv.check_invariants()
+    assert ("admit", 9) in srv.events and srv._can_dispatch()
+    long_req = Request(uid=0, prompt=np.zeros(24, np.int32),
+                       max_new_tokens=4)
+    short_req = Request(uid=1, prompt=np.zeros(4, np.int32),
+                        max_new_tokens=4)
+    for r in (long_req, short_req):
+        r.pos = 0
+        srv.queue.put(r)
+    long_pslot, long_worst = -1000, srv._worst_pages(24, 4)
+    # one chunk advances per round while decode is pending; the short
+    # prompt (1 chunk) completes long before the long one (6 chunks)
+    for _ in range(40):
+        if ("admit", 1) in srv.events:
+            break
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+        srv.decode_tick(finished)
+    starts = [u for k, u in srv.events if k == "start"]
+    assert starts == [9, 0, 1]                     # FIFO starts
+    # the short prompt overtook the long one to the handoff AND the
+    # slot...
+    assert ("handoff", 1) in srv.events
+    assert ("handoff", 0) not in srv.events    # long still mid-prefill
+    assert ("admit", 1) in srv.events
+    assert ("admit", 0) not in srv.events
+    # ...but the long prompt's start-time reservation is still pinned
+    # under its pseudo-slot at full worst case — the overtaker spent
+    # its own budget, not the head's
+    assert srv._reserved.get(long_pslot) == long_worst
+    while ("admit", 0) not in srv.events:
+        assert srv._reserved.get(long_pslot) == long_worst
+        srv.decode_tick(finished)
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+    for _ in range(200):
+        if len(finished) == 3:
+            break
+        srv.decode_tick(finished)
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+    assert {r.uid for r in finished} == {0, 1, 9}, srv.events
+
+
+@given(shapes=st.lists(st.tuples(st.integers(1, 12), st.integers(2, 12)),
+                       min_size=3, max_size=8),
+       schedule=st.lists(st.integers(0, 1), min_size=10, max_size=60),
+       policy=st.sampled_from(["fewest_pages", "lowest_progress"]))
+@settings(max_examples=15, deadline=None)
+def test_async_prefill_fairness_holds_under_preemption(shapes, schedule,
+                                                       policy):
+    """Preemption churn + async engine: victim selection changes who
+    pays for the head's pages, never the FIFO start order — and every
+    victim resumes."""
+    srv = _run_async_churn(shapes, schedule, policy=policy)
+    starts = [uid for kind, uid in srv.events if kind == "start"]
+    assert starts == sorted(starts), srv.events
+    assert not srv._preempted
+    for uid in {u for k, u in srv.events if k == "preempt"}:
+        kinds = [k for k, u in srv.events if u == uid]
+        assert kinds.count("resume") == kinds.count("preempt"), srv.events

@@ -1,0 +1,339 @@
+"""Disaggregated prefill/decode serving: the async prefill engine
+(``prefill_async=True``) must be a pure scheduling change — tokens
+BIT-IDENTICAL to the monolithic server at any temperature, including
+prefix-shared, quantized (int8/fp8) and tensor-parallel serving — while
+bounding decode interference to one prefill chunk, keeping the block
+pool auditable through the handoff registry, and surviving a
+kill-and-restore with handoffs in flight."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_config
+from repro.kernels.paged_attention.ops import BlockManager
+from repro.runtime import ft
+from repro.runtime.serve import BatchedServer
+
+PAGE = 4
+MAX_SEQ = 64
+CHUNK = 8          # two pages per prefill chunk
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("qwen2.5-14b").reduced()
+    cfg = dataclasses.replace(cfg, remat=False, page_size=PAGE)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _server(tiny_model, *, disagg=False, **kw):
+    model, params = tiny_model
+    kw.setdefault("batch_size", 3)
+    kw.setdefault("max_seq", MAX_SEQ)
+    kw.setdefault("page_size", PAGE)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("audit", True)
+    if disagg:
+        kw.setdefault("prefill_async", True)
+        kw.setdefault("prefill_chunk_tokens", CHUNK)
+    return BatchedServer(model, params, **kw)
+
+
+def _drive(server, reqs, max_rounds=60):
+    finished = []
+    for _ in range(max_rounds):
+        finished += server.run_once()
+        if all(r.done.is_set() for r in reqs):
+            return finished
+    raise AssertionError(
+        f"requests stuck: {[(r.uid, r.done.is_set()) for r in reqs]}")
+
+
+def _submit_mixed(server):
+    """Short, long (multi-chunk), tiny and page-unaligned prompts plus a
+    done-at-adoption request (max_new=1)."""
+    rng = np.random.default_rng(0)
+    shapes = [(6, 8), (24, 6), (3, 10), (13, 6), (9, 1)]
+    return [server.submit(rng.integers(1, 500, size=p).astype(np.int32),
+                          max_new_tokens=m) for p, m in shapes]
+
+
+def _check_drained(srv):
+    srv.manager.audit()
+    assert srv.manager.handoff_pages == 0
+    assert srv.prefill.idle
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: disaggregated == monolithic
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("temp", [0.0, 0.7])
+def test_disagg_bit_identical(tiny_model, temp):
+    ref_srv = _server(tiny_model, temperature=temp)
+    ref = _submit_mixed(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(tiny_model, disagg=True, temperature=temp)
+    got = _submit_mixed(srv)
+    _drive(srv, got)
+    assert srv.stats["handoffs"] >= 4          # max_new=1 dies at adoption
+    assert srv.stats["prefill_chunks"] > srv.stats["handoffs"]  # chunked
+    for a, b in zip(ref, got):
+        assert a.output == b.output, (temp, a.uid, a.output, b.output)
+        assert b.error is None
+        assert b.first_token_block is not None
+        assert b.submitted_block is not None
+    assert srv.stats["ttft_p50_blocks"] >= 0.0
+    assert srv.stats["audits"] > 0
+    _check_drained(srv)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8_e4m3"])
+def test_disagg_quantized_bit_identical(kv_dtype):
+    """Handoffs carry quantized page bytes + scales; adoption must not
+    perturb a single bit of either."""
+    cfg = get_config("qwen2.5-14b").reduced()
+    cfg = dataclasses.replace(cfg, remat=False, page_size=PAGE,
+                              kv_dtype=kv_dtype)
+    model = build_model(cfg)
+    tm = (model, model.init(jax.random.PRNGKey(0)))
+    ref_srv = _server(tm, temperature=0.7)
+    ref = _submit_mixed(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(tm, disagg=True, temperature=0.7)
+    got = _submit_mixed(srv)
+    _drive(srv, got)
+    assert [r.output for r in ref] == [r.output for r in got]
+    _check_drained(srv)
+
+
+def test_disagg_prefix_shared_bit_identical(tiny_model):
+    """Prefix-shared prompts: the engine adopts the shared pages as
+    already-completed chunks and prefills only the suffix — the
+    published pages and the tokens must match monolithic admission."""
+    sys_toks = np.arange(3, 15, dtype=np.int32)        # 3 whole pages
+
+    def submit_all(server):
+        return [server.submit(
+            np.concatenate([sys_toks, np.asarray([50 + i, 60 + i],
+                                                 np.int32)]),
+            max_new_tokens=12) for i in range(3)]
+
+    ref_srv = _server(tiny_model, temperature=0.7, prefix_cache=True)
+    ref = submit_all(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(tiny_model, disagg=True, temperature=0.7,
+                  prefix_cache=True)
+    got = submit_all(srv)
+    _drive(srv, got)
+    assert srv.stats["prefix_hits"] >= 1
+    assert srv.stats["prefix_shared_pages"] >= 3
+    assert [r.output for r in ref] == [r.output for r in got]
+    _check_drained(srv)
+
+
+def test_prefill_async_requires_paged(tiny_model):
+    model, params = tiny_model
+    with pytest.raises(ValueError, match="paged"):
+        BatchedServer(model, params, paged=False, prefill_async=True)
+
+
+# ---------------------------------------------------------------------------
+# interference: one chunk bounds the decode stall
+# ---------------------------------------------------------------------------
+
+def test_decode_stall_bounded_by_chunk(tiny_model):
+    """A long prompt arriving beside live decoders stalls monolithic
+    decode for the whole prefill but the async engine for at most one
+    chunk (= one block here)."""
+    def submit_all(server):
+        rng = np.random.default_rng(1)
+        reqs = [server.submit(rng.integers(1, 500, size=4).astype(np.int32),
+                              max_new_tokens=24) for _ in range(2)]
+        reqs.append(server.submit(
+            rng.integers(1, 500, size=48).astype(np.int32),
+            max_new_tokens=4))
+        return reqs
+
+    mono = _server(tiny_model)
+    ref = submit_all(mono)
+    _drive(mono, ref)
+    assert mono.stats["decode_stall_blocks_max"] >= 3   # whole-prompt stall
+
+    srv = _server(tiny_model, disagg=True, prefill_chunk_tokens=4)
+    got = submit_all(srv)
+    _drive(srv, got)
+    assert srv.stats["decode_stall_blocks_max"] <= 1    # one chunk, ever
+    assert [r.output for r in ref] == [r.output for r in got]
+    _check_drained(srv)
+
+
+# ---------------------------------------------------------------------------
+# handoff registry: allocator invariants
+# ---------------------------------------------------------------------------
+
+def test_handoff_registry_audit_and_ownership():
+    m = BlockManager(12, PAGE)
+    m.ensure(0, 2 * PAGE)
+    m.note_tokens(0, 2 * PAGE)
+    pages = list(m.slot_pages(0))
+    with pytest.raises(KeyError):
+        m.detach_to_handoff(3)                  # slot owns nothing
+    tok = m.detach_to_handoff(0)
+    assert m.slot_pages(0) == []
+    assert m.handoff_pages == 2
+    m.audit()                                   # handoff pages are owned
+    assert m.audit()["handoff_pages"] == 2
+    m.ensure(1, PAGE)
+    with pytest.raises(ValueError):
+        m.adopt_from_handoff(1, tok)            # slot already owns pages
+    with pytest.raises(KeyError):
+        m.adopt_from_handoff(2, tok + 99)       # unknown token
+    assert m.adopt_from_handoff(2, tok) == pages
+    assert m.slot_pages(2) == pages
+    assert m.handoff_pages == 0
+    m.audit()
+    # release path: an abandoned handoff returns its pages to the pool
+    m.note_tokens(2, 2 * PAGE)
+    tok2 = m.detach_to_handoff(2)
+    free_before = m.capacity - m.pages_in_use
+    m.release_handoff(tok2)
+    assert m.capacity - m.pages_in_use == free_before + 2
+    m.audit()
+
+
+# ---------------------------------------------------------------------------
+# kill-and-restore with handoffs in flight
+# ---------------------------------------------------------------------------
+
+def test_kill_mid_handoff_restores_bit_identical(tiny_model, tmp_path):
+    """Snapshot a disaggregated server while the engine holds ready
+    (unadopted) handoffs and mid-chunk prefills; restore into a fresh
+    server: every sequence finishes with the monolithic run's tokens."""
+    def submit_all(server):
+        rng = np.random.default_rng(2)
+        # two long-lived decoders pin both slots; the multi-chunk
+        # prompts behind them complete with nowhere to go — parked
+        # handoffs the snapshot must catch in flight
+        shapes = [(4, 40), (4, 40), (14, 6), (12, 6)]
+        return [server.submit(rng.integers(1, 500, size=p).astype(np.int32),
+                              max_new_tokens=m) for p, m in shapes]
+
+    kw = dict(temperature=0.7, batch_size=2, num_pages=48)
+    ref_srv = _server(tiny_model, **kw)
+    ref = submit_all(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(tiny_model, disagg=True, **kw)
+    reqs = submit_all(srv)
+    early = []
+    for _ in range(12):           # stop as soon as a handoff is parked
+        early += srv.run_once(max_blocks=1)
+        if srv.prefill.ready:
+            break
+    assert srv.prefill.ready, "no ready handoff to kill mid-flight"
+    assert srv.manager.handoff_pages > 0
+    srv.manager.audit()           # registry pages audit while staged
+    snap = ft.snapshot_server(srv)
+    path = ft.save_server_snapshot(tmp_path / "disagg_ckpt", snap)
+    del srv                       # the "crash"
+
+    srv2 = _server(tiny_model, disagg=True, temperature=0.7, batch_size=2)
+    ft.restore_server(srv2, ft.load_server_snapshot(path))
+    finished = list(early)
+    for _ in range(60):
+        finished += srv2.run_once()
+        if len(finished) == len(reqs):
+            break
+    by_uid = {r.uid: r for r in finished}
+    assert len(by_uid) == len(ref)
+    for a in ref:
+        b = by_uid[a.uid]
+        assert a.output == b.output, (a.uid, a.output, b.output)
+        assert b.error is None
+    _check_drained(srv2)
+
+
+def test_restore_rejects_busy_prefill_engine(tiny_model):
+    """An engine with an in-flight prefill is NOT an idle server."""
+    srv = _server(tiny_model, disagg=True, batch_size=2)
+    srv.submit(np.arange(1, 30, dtype=np.int32), max_new_tokens=8)
+    srv._drain_queue()
+    srv.prefill.start(srv._backlog.pop(0))
+    assert not srv.prefill.idle
+    with pytest.raises(ValueError, match="idle"):
+        srv.restore({"seed": srv.seed, "uid": 0, "sequences": []})
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel disaggregation (subprocess: forced host devices)
+# ---------------------------------------------------------------------------
+
+SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys
+sys.path.insert(0, sys.argv[1])
+import dataclasses
+import jax, numpy as np
+from repro.configs import get_config, build_model
+from repro.launch.mesh import make_serving_mesh
+from repro.runtime.serve import BatchedServer
+
+cfg = get_config("qwen2.5-14b").reduced()
+cfg = dataclasses.replace(cfg, remat=False, page_size=4)
+params = build_model(cfg).init(jax.random.PRNGKey(0))
+
+def serve(mesh, disagg, temp):
+    kw = dict(batch_size=2, max_seq=64, block_size=4, page_size=4,
+              temperature=temp, mesh=mesh, audit=True)
+    if disagg:
+        kw.update(prefill_async=True, prefill_chunk_tokens=8)
+    srv = BatchedServer(build_model(cfg), params, **kw)
+    rng = np.random.default_rng(3)
+    reqs = [srv.submit(rng.integers(1, 500, size=p).astype(np.int32),
+                       max_new_tokens=m) for p, m in ((5, 8), (20, 6))]
+    for _ in range(60):
+        srv.run_once()
+        if all(r.done.is_set() for r in reqs):
+            break
+    srv.manager.audit()
+    assert srv.manager.handoff_pages == 0
+    return [tuple(r.output) for r in reqs], srv
+
+mesh = make_serving_mesh(model=2)
+for temp in (0.0, 0.7):
+    ref, _ = serve(None, False, temp)
+    got, srv = serve(mesh, True, temp)
+    assert srv.stats["model_shards"] == 2
+    assert srv.stats["handoffs"] >= 2
+    assert got == ref, (f"sharded disagg diverged (temp={temp}):\n"
+                        f"  mono ={ref}\n  disagg={got}")
+print("DISAGG_SHARDED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_disagg_sharded_bit_identical():
+    """2-shard TP disaggregated serving emits the single-device
+    monolithic server's exact tokens (handoff staging gathers sharded
+    pools through the same swapper contract as preemption)."""
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT, src],
+                         capture_output=True, text=True, timeout=600,
+                         env=env)
+    assert "DISAGG_SHARDED_OK" in out.stdout, \
+        out.stdout[-1500:] + out.stderr[-3000:]
