@@ -36,7 +36,12 @@ gates the headline numbers so they cannot silently rot:
   0.7, and ``server_disagg`` steady throughput >= 0.95x
   ``server_paged``;
 * ``server_paged_fp8`` tokens/s must stay >= 0.8x ``server_paged``
-  (the fp8 gather/dequant cliff must not come back).
+  (the fp8 gather/dequant cliff must not come back);
+* the ``overload`` admission-control scenario must show structured
+  rejections AND SLA expiries on the controlled server, every terminal
+  outcome summing to the offered load, zero leaked pages on both
+  servers, and the admitted p99 TTFT bounded by the declared block
+  ceiling while the uncontrolled baseline's tail is strictly worse.
 
 Throughput-RATIO floors bind only on single-device runs: the forced
 multi-device CPU job timeshares one physical core across its virtual
@@ -57,7 +62,7 @@ TOP_KEYS = {
     "tokens_per_s", "speedup_block_vs_per_token",
     "paged_vs_dense_tokens_identical", "kv_memory", "kv_quant",
     "pipeline", "prefix_cache", "sharded", "preemption", "disagg",
-    "tiers", "tiers_peak", "attention_scaling",
+    "overload", "tiers", "tiers_peak", "attention_scaling",
 }
 TOKENS_PER_S_KEYS = {"per_token_dense", "block_dense", "server_dense",
                      "server_paged", "server_paged_q8",
@@ -110,6 +115,18 @@ DISAGG_KEYS = {
     "ttft_p99_blocks_monolithic", "ttft_p99_blocks_disagg",
     "drain_s_monolithic", "drain_s_disagg",
     "tokens_identical_t0", "tokens_identical_t07", "chunk_sweep",
+}
+OVERLOAD_KEYS = {
+    "offered", "batch", "num_pages", "page_size", "new_tokens",
+    "max_pending", "overload_factor", "sla_probes", "deadline_blocks",
+    "ttft_p99_bound_blocks", "controlled", "uncontrolled",
+    "p99_ttft_bounded",
+}
+OVERLOAD_SIDE_KEYS = {
+    "completed", "rejected", "expired", "sheds",
+    "admitted_ttft_p50_blocks", "admitted_ttft_p99_blocks",
+    "e2e_p50_blocks", "e2e_p99_blocks", "audits", "leaked_pages",
+    "drain_s",
 }
 TIER_KEYS = {"in_use_bytes", "hwm_bytes", "capacity_bytes", "by_class"}
 # server_paged may not drop below this fraction of server_dense (the
@@ -182,6 +199,7 @@ def check(path: Path, *, require_sharded: bool = False) -> list[str]:
     errors.extend(_check_sharded(bench, require_multi=require_sharded))
     errors.extend(_check_preemption(bench))
     errors.extend(_check_disagg(bench))
+    errors.extend(_check_overload(bench))
     errors.extend(_check_regressions(bench))
     return errors
 
@@ -362,6 +380,74 @@ def _check_preemption(bench: dict) -> list[str]:
         errors.append(
             f"preemption must shorten the worst-case admission wait: "
             f"preempt={wp!r} blocks vs no_preempt={wn!r} blocks")
+    return errors
+
+
+def _check_overload(bench: dict) -> list[str]:
+    """The overload admission-control scenario: the controlled server
+    must have really rejected (structured, at submit time) AND expired
+    (SLA probe deadlines) while completing the credible offers, every
+    terminal outcome must be accounted for, both pools must drain to
+    zero pages, and the headline must hold — admitted p99 TTFT bounded
+    by the declared block ceiling while the uncontrolled queue's tail
+    is strictly worse."""
+    ov = bench.get("overload")
+    if not isinstance(ov, dict):
+        return ["overload must be a mapping (the serve_overload row)"]
+    missing = OVERLOAD_KEYS - ov.keys()
+    if missing:
+        return [f"missing overload keys: {sorted(missing)}"]
+    errors: list[str] = []
+    sides = {}
+    for name in ("controlled", "uncontrolled"):
+        side = ov.get(name)
+        if not isinstance(side, dict):
+            errors.append(f"overload.{name} must be a mapping")
+            continue
+        side_missing = OVERLOAD_SIDE_KEYS - side.keys()
+        if side_missing:
+            errors.append(f"overload.{name} missing {sorted(side_missing)}")
+            continue
+        sides[name] = side
+        total = sum(side[k] for k in ("completed", "rejected", "expired",
+                                      "sheds"))
+        if total != ov["offered"]:
+            errors.append(
+                f"overload.{name} outcome counts sum to {total}, not the "
+                f"offered load {ov['offered']}: a request fell through "
+                f"the lifecycle accounting")
+        if side["leaked_pages"] != 0:
+            errors.append(
+                f"overload.{name} leaked_pages must be 0 after the drain, "
+                f"got {side['leaked_pages']!r}")
+    if len(sides) < 2:
+        return errors
+    ctl, unc = sides["controlled"], sides["uncontrolled"]
+    for field, floor in (("completed", 1), ("rejected", 1), ("expired", 1),
+                         ("audits", 1)):
+        if not isinstance(ctl[field], int) or ctl[field] < floor:
+            errors.append(
+                f"overload.controlled {field} must be an int >= {floor}, "
+                f"got {ctl[field]!r}: the overload scenario is degenerate")
+    if unc["rejected"] != 0:
+        errors.append(
+            f"overload.uncontrolled rejected must be 0 (it is the "
+            f"no-gate baseline), got {unc['rejected']!r}")
+    p99_c = ctl["admitted_ttft_p99_blocks"]
+    p99_u = unc["admitted_ttft_p99_blocks"]
+    bound = ov["ttft_p99_bound_blocks"]
+    if not (isinstance(p99_c, (int, float)) and p99_c <= bound):
+        errors.append(
+            f"overload controlled admitted_ttft_p99_blocks ({p99_c!r}) "
+            f"exceeds the declared bound ({bound}): admission control "
+            f"stopped bounding the admitted tail")
+    if not (isinstance(p99_u, (int, float)) and p99_u > p99_c):
+        errors.append(
+            f"overload uncontrolled admitted_ttft_p99_blocks ({p99_u!r}) "
+            f"must exceed controlled ({p99_c!r}): the scenario no longer "
+            f"demonstrates queue-depth tail growth")
+    if ov["p99_ttft_bounded"] is not True:
+        errors.append("overload p99_ttft_bounded must be true")
     return errors
 
 

@@ -569,6 +569,120 @@ def _serve_disagg(cfg, params) -> dict:
     }
 
 
+OVERLOAD_PAGE = 4
+OVERLOAD_BLOCK = 8
+OVERLOAD_MAX_SEQ = 96
+OVERLOAD_NEW = 24
+# worst case per request: bucketed 8-token prompt + 23 decode tokens =
+# 31 tokens = 8 pages; capacity 16 = exactly two live slots' worth
+OVERLOAD_POOL = 17
+OVERLOAD_STEADY = 10          # steady offers beyond the two SLA probes
+OVERLOAD_MAX_PENDING = 4
+OVERLOAD_FACTOR = 2.0
+OVERLOAD_DEADLINE = 1         # blocks: the probes cannot finish in time
+# admitted-p99-TTFT ceiling (block units) for the CONTROLLED server:
+# max_pending bounds the backlog to one slot-generation behind the
+# live batch, so first tokens land within a few request drains
+OVERLOAD_TTFT_CEIL = 12.0
+
+
+def _serve_overload(cfg, params) -> dict:
+    """Overload admission-control scenario: twelve requests hit a
+    two-slot server whose pool holds exactly two worst cases.  The
+    UNCONTROLLED server queues everything — every request eventually
+    serves, but admitted tail TTFT grows with queue depth.  The
+    CONTROLLED server (``max_pending`` + ``overload_factor``) rejects
+    the uncredible offers at submit time with a structured error and
+    keeps the admitted tail bounded.  Two probes carry a 1-block SLA
+    deadline and must come back ``expired`` (cancelled mid-decode, pages
+    reclaimed).  Every terminal outcome is counted and the counts must
+    sum to the offered load; both pools drain to zero pages."""
+    def offer(server):
+        rng = np.random.RandomState(23)
+        reqs = [server.submit(rng.randint(0, cfg.vocab, PROMPT)
+                              .astype(np.int32),
+                              max_new_tokens=OVERLOAD_NEW,
+                              deadline_blocks=OVERLOAD_DEADLINE)
+                for _ in range(2)]
+        reqs += [server.submit(rng.randint(0, cfg.vocab, PROMPT)
+                               .astype(np.int32),
+                               max_new_tokens=OVERLOAD_NEW)
+                 for _ in range(OVERLOAD_STEADY)]
+        return reqs
+
+    def serve(controlled: bool):
+        kw = dict(batch_size=2, max_seq=OVERLOAD_MAX_SEQ,
+                  block_size=OVERLOAD_BLOCK, paged=True,
+                  page_size=OVERLOAD_PAGE, num_pages=OVERLOAD_POOL,
+                  audit=True)
+        if controlled:
+            kw.update(max_pending=OVERLOAD_MAX_PENDING,
+                      overload_factor=OVERLOAD_FACTOR)
+        srv = BatchedServer(build_model(cfg), params, **kw)
+        reqs = offer(srv)
+        t0 = time.perf_counter()
+        for _ in range(200):
+            srv.run_once()
+            if all(r.done.is_set() for r in reqs):
+                break
+        dt = time.perf_counter() - t0
+        assert all(r.done.is_set() for r in reqs), "overload run stuck"
+        srv.manager.audit()
+        s = srv.stats
+        counts = {o: sum(1 for r in reqs if r.outcome == o)
+                  for o in ("completed", "rejected", "expired", "shed")}
+        assert sum(counts.values()) == len(reqs), (counts, len(reqs))
+        assert counts["completed"] == s["completed"]
+        assert counts["rejected"] == s["rejected"]
+        assert counts["expired"] == s["expired"]
+        return reqs, srv, dt, counts
+
+    offered = 2 + OVERLOAD_STEADY
+    reqs_c, srv_c, dt_c, counts_c = serve(True)
+    reqs_u, srv_u, dt_u, counts_u = serve(False)
+    assert counts_c["rejected"] >= 1, counts_c
+    assert counts_c["completed"] >= 1, counts_c
+    assert counts_c["expired"] >= 1, counts_c
+    assert counts_u["rejected"] == 0, counts_u
+    for r in reqs_c:
+        if r.outcome == "rejected":
+            assert r.error["reason"] == "admission_rejected", r.error
+            assert len(r.output) == 0
+    p99_c = srv_c.stats["ttft_p99_blocks"]
+    p99_u = srv_u.stats["ttft_p99_blocks"]
+    assert p99_c <= OVERLOAD_TTFT_CEIL < p99_u, (p99_c, p99_u)
+    assert srv_c.manager.pages_in_use == 0
+    assert srv_u.manager.pages_in_use == 0
+
+    def side(srv, counts, dt):
+        return {
+            "completed": counts["completed"],
+            "rejected": counts["rejected"],
+            "expired": counts["expired"],
+            "sheds": counts["shed"],
+            "admitted_ttft_p50_blocks": srv.stats["ttft_p50_blocks"],
+            "admitted_ttft_p99_blocks": srv.stats["ttft_p99_blocks"],
+            "e2e_p50_blocks": srv.stats["e2e_p50_blocks"],
+            "e2e_p99_blocks": srv.stats["e2e_p99_blocks"],
+            "audits": srv.stats["audits"],
+            "leaked_pages": srv.manager.pages_in_use,
+            "drain_s": round(dt, 3),
+        }
+
+    return {
+        "offered": offered, "batch": 2,
+        "num_pages": OVERLOAD_POOL, "page_size": OVERLOAD_PAGE,
+        "new_tokens": OVERLOAD_NEW,
+        "max_pending": OVERLOAD_MAX_PENDING,
+        "overload_factor": OVERLOAD_FACTOR,
+        "sla_probes": 2, "deadline_blocks": OVERLOAD_DEADLINE,
+        "ttft_p99_bound_blocks": OVERLOAD_TTFT_CEIL,
+        "controlled": side(srv_c, counts_c, dt_c),
+        "uncontrolled": side(srv_u, counts_u, dt_u),
+        "p99_ttft_bounded": p99_c <= OVERLOAD_TTFT_CEIL,
+    }
+
+
 def _attention_scaling(model) -> dict:
     """Per-decode-step attention read cost at several live sequence
     lengths: the dense slab always scans max_seq columns; the paged path
@@ -615,6 +729,7 @@ def run() -> list[str]:
     sharded = _serve_sharded(cfg, params, out_paged)
     preemption = _serve_preemption(cfg, params)
     disagg = _serve_disagg(cfg, params)
+    overload = _serve_overload(cfg, params)
 
     mgr = srv_paged.manager
     bytes_per_page = srv_paged.kv_bytes_capacity() // (mgr.num_pages)
@@ -696,6 +811,12 @@ def run() -> list[str]:
         # at temp 0.0 and 0.7 (steady throughput lands in tokens_per_s
         # as server_disagg, interleave-measured against server_paged)
         "disagg": disagg,
+        # overload admission control: a 6x-oversubscribed offered load
+        # against the same two-slot pool with and without the gate —
+        # structured rejections and SLA expiries keep the admitted
+        # p99 TTFT bounded while the uncontrolled queue's tail grows
+        # with queue depth
+        "overload": overload,
         # per-tier residency from the orchestrator's ledger: every tier
         # carries in_use_bytes / hwm_bytes / by_class (schema-checked in
         # CI).  ``tiers`` is the drained end state; ``tiers_peak`` is the
@@ -709,6 +830,7 @@ def run() -> list[str]:
 
     km = bench["kv_memory"]
     pl = bench["pipeline"]
+    ov_c, ov_u = overload["controlled"], overload["uncontrolled"]
     rp = sharded["row_parallel"]
     rp_tps = rp["tokens_per_s_sharded"]
     rp_bytes = sum(rp["collective_bytes_per_token_by_axis"].values())
@@ -777,6 +899,15 @@ def run() -> list[str]:
         f" chunks={disagg['prefill_chunks']}"
         f" ttft_p50={disagg['ttft_p50_blocks_disagg']}"
         f" identical_tokens=True",
+        f"serve_overload,{ov_c['drain_s'] * 1e6:.0f},"
+        f"offered={overload['offered']}"
+        f" completed={ov_c['completed']}"
+        f" rejected={ov_c['rejected']}"
+        f" expired={ov_c['expired']}"
+        f" ttft_p99_admitted={ov_c['admitted_ttft_p99_blocks']}"
+        f" vs_uncontrolled={ov_u['admitted_ttft_p99_blocks']}"
+        f" bound={overload['ttft_p99_bound_blocks']}"
+        f" leaked_pages={ov_c['leaked_pages']}",
         _continuous(model, params),
     ]
     return rows

@@ -101,6 +101,7 @@ class PageSwapper:
         self.swap_outs = 0
         self.swap_ins = 0
         self.retry_attempts = 0      # failed attempts that were retried
+        self.live_handles = 0        # stashes created and not yet released
         self._stash_bytes = 0
         self._stash_hwm = 0
         self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
@@ -193,6 +194,7 @@ class PageSwapper:
                                 k_scale=host[2] if quant else None,
                                 v_scale=host[3] if quant else None)
         self.swap_outs += 1
+        self.live_handles += 1
         self._stash_bytes += nbytes
         self._record()
         return handle
@@ -256,12 +258,23 @@ class PageSwapper:
         bytes join this swapper's remote-tier ledger line as if it had
         swapped them out itself."""
         self._stash_bytes += handle.nbytes
+        self.live_handles += 1
         self._record()
 
     def release(self, handle: SwapHandle) -> None:
-        """Drop a stash without restoring it (victim shed / restore into
-        a snapshot)."""
+        """Drop a stash without restoring it (victim shed / expired
+        deadline or lease / restore into a snapshot).  Idempotent: a
+        double release — e.g. the lease watchdog racing a snapshot —
+        is accounting-neutral."""
         if handle.nbytes:
             self._stash_bytes -= handle.nbytes
             handle.nbytes = 0
+            self.live_handles -= 1
             self._record()
+
+    @property
+    def outstanding_bytes(self) -> int:
+        """Stash bytes currently parked in the remote tier — the leak
+        gauge the chaos harness drives to zero after every reclamation
+        (ledger drift zero <=> this is zero after a drain)."""
+        return self._stash_bytes

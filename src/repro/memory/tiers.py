@@ -168,6 +168,16 @@ class FaultPlan:
     the armed block, steals every free page for ``exhaust_blocks``
     blocks — forcing a real mid-decode ``MemoryError`` and exercising
     the emergency-preemption recovery path.
+
+    ``crash_prefill_at_chunk`` / ``crash_adopt_at_block`` arm
+    **engine-crash injection** for disaggregated serving: the prefill
+    engine asks :meth:`take_prefill_crash` before every chunk dispatch
+    and, at the armed chunk, dies mid-prompt (its in-flight prefills
+    and un-adopted handoffs become orphans whose pool pages only the
+    server-side lease watchdog can reclaim); the decode engine asks
+    :meth:`take_adopt_crash` at every handoff adoption and, at the
+    armed block, drops the handoff mid-adoption — the staged pages
+    survive in the registry until the handoff's lease expires.
     """
 
     seed: int = 0
@@ -178,6 +188,8 @@ class FaultPlan:
     spike_s: float = 0.05
     exhaust_at_block: int | None = None
     exhaust_blocks: int = 2
+    crash_prefill_at_chunk: int | None = None
+    crash_adopt_at_block: int | None = None
 
     def __post_init__(self) -> None:
         self._rng = np.random.default_rng(self.seed)
@@ -185,6 +197,9 @@ class FaultPlan:
         self.failures = 0        # attempts failed
         self.spikes = 0          # attempts delayed
         self._exhaust_armed = self.exhaust_at_block is not None
+        self._prefill_chunks = 0
+        self._prefill_crash_armed = self.crash_prefill_at_chunk is not None
+        self._adopt_crash_armed = self.crash_adopt_at_block is not None
 
     def before_transfer(self, what: str, nbytes: int = 0) -> None:
         """Called by the transfer wrapper before each attempt; sleeps for
@@ -210,6 +225,26 @@ class FaultPlan:
         ``exhaust_blocks`` blocks)."""
         if self._exhaust_armed and block >= self.exhaust_at_block:
             self._exhaust_armed = False
+            return True
+        return False
+
+    def take_prefill_crash(self) -> bool:
+        """Counts prefill chunk dispatches; True exactly once, when the
+        armed chunk is about to go out (the prefill engine then dies
+        mid-prompt, orphaning its in-flight work)."""
+        self._prefill_chunks += 1
+        if (self._prefill_crash_armed
+                and self._prefill_chunks >= self.crash_prefill_at_chunk):
+            self._prefill_crash_armed = False
+            return True
+        return False
+
+    def take_adopt_crash(self, block: int) -> bool:
+        """True exactly once, at the armed decode block's handoff
+        adoption (the decode engine then drops the handoff mid-adoption
+        without rebinding its pages)."""
+        if self._adopt_crash_armed and block >= self.crash_adopt_at_block:
+            self._adopt_crash_armed = False
             return True
         return False
 

@@ -637,10 +637,12 @@ class DenseLM:
 
     def decode_loop(self, params: dict, cache: dict, state: DecodeState, *,
                     num_steps: int, temperature: float = 0.0,
-                    eos_id: int | None = None):
+                    eos_id: int | None = None,
+                    detect_nonfinite: bool = False):
         """Fused multi-step decode — see module-level :func:`decode_loop`."""
         return decode_loop(self, params, cache, state, num_steps=num_steps,
-                           temperature=temperature, eos_id=eos_id)
+                           temperature=temperature, eos_id=eos_id,
+                           detect_nonfinite=detect_nonfinite)
 
 
 def vocab_mask_logits(logits: jax.Array, vocab: int) -> jax.Array:
@@ -677,7 +679,7 @@ def sample_tokens_per_slot(logits: jax.Array, vocab: int, temperature: float,
 
 def decode_loop(model, params: dict, cache: dict, state: DecodeState, *,
                 num_steps: int, temperature: float = 0.0,
-                eos_id: int | None = None):
+                eos_id: int | None = None, detect_nonfinite: bool = False):
     """Fused on-device decode: ``num_steps`` tokens in ONE dispatch.
 
     A ``lax.scan`` over decode steps — any model exposing
@@ -704,6 +706,16 @@ def decode_loop(model, params: dict, cache: dict, state: DecodeState, *,
     (:func:`repro.memory.donating_jit`) so the KV cache is aliased in
     place across dispatches — the decode-side donation contract of
     :class:`repro.models.base.DecodeState`.
+
+    ``detect_nonfinite=True`` additionally emits a per-slot, per-step
+    **poison mask** (True where an *emitting* slot sampled from
+    non-finite logits — NaN/inf from corrupted KV or an overflowed
+    activation) between ``valid`` and ``cache`` in the return tuple:
+    ``(tokens, valid, poison, cache, state)``.  The serving harvest
+    uses it to shed ONLY the poisoned sequence instead of letting one
+    request's NaN silently corrupt a whole batch's sampled stream.
+    Slots that are inactive at a step are never flagged (their frozen
+    garbage is harmless by construction).
     """
     vocab = model.cfg.vocab
 
@@ -735,8 +747,16 @@ def decode_loop(model, params: dict, cache: dict, state: DecodeState, *,
         new_state = DecodeState(tokens=nxt, pos=pos, active=active,
                                 remaining=remaining, key=key, pages=st.pages,
                                 slot_keys=st.slot_keys)
-        return (cache, new_state), (nxt[:, 0], emitted)
+        out = (nxt[:, 0], emitted)
+        if detect_nonfinite:
+            bad = (~jnp.isfinite(logits).all(axis=(1, 2))) & emitted
+            out = out + (bad,)
+        return (cache, new_state), out
 
-    (cache, state), (toks, valid) = jax.lax.scan(
+    (cache, state), outs = jax.lax.scan(
         step, (cache, state), None, length=num_steps)
+    if detect_nonfinite:
+        toks, valid, bad = outs
+        return toks.T, valid.T, bad.T, cache, state
+    toks, valid = outs
     return toks.T, valid.T, cache, state

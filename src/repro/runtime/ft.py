@@ -173,6 +173,11 @@ def save_server_snapshot(path, snap: dict):
     seqs = []
     for i, s in enumerate(snap["sequences"]):
         entry = {k: s[k] for k in ("uid", "max_new_tokens", "output", "pos")}
+        # request-lifecycle metadata (arrival block, SLA deadline): a
+        # restarted server rebases these so remaining TTLs carry over
+        for k in ("submitted_block", "deadline_blocks"):
+            if s.get(k) is not None:
+                entry[k] = int(s[k])
         arrays[f"seq{i}_prompt"] = np.asarray(s["prompt"], np.int32)
         if s["pos"]:
             # quantized pools persist their dequant scales alongside the

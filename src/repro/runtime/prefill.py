@@ -77,6 +77,10 @@ class KVHandoff:
     key: jax.Array                   # (2,) uint32 per-request PRNG key
     pslot: int                       # prefill pseudo-slot (reservation key)
     pages: int                       # page count (stats)
+    # lease: stats["blocks"] value past which the staged pages may be
+    # reclaimed by the decode server's watchdog (an un-adopted handoff —
+    # e.g. its producer crashed — must not pin pool pages forever)
+    lease_expiry_block: int = 0
 
     @functools.cached_property
     def first_token(self) -> int:
@@ -124,6 +128,7 @@ class PrefillEngine:
         # a chunk's positions start where the previous chunk's pages end
         self.chunk_tokens = max(page, (chunk_tokens // page) * page)
         self.max_inflight = max_inflight
+        self.lease_blocks = getattr(server, "handoff_lease_blocks", 64)
         self.inflight: list[_InflightPrefill] = []
         self.ready: collections.deque[KVHandoff] = collections.deque()
         self._rr = 0
@@ -190,6 +195,24 @@ class PrefillEngine:
     def idle(self) -> bool:
         return not self.inflight and not self.ready
 
+    # ----- failure ------------------------------------------------------------
+    def crash(self) -> None:
+        """This engine's process dies mid-flight (injected via
+        ``FaultPlan.crash_prefill_at_chunk`` or called directly by the
+        chaos harness).  Its state moves to the decode server's
+        watchdog: in-flight prefills' partial pages are ORPHANS
+        (garbage — reclaimed and the victims retried immediately),
+        staged-but-unadopted handoffs keep their LEASE (complete,
+        adoptable pool state another engine might still take) and are
+        reclaimed only when it runs out."""
+        srv = self.srv
+        for inf in self.inflight:
+            srv._orphan_prefills.append((inf.slot, inf.req))
+        self.inflight.clear()
+        while self.ready:
+            srv._orphan_handoffs.append(self.ready.popleft())
+        srv.stats["engine_crashes"] += 1
+
     # ----- pump ---------------------------------------------------------------
     def pump_once(self, finished: list) -> bool:
         """Advance ONE chunk of one in-flight prefill (round-robin);
@@ -198,6 +221,13 @@ class PrefillEngine:
         if not self.inflight:
             return False
         srv = self.srv
+        plan = memtiers.active_fault_plan()
+        if plan is not None and plan.take_prefill_crash():
+            # the crash lands where the chunk would have: "mid-chunk"
+            # means the chunk's pages may be partially written — they
+            # are treated as garbage either way
+            self.crash()
+            return True
         inf = self.inflight[self._rr % len(self.inflight)]
         self._rr += 1
         chunk = min(self.chunk_tokens, inf.plen - inf.done)
@@ -256,14 +286,13 @@ class PrefillEngine:
             srv._reserved.pop(inf.slot, None)
             req.error = {"reason": "handoff_stage_failed", "detail": str(e),
                          "uid": req.uid, "tokens_emitted": 0}
-            req.done.set()
-            finished.append(req)
-            srv.stats["sheds"] += 1
+            srv._finalize(req, "shed", finished)
             srv.kv.record()
             return
         token = srv.manager.detach_to_handoff(inf.slot)
         self.ready.append(KVHandoff(
             req=req, plen=inf.plen, token=token, handle=handle,
-            nxt=nxt, key=inf.key, pslot=inf.slot, pages=len(pids)))
+            nxt=nxt, key=inf.key, pslot=inf.slot, pages=len(pids),
+            lease_expiry_block=srv.stats["blocks"] + self.lease_blocks))
         srv.stats["handoffs"] += 1
         srv.kv.record()

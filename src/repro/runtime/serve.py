@@ -93,9 +93,10 @@ class Request:
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
     output: list = dataclasses.field(default_factory=list)
     # structured degradation outcome: None on success, else a dict with
-    # at least {"reason", "detail"} when the server shed the request
-    # instead of completing it (unrecoverable tier fault / pool
-    # exhaustion with no victim).  ``done`` is set either way.
+    # at least {"reason", "detail"} when the server terminated the
+    # request instead of completing it (unrecoverable tier fault, pool
+    # exhaustion with no victim, admission rejection, expired deadline,
+    # poisoned logits).  ``done`` is set either way.
     error: dict | None = None
     admitted_at_block: int | None = None   # stats["blocks"] at admission
     # TTFT instrumentation, in decode-block units (the server's clock):
@@ -103,6 +104,16 @@ class Request:
     # first token was produced (admission prefill or handoff adoption)
     submitted_block: int | None = None
     first_token_block: int | None = None
+    # SLA deadline, in decode-block units relative to submitted_block:
+    # the request is cancelled at whatever lifecycle stage it is in —
+    # queued, backlogged, mid-prefill, mid-decode, preempted-and-swapped
+    # — once ``deadline_blocks`` blocks elapse without completion.
+    # None = no deadline.
+    deadline_blocks: int | None = None
+    # terminal outcome, stamped exactly once by BatchedServer._finalize:
+    # "completed" | "shed" | "rejected" | "expired" (None = in flight)
+    outcome: str | None = None
+    _pending_counted: bool = dataclasses.field(default=False, repr=False)
 
 
 @dataclasses.dataclass
@@ -137,8 +148,8 @@ def make_serve_step(model, *, temperature: float = 0.0) -> Callable:
 
 
 def make_decode_loop(model, *, block_size: int, temperature: float = 0.0,
-                     eos_id: int | None = None, donate: bool = True
-                     ) -> Callable:
+                     eos_id: int | None = None, donate: bool = True,
+                     detect_nonfinite: bool = False) -> Callable:
     """Jit the fused decode loop with the donation contract: the cache
     (arg 1) and decode state (arg 2) are consumed by every dispatch.
 
@@ -146,14 +157,21 @@ def make_decode_loop(model, *, block_size: int, temperature: float = 0.0,
     page-table updates applied to the device-resident table with ONE
     scatter before the block decodes — the host never re-transfers the
     whole table on the steady-state path.  Padding entries carry an
-    out-of-range column and are dropped by the scatter."""
+    out-of-range column and are dropped by the scatter.
+
+    ``detect_nonfinite=True`` (the server's setting) adds the per-slot
+    poison mask to the returned tuple — see
+    :func:`repro.models.transformer.decode_loop` — so a NaN in one
+    sequence's logits sheds that sequence at harvest instead of
+    silently corrupting its stream."""
     def loop(params, cache, state, delta=None):
         if delta is not None and state.pages is not None:
             d_slots, d_cols, d_pids = delta
             state = dataclasses.replace(
                 state, pages=state.pages.at[d_slots, d_cols].set(d_pids))
         return decode_loop(model, params, cache, state, num_steps=block_size,
-                           temperature=temperature, eos_id=eos_id)
+                           temperature=temperature, eos_id=eos_id,
+                           detect_nonfinite=detect_nonfinite)
     return memory.donating_jit(loop, donate_argnums=(1, 2) if donate else ())
 
 
@@ -242,9 +260,25 @@ class BatchedServer:
     """
 
     # async prefill engine (repro.runtime.prefill.PrefillEngine) or None
-    # (monolithic admission); a class default so scheduler-only harness
-    # subclasses that skip __init__ resolve the monolithic path
+    # (monolithic admission); class defaults so scheduler-only harness
+    # subclasses that skip __init__ resolve the monolithic / host-only
+    # paths (kv/manager/swapper are rebound by _init_live_state or the
+    # harness itself)
     prefill = None
+    kv = None
+    manager = None
+    swapper = None
+    # overload admission control (None = unbounded, the pre-SLA
+    # behavior): max_pending caps queued+backlogged requests;
+    # overload_factor caps the MemoryLedger-projected worst-case page
+    # demand (live reservations + pending) at overload_factor x pool
+    # capacity — beyond either, submit() returns a fast structured
+    # rejection instead of growing the queue
+    max_pending: int | None = None
+    overload_factor: float | None = None
+    # blocks a staged KVHandoff stays adoptable before the lease
+    # watchdog may reclaim its pages and re-enqueue the victim
+    handoff_lease_blocks: int = 64
 
     def __init__(self, model, params, *, batch_size: int = 4,
                  max_seq: int = 256, temperature: float = 0.0, seed: int = 0,
@@ -255,7 +289,10 @@ class BatchedServer:
                  preempt_policy="lru", audit: bool | None = None,
                  swap_retries: int = 3, swap_timeout_s: float | None = None,
                  deterministic: bool = True, prefill_async: bool = False,
-                 prefill_chunk_tokens: int | None = None):
+                 prefill_chunk_tokens: int | None = None,
+                 max_pending: int | None = None,
+                 overload_factor: float | None = None,
+                 handoff_lease_blocks: int = 64):
         self.model = model
         self.batch = batch_size
         self.max_seq = max_seq
@@ -269,9 +306,9 @@ class BatchedServer:
                                   else os.environ.get("REPRO_AUDIT") == "1")
         self._swap_retries = swap_retries
         self._swap_timeout_s = swap_timeout_s
-        self.queue: "queue.Queue[Request]" = queue.Queue()
-        self._backlog: list[Request] = []
-        self._uid = 0
+        self.max_pending = max_pending
+        self.overload_factor = overload_factor
+        self.handoff_lease_blocks = handoff_lease_blocks
         if paged is None:
             paged = getattr(model, "supports_paged_kv", lambda: False)()
         self.paged = bool(paged)
@@ -317,12 +354,71 @@ class BatchedServer:
             self.mem.bind_mesh(None)
             raise
 
+    def _init_sched_state(self, batch_size: int) -> None:
+        """Pure-host scheduler state: queues, reservations, outcome and
+        lifecycle bookkeeping, stats.  Split out of the device-touching
+        construction so the scheduler-only test harnesses (which skip
+        ``__init__`` and fake the device steps) initialize EXACTLY the
+        state the real scheduler methods touch — one source of truth
+        for what the scheduler needs."""
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self._backlog: collections.deque[Request] = collections.deque()
+        self._uid = 0
+        self._preempted: list[_Preempted] = []   # resume-FIFO
+        self._reserved: dict[int, int] = {}    # slot -> worst-case pages
+        self._planned = [0] * batch_size       # in-flight decode tokens
+        self._pool_fault = False       # mid-decode exhaustion latched
+        self._fault_release_block: int | None = None
+        self._fault_slot = -1          # phantom slot holding stolen pages
+        self._sched_counter = 0
+        self._last_sched = [0] * batch_size      # for the LRU policy
+        self._peak_pages = -1
+        self.tiers_peak: dict = {}
+        # request-lifecycle robustness state: slots whose harvest hit
+        # non-finite logits (slot -> poisoned request), orphaned prefill
+        # pseudo-slots and un-adopted handoffs left behind by an engine
+        # crash (reclaimed by the lease watchdog), and the admission-
+        # control view of not-yet-started demand
+        self._poisoned: dict[int, Request] = {}
+        self._orphan_prefills: list[tuple[int, Request]] = []
+        self._orphan_handoffs: list = []         # KVHandoff
+        self._pending_count = 0
+        self._pending_pages = 0
+        self._pending_lock = threading.Lock()
+        # decode-stall accounting: prompt tokens dispatched synchronously
+        # ahead of pending decode work since the last decode dispatch —
+        # folded into decode_stall_blocks_* at the next dispatch
+        self._stall_tokens = 0
+        self._ttft_samples: list[int] = []
+        self._e2e_samples: list[int] = []
+        self.stats = {"steps": 0, "tokens": 0, "batches": 0, "blocks": 0,
+                      "dispatches": 0, "admitted": 0, "host_syncs": 0,
+                      "kv_pages_in_use": 0, "kv_pages_hwm": 0,
+                      "compiles": 0, "table_rebuilds": 0,
+                      "table_delta_entries": 0, "prefix_hits": 0,
+                      "prefix_shared_pages": 0,
+                      "preemptions": 0, "resumes": 0, "sheds": 0,
+                      "preempted_pages": 0, "pool_faults": 0,
+                      "prefix_drops": 0, "swap_retries": 0,
+                      "slow_transfers": 0, "audits": 0,
+                      "model_shards": getattr(getattr(self, "mem", None),
+                                              "model_shards", 1),
+                      "prefill_chunks": 0, "handoffs": 0,
+                      "decode_stall_blocks_max": 0,
+                      "decode_stall_blocks_total": 0,
+                      "ttft_p50_blocks": 0.0, "ttft_p99_blocks": 0.0,
+                      "completed": 0, "rejected": 0, "expired": 0,
+                      "poison_sheds": 0, "engine_crashes": 0,
+                      "lease_reclaims": 0, "crash_requeues": 0,
+                      "e2e_p50_blocks": 0.0, "e2e_p99_blocks": 0.0}
+
     def _init_live_state(self, model, params, spec_fn, batch_size, max_seq,
                          seed, page_size, num_pages, pipeline, prefix_cache,
                          mesh) -> None:
         """Everything after the mesh is bound: placement, jit entry
         points, caches, slot state (split out so __init__ can unbind the
         mesh if any of it fails)."""
+        self._init_sched_state(batch_size)
         if spec_fn is not None:
             # serving placement: all-gather TP (output projections
             # replicated) so sharded tokens are bit-identical — see
@@ -335,7 +431,7 @@ class BatchedServer:
         self.prefix_cache = bool(prefix_cache)
         self._decode_loop = make_decode_loop(
             model, block_size=self.block_size, temperature=self.temperature,
-            eos_id=self.eos_id)
+            eos_id=self.eos_id, detect_nonfinite=True)
         self._admit_step = self.mem.donating_jit(self._make_admit_step(),
                                                  donate_argnums=(2, 3))
         self._admit_step_prefix = None
@@ -394,8 +490,6 @@ class BatchedServer:
             self.state = jax.device_put(self.state, replicated(mesh))
         self.slots: list[Request | None] = [None] * batch_size
         self._slot_pos = [0] * batch_size      # host mirror of state.pos
-        self._planned = [0] * batch_size       # in-flight decode tokens
-        self._reserved: dict[int, int] = {}    # slot -> worst-case pages
         # preemption / fault-recovery state (paged only)
         self.preempt_enabled = self._preempt_arg and self.paged
         self.transfer_monitor = StragglerMonitor(factor=3.0)
@@ -404,34 +498,6 @@ class BatchedServer:
                                     timeout_s=self._swap_timeout_s,
                                     monitor=self.transfer_monitor)
                         if self.paged else None)
-        self._preempted: list[_Preempted] = []   # resume-FIFO
-        self._pool_fault = False       # mid-decode exhaustion latched
-        self._fault_release_block: int | None = None
-        self._fault_slot = -1          # phantom slot holding stolen pages
-        self._sched_counter = 0
-        self._last_sched = [0] * batch_size      # for the LRU policy
-        self._peak_pages = -1
-        self.tiers_peak: dict = {}
-        self.stats = {"steps": 0, "tokens": 0, "batches": 0, "blocks": 0,
-                      "dispatches": 0, "admitted": 0, "host_syncs": 0,
-                      "kv_pages_in_use": 0, "kv_pages_hwm": 0,
-                      "compiles": 0, "table_rebuilds": 0,
-                      "table_delta_entries": 0, "prefix_hits": 0,
-                      "prefix_shared_pages": 0,
-                      "preemptions": 0, "resumes": 0, "sheds": 0,
-                      "preempted_pages": 0, "pool_faults": 0,
-                      "prefix_drops": 0, "swap_retries": 0,
-                      "slow_transfers": 0, "audits": 0,
-                      "model_shards": self.mem.model_shards,
-                      "prefill_chunks": 0, "handoffs": 0,
-                      "decode_stall_blocks_max": 0,
-                      "decode_stall_blocks_total": 0,
-                      "ttft_p50_blocks": 0.0, "ttft_p99_blocks": 0.0}
-        # decode-stall accounting: prompt tokens dispatched synchronously
-        # ahead of pending decode work since the last decode dispatch —
-        # folded into decode_stall_blocks_* at the next dispatch
-        self._stall_tokens = 0
-        self._ttft_samples: list[int] = []
         # disaggregated prefill/decode: the async prefill engine drains
         # the backlog in chunks and hands finished prompts to decode as
         # KV page handoffs (see repro.runtime.prefill)
@@ -480,7 +546,18 @@ class BatchedServer:
         return jax.device_put(x, replicated(self.mesh))
 
     # ----- request intake ----------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> Request:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 32, *,
+               deadline_blocks: int | None = None) -> Request:
+        """Enqueue a request.  ``deadline_blocks`` (optional) is an SLA
+        TTL in decode-block units: once that many blocks elapse without
+        completion the request is cancelled at whatever stage it is in
+        and finishes with ``outcome == "expired"``.
+
+        Under overload admission control (``max_pending`` /
+        ``overload_factor``) a request the server cannot credibly serve
+        is REJECTED here — returned immediately with ``done`` set,
+        ``outcome == "rejected"`` and a structured ``error`` — instead
+        of joining an unbounded queue."""
         prompt = np.asarray(prompt, np.int32)
         # validate HERE so the caller sees the error; a raise mid-admission
         # would drop an already-dequeued request with done never set
@@ -488,6 +565,7 @@ class BatchedServer:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens})"
                 f" exceeds max_seq={self.max_seq}")
+        worst = 0
         if self.paged:
             worst = self._worst_pages(len(prompt), max_new_tokens)
             if worst > self.manager.capacity:
@@ -497,8 +575,215 @@ class BatchedServer:
         self._uid += 1
         req = Request(self._uid, prompt, max_new_tokens=max_new_tokens)
         req.submitted_block = self.stats["blocks"]
+        req.deadline_blocks = deadline_blocks
+        overload = self._admission_gate(req, worst)
+        if overload is not None:
+            req.error = {"reason": "admission_rejected", "detail": overload,
+                         "uid": req.uid, "tokens_emitted": 0}
+            self._finalize(req, "rejected")
+            return req
         self.queue.put(req)
         return req
+
+    # ----- request lifecycle: outcomes, deadlines, overload control -----------
+    # terminal outcome -> stats counter it increments
+    _OUTCOME_KEYS = {"completed": "completed", "shed": "sheds",
+                     "rejected": "rejected", "expired": "expired"}
+
+    def _finalize(self, req: Request, outcome: str,
+                  finished: list[Request] | None = None) -> None:
+        """The ONE terminal transition of a request: stamp its outcome,
+        release its admission-control accounting, count it, sample e2e
+        latency (completions only) and set ``done``.  Idempotent — every
+        cancellation path funnels here, so racing paths (e.g. a lease
+        reclaim against a deadline sweep) can never double-count."""
+        if req.outcome is not None:
+            return
+        req.outcome = outcome
+        self._pending_remove(req)
+        self.stats[self._OUTCOME_KEYS[outcome]] += 1
+        if outcome == "completed" and req.submitted_block is not None:
+            self._e2e_samples.append(self.stats["blocks"]
+                                     - req.submitted_block)
+        req.done.set()
+        if finished is not None:
+            finished.append(req)
+
+    def _admission_gate(self, req: Request, worst: int) -> str | None:
+        """Overload admission control, one lock hold: accept (count the
+        request into the pending demand view and return None) or return
+        the structured-rejection detail.  The page term projects the
+        ledger-backed worst case — live reservations plus every
+        not-yet-started request's worst-case page need — against
+        ``overload_factor x`` pool capacity: demand beyond that cannot
+        make its deadline anyway, so rejecting it FAST keeps the
+        admitted requests' tail latency bounded."""
+        with self._pending_lock:
+            if (self.max_pending is not None
+                    and self._pending_count >= self.max_pending):
+                return (f"pending requests at max_pending="
+                        f"{self.max_pending}")
+            if (self.overload_factor is not None and self.paged
+                    and self.manager is not None):
+                projected = (sum(self._reserved.values())
+                             + self._pending_pages + worst)
+                budget = self.overload_factor * self.manager.capacity
+                if projected > budget:
+                    return (f"projected worst-case demand {projected} pages"
+                            f" > {budget:.0f} "
+                            f"(overload_factor={self.overload_factor} x "
+                            f"capacity {self.manager.capacity})")
+            req._pending_counted = True
+            self._pending_count += 1
+            self._pending_pages += worst
+            return None
+
+    def _pending_add(self, req: Request) -> None:
+        """(Re-)count a not-yet-started request into the admission-
+        control demand view (crash requeue, restore, admission
+        rollback).  Flag-guarded: never double-counts."""
+        with self._pending_lock:
+            if not req._pending_counted:
+                req._pending_counted = True
+                self._pending_count += 1
+                if self.paged and self.manager is not None:
+                    self._pending_pages += self._worst_pages(
+                        len(req.prompt), req.max_new_tokens)
+
+    def _pending_remove(self, req: Request) -> None:
+        with self._pending_lock:
+            if req._pending_counted:
+                req._pending_counted = False
+                self._pending_count -= 1
+                if self.paged and self.manager is not None:
+                    self._pending_pages -= self._worst_pages(
+                        len(req.prompt), req.max_new_tokens)
+
+    def _deadline_passed(self, req: Request) -> bool:
+        return (req.deadline_blocks is not None
+                and req.submitted_block is not None
+                and self.stats["blocks"]
+                >= req.submitted_block + req.deadline_blocks)
+
+    def _expire_req(self, req: Request, finished: list[Request],
+                    stage: str) -> None:
+        req.error = {"reason": "deadline_expired",
+                     "detail": f"deadline of {req.deadline_blocks} blocks "
+                               f"passed while {stage}",
+                     "uid": req.uid, "tokens_emitted": len(req.output)}
+        self._finalize(req, "expired", finished)
+
+    def _expiry_stall(self) -> bool:
+        """A LIVE slot past its deadline stalls dispatch so the pipeline
+        drains before eviction — evicting a slot with a later block in
+        flight and re-admitting into it would mis-attribute that block's
+        harvested tokens to the new occupant."""
+        return any(r is not None and self._deadline_passed(r)
+                   for r in self.slots)
+
+    def _expire_sweep(self, finished: list[Request], drained: bool) -> None:
+        """Cancel every expired request at whatever lifecycle stage it
+        is in — backlog, swapped-out victim, mid-prefill, staged
+        handoff, and (only with the pipeline drained) live decode slot —
+        reclaiming its pages so ``audit()`` stays clean."""
+        if self._backlog and any(self._deadline_passed(r)
+                                 for r in self._backlog):
+            keep: collections.deque = collections.deque()
+            for req in self._backlog:
+                if self._deadline_passed(req):
+                    self._expire_req(req, finished, "backlogged")
+                else:
+                    keep.append(req)
+            self._backlog = keep
+        for ps in list(self._preempted):
+            if self._deadline_passed(ps.req):
+                self._preempted.remove(ps)
+                if self.swapper is not None and ps.handle is not None:
+                    self.swapper.release(ps.handle)
+                self._expire_req(ps.req, finished, "preempted")
+        eng = self.prefill
+        if eng is not None:
+            for inf in list(eng.inflight):
+                if self._deadline_passed(inf.req):
+                    eng.inflight.remove(inf)
+                    self.manager.free_slot(inf.slot)
+                    self._reserved.pop(inf.slot, None)
+                    self._expire_req(inf.req, finished, "mid-prefill")
+                    self.kv.record()
+            for h in list(eng.ready):
+                if self._deadline_passed(h.req):
+                    eng.ready.remove(h)
+                    self.manager.release_handoff(h.token)
+                    self._reserved.pop(h.pslot, None)
+                    eng.staging.release(h.handle)
+                    self._expire_req(h.req, finished, "staged for handoff")
+                    self.kv.record()
+        if drained:
+            for i, req in enumerate(self.slots):
+                if req is not None and self._deadline_passed(req):
+                    self._evict_slot(i)
+                    self._expire_req(req, finished, "decoding")
+                    if self.kv is not None:
+                        self.kv.record()
+
+    def _requeue(self, req: Request, finished: list[Request]) -> None:
+        """Put an engine-crash victim back at the FRONT of the backlog
+        (it is older than everything queued behind it) — unless its
+        deadline already passed, in which case the retry would be dead
+        on arrival.  The retried tokens are bit-identical to the lost
+        attempt's at any temperature: prefill and sampling are pure
+        functions of (seed, uid, position)."""
+        if self._deadline_passed(req):
+            self._expire_req(req, finished, "awaiting crash retry")
+            return
+        self._backlog.appendleft(req)
+        self._pending_add(req)
+        self.stats["crash_requeues"] += 1
+
+    def _reclaim_orphan_handoff(self, h, finished: list[Request]) -> None:
+        """Release an orphaned/expired handoff's pool pages through the
+        manager's handoff registry, drop its staged remote-tier bytes,
+        and retry the victim."""
+        self.manager.release_handoff(h.token)
+        self._reserved.pop(h.pslot, None)
+        if h.handle is not None and self.prefill is not None:
+            self.prefill.staging.release(h.handle)
+        self.stats["lease_reclaims"] += 1
+        self._requeue(h.req, finished)
+        if self.kv is not None:
+            self.kv.record()
+
+    def _lease_watchdog(self, finished: list[Request],
+                        force: bool = False) -> None:
+        """Reclaim engine-crash leftovers.  A crashed prefill's partial
+        pages are garbage — freed and the victim retried immediately.
+        An un-adopted handoff holds COMPLETE, adoptable state, so its
+        pages stay pinned until its lease expires (another decode engine
+        might still adopt it); then the registry entry is released and
+        the victim retried.  ``force=True`` (snapshot) cuts every lease
+        short — a restart is a new lease epoch."""
+        if self._orphan_prefills:
+            for pslot, req in self._orphan_prefills:
+                self.manager.free_slot(pslot)
+                self._reserved.pop(pslot, None)
+                self._requeue(req, finished)
+            self._orphan_prefills.clear()
+            if self.kv is not None:
+                self.kv.record()
+        for h in list(self._orphan_handoffs):
+            if (force or self.stats["blocks"] >= h.lease_expiry_block
+                    or self._deadline_passed(h.req)):
+                self._orphan_handoffs.remove(h)
+                self._reclaim_orphan_handoff(h, finished)
+        eng = self.prefill
+        if eng is not None and eng.ready:
+            # leases bind NON-crashed handoffs too: one staged longer
+            # than its lease (decode wedged, no free slot) is reclaimed
+            # and retried rather than pinning pool pages indefinitely
+            for h in list(eng.ready):
+                if self.stats["blocks"] >= h.lease_expiry_block:
+                    eng.ready.remove(h)
+                    self._reclaim_orphan_handoff(h, finished)
 
     # ----- admission ---------------------------------------------------------
     def _admit_plen(self, prompt_len: int, max_new_tokens: int) -> int:
@@ -798,7 +1083,7 @@ class BatchedServer:
                 self.manager.free_slot(slot)   # reclaim at once
                 self._reserved.pop(slot, None)
                 self.kv.record()    # ledger must track the reclaim
-            req.done.set()
+            self._finalize(req, "completed")
             return True
         self.slots[slot] = req
         return False
@@ -811,7 +1096,14 @@ class BatchedServer:
         backlog in arrival order.  With a paged pool, admission is
         page-gated: the head request waits (FIFO order preserved) until
         reclamation frees enough — or, with ``allow_preempt`` (the
-        pipeline is drained), triggers page-granular preemption."""
+        pipeline is drained), triggers page-granular preemption.
+
+        Lifecycle upkeep runs first: crash leftovers are reclaimed and
+        expired requests cancelled (live slots only when the pipeline is
+        drained — ``allow_preempt`` doubles as that signal)."""
+        self._drain_queue()
+        self._lease_watchdog(finished)
+        self._expire_sweep(finished, drained=allow_preempt)
         while self._preempted and self._free_slots():
             ps = self._preempted[0]
             if not self._resume_ready(ps):
@@ -840,7 +1132,8 @@ class BatchedServer:
                 free = self._free_slots()
                 if not free or not self._admission_pages_ready(req):
                     return
-            self._backlog.pop(0)
+            self._backlog.popleft()
+            self._pending_remove(req)
             try:
                 done_now = self._admit(req, free[0])
             except MemoryError:
@@ -848,7 +1141,8 @@ class BatchedServer:
                 # roll back the reservation and keep FIFO order
                 self.manager.free_slot(free[0])
                 self._reserved.pop(free[0], None)
-                self._backlog.insert(0, req)
+                self._backlog.appendleft(req)
+                self._pending_add(req)
                 return
             if done_now:
                 finished.append(req)      # done at admission: slot stays free
@@ -869,7 +1163,9 @@ class BatchedServer:
             started = False
             while (self._backlog and len(eng.inflight) < eng.max_inflight
                    and self._admission_pages_ready(self._backlog[0])):
-                eng.start(self._backlog.pop(0))
+                req = self._backlog.popleft()
+                self._pending_remove(req)
+                eng.start(req)
                 started = True
             if (self._backlog and not started and allow_preempt
                     and not self._admission_pages_ready(self._backlog[0])
@@ -902,6 +1198,15 @@ class BatchedServer:
         staged remote-tier bytes are released, and the slot state is
         spliced exactly like a resume at ``pos = plen``.  No prefill
         compute, no KV copy, no blocking dispatch."""
+        plan = memtiers.active_fault_plan()
+        if plan is not None and plan.take_adopt_crash(self.stats["blocks"]):
+            # injected decode-engine crash mid-adoption: the handoff's
+            # pages stay staged under the registry and LEASED — another
+            # engine might still adopt them — so reclamation waits for
+            # the lease watchdog, which then retries the victim
+            self._orphan_handoffs.append(h)
+            self.stats["engine_crashes"] += 1
+            return
         req = h.req
         self.manager.adopt_from_handoff(slot, h.token)
         # worst-case reservation transfers from the prefill pseudo-slot
@@ -917,8 +1222,7 @@ class BatchedServer:
                                        and h.first_token == self.eos_id):
             self.manager.free_slot(slot)     # done at adoption
             self._reserved.pop(slot, None)
-            req.done.set()
-            finished.append(req)
+            self._finalize(req, "completed", finished)
             self.kv.record()
             return
         # adoption never touches the device page table — hold it aside
@@ -1042,7 +1346,8 @@ class BatchedServer:
         device (shared by preempt and shed).  The zeroed table row at
         the next block's delta re-points any frozen-position ghost
         writes at the null page."""
-        self.manager.free_slot(i)
+        if self.manager is not None:        # dense server: no pool to free
+            self.manager.free_slot(i)
         self._reserved.pop(i, None)
         self.slots[i] = None
         self._planned[i] = 0
@@ -1060,21 +1365,33 @@ class BatchedServer:
         self._evict_slot(i)
         req.error = {"reason": reason, "detail": detail, "uid": req.uid,
                      "tokens_emitted": len(req.output)}
-        req.done.set()
-        finished.append(req)
-        self.stats["sheds"] += 1
-        self.kv.record()
+        self._finalize(req, "shed", finished)
+        if self.kv is not None:
+            self.kv.record()
 
     def _shed_preempted(self, ps: _Preempted, finished: list[Request], *,
                         reason: str, detail: str) -> None:
         """Shed a swapped-out victim whose restore failed."""
-        self.swapper.release(ps.handle)
+        if self.swapper is not None and ps.handle is not None:
+            self.swapper.release(ps.handle)
         ps.req.error = {"reason": reason, "detail": detail,
                         "uid": ps.req.uid,
                         "tokens_emitted": len(ps.req.output)}
-        ps.req.done.set()
-        finished.append(ps.req)
-        self.stats["sheds"] += 1
+        self._finalize(ps.req, "shed", finished)
+
+    def _service_poison(self, finished: list[Request]) -> None:
+        """Shed every slot whose harvest hit non-finite logits — only
+        that sequence dies; the rest of the batch decodes on.  Runs with
+        the pipeline drained (poisoned slots stall dispatch exactly like
+        a pool fault) so eviction can never race an in-flight block."""
+        for i, req in list(self._poisoned.items()):
+            if self.slots[i] is req:
+                self.stats["poison_sheds"] += 1
+                self._shed(i, finished, reason="poisoned_logits",
+                           detail=f"non-finite logits in decode block "
+                                  f"{self.stats['blocks']} at position "
+                                  f"{self._slot_pos[i]}")
+        self._poisoned.clear()
 
     def _resume_ready(self, ps: _Preempted) -> bool:
         """A victim resumes only when its remaining worst case fits the
@@ -1309,17 +1626,18 @@ class BatchedServer:
             self.kv.record()
             self._note_peak()
             with self._mesh_ctx():
-                toks, valid, self.cache, self.state = self._decode_loop(
-                    self.params, self.cache, self.state, delta)
+                toks, valid, poison, self.cache, self.state = \
+                    self._decode_loop(self.params, self.cache, self.state,
+                                      delta)
         else:
             with self._mesh_ctx():
-                toks, valid, self.cache, self.state = self._decode_loop(
-                    self.params, self.cache, self.state)
+                toks, valid, poison, self.cache, self.state = \
+                    self._decode_loop(self.params, self.cache, self.state)
         self._fold_stall()
         self.stats["dispatches"] += 1
         self.stats["blocks"] += 1
         self.stats["steps"] += self.block_size
-        return toks, valid, advances
+        return toks, valid, poison, advances
 
     def _harvest(self, block, finished: list[Request]) -> None:
         """Sync ONE in-flight block's token harvest (the only host sync
@@ -1332,8 +1650,8 @@ class BatchedServer:
         its own tail page — and any reallocation of that page is either
         fully overwritten (admission prefill writes whole pages) or
         masked until the new owner actually writes each position."""
-        toks, valid, advances = block
-        toks_h, valid_h = jax.device_get((toks, valid))
+        toks, valid, poison, advances = block
+        toks_h, valid_h, poison_h = jax.device_get((toks, valid, poison))
         self.stats["host_syncs"] += 1
         for i, (req, adv) in advances.items():
             if self.slots[i] is req:
@@ -1341,21 +1659,34 @@ class BatchedServer:
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
+            if i in self._poisoned:
+                # flagged in an earlier in-flight block: everything this
+                # slot produced since is downstream of non-finite state
+                continue
             emitted = 0
+            bad = False
             for t in range(self.block_size):
                 if not valid_h[i, t]:
                     break                 # active mask is monotone per slot
+                if poison_h[i, t]:
+                    bad = True            # this and later tokens: garbage
+                    break
                 req.output.append(int(toks_h[i, t]))
                 emitted += 1
                 self.stats["tokens"] += 1
             self._slot_pos[i] += emitted
             if self.paged:
                 self.manager.note_tokens(i, self._slot_pos[i])
+            if bad:
+                # poison stalls dispatch (run_once) and the slot is shed
+                # once the pipeline drains — never evict under a block
+                # in flight (a recycled slot would steal its harvest)
+                self._poisoned[i] = req
+                continue
             if (len(req.output) >= req.max_new_tokens
                     or (self.eos_id is not None and req.output
                         and req.output[-1] == self.eos_id)):
-                req.done.set()
-                finished.append(req)
+                self._finalize(req, "completed", finished)
                 self.slots[i] = None       # slot recycled for admission
                 self._planned[i] = 0
                 if self.paged:
@@ -1388,7 +1719,8 @@ class BatchedServer:
         inflight: collections.deque = collections.deque()
         dispatched = 0
         while True:
-            stall = self._pool_fault or self._preempt_wanted()
+            stall = (self._pool_fault or self._poisoned
+                     or self._preempt_wanted() or self._expiry_stall())
             if not stall:
                 while (len(inflight) < self.max_inflight
                        and self._can_dispatch()
@@ -1408,6 +1740,10 @@ class BatchedServer:
                 self._recover_pool_fault(finished)
                 self._maybe_audit()
                 continue
+            if self._poisoned:
+                self._service_poison(finished)
+                self._maybe_audit()
+                continue
             if max_blocks is not None and dispatched >= max_blocks:
                 break
             # idle pipeline: give blocked work one more chance (resume
@@ -1424,6 +1760,14 @@ class BatchedServer:
                     self._admit_from_queue(finished, allow_preempt=True)
                     if self._can_dispatch():
                         continue
+                if self._orphan_handoffs:
+                    # decode idle freezes the block clock, so a lease
+                    # measured in blocks can never lapse — force the
+                    # reclaim now instead of livelocking the orphans
+                    self._lease_watchdog(finished, force=True)
+                    self._admit_from_queue(finished, allow_preempt=True)
+                    if self._can_dispatch():
+                        continue
                 break
         if finished:
             self.stats["batches"] += 1
@@ -1435,6 +1779,10 @@ class BatchedServer:
             arr = np.asarray(self._ttft_samples, np.float64)
             self.stats["ttft_p50_blocks"] = float(np.percentile(arr, 50))
             self.stats["ttft_p99_blocks"] = float(np.percentile(arr, 99))
+        if self._e2e_samples:
+            arr = np.asarray(self._e2e_samples, np.float64)
+            self.stats["e2e_p50_blocks"] = float(np.percentile(arr, 50))
+            self.stats["e2e_p99_blocks"] = float(np.percentile(arr, 99))
         return finished
 
     def _compiles(self) -> int:
@@ -1464,12 +1812,18 @@ class BatchedServer:
         if not self.paged:
             raise ValueError("snapshot requires the paged server")
         self._drain_queue()
+        # engine-crash leftovers must not serialize as leaked pages:
+        # cut their leases short (a restart is a new lease epoch),
+        # reclaim, and let the victims re-enter as backlog entries
+        self._lease_watchdog([], force=True)
         seqs = []
 
         def entry(req, pos, h=None):
             e = {"uid": req.uid, "prompt": np.asarray(req.prompt, np.int32),
                  "max_new_tokens": req.max_new_tokens,
-                 "output": list(req.output), "pos": int(pos)}
+                 "output": list(req.output), "pos": int(pos),
+                 "submitted_block": req.submitted_block,
+                 "deadline_blocks": req.deadline_blocks}
             if pos:
                 e["k"], e["v"] = h.k, h.v
                 if h.k_scale is not None:    # quantized pool: scales too
@@ -1502,7 +1856,10 @@ class BatchedServer:
         for req in self._backlog:
             seqs.append(entry(req, 0))
         seqs.sort(key=lambda e: e["uid"])
-        return {"seed": self.seed, "uid": self._uid, "sequences": seqs}
+        # "blocks" anchors deadline/lease clocks: restore rebases each
+        # request's submitted_block so its REMAINING TTL carries over
+        return {"seed": self.seed, "uid": self._uid,
+                "blocks": self.stats["blocks"], "sequences": seqs}
 
     def restore(self, snap: dict) -> None:
         """Rehydrate a :meth:`snapshot` into this (idle, same-seed)
@@ -1519,10 +1876,21 @@ class BatchedServer:
                 or (self.prefill is not None and not self.prefill.idle):
             raise ValueError("restore requires an idle server")
         self._uid = max(self._uid, int(snap["uid"]))
+        snap_blocks = int(snap.get("blocks", 0))
         for s in sorted(snap["sequences"], key=lambda e: e["uid"]):
             req = Request(int(s["uid"]), np.asarray(s["prompt"], np.int32),
                           max_new_tokens=int(s["max_new_tokens"]))
             req.output = [int(t) for t in s["output"]]
+            # rebase the deadline clock into THIS server's block counter:
+            # the remaining TTL at snapshot time is the remaining TTL now
+            # (restart downtime does not run the clock — blocks, not
+            # wall time, are the server's SLA unit)
+            dl = s.get("deadline_blocks")
+            req.deadline_blocks = None if dl is None else int(dl)
+            sb = s.get("submitted_block")
+            req.submitted_block = (
+                self.stats["blocks"] if sb is None
+                else self.stats["blocks"] - snap_blocks + int(sb))
             if int(s["pos"]):
                 k = np.asarray(s["k"])
                 v = np.asarray(s["v"])
@@ -1539,6 +1907,7 @@ class BatchedServer:
                     req=req, pos=int(s["pos"]), handle=handle, key=key))
             else:
                 self._backlog.append(req)
+                self._pending_add(req)
 
     # ----- accounting --------------------------------------------------------
     def kv_bytes_in_use(self) -> int:

@@ -3,7 +3,8 @@ where the real package is absent (see requirements-dev.txt for full runs).
 
 Implements just the surface these tests use: ``given`` with keyword
 strategies, ``settings(max_examples=..., deadline=...)``, and
-``strategies.integers/floats/lists/tuples/sampled_from``.  Drawing is deterministic (seeded
+``strategies.integers/floats/lists/tuples/sampled_from/booleans/none/
+one_of``.  Drawing is deterministic (seeded
 PRNG) and always covers the strategy's boundary values first — a fixed
 sample sweep, not property search, but the same assertions execute.
 """
@@ -44,6 +45,19 @@ class strategies:  # noqa: N801 - mimics the hypothesis module name
         choices = list(choices)
         return _Strategy([choices[0], choices[-1]],
                          lambda r: r.choice(choices))
+
+    @staticmethod
+    def booleans():
+        return _Strategy([False, True], lambda r: r.random() < 0.5)
+
+    @staticmethod
+    def none():
+        return _Strategy([None], lambda r: None)
+
+    @staticmethod
+    def one_of(*options):
+        return _Strategy([s.edges[0] for s in options],
+                         lambda r: r.choice(options).draw(r))
 
     @staticmethod
     def lists(elements, min_size=0, max_size=10, **_kw):

@@ -133,21 +133,19 @@ class _SchedHarness(BatchedServer):
 
     def __init__(self, *, batch: int = 3, num_pages: int = 12,
                  policy: str = "lru"):
-        # deliberately no super().__init__ — no model, no device state
+        # deliberately no super().__init__ — no model, no device state;
+        # _init_sched_state is the scheduler's OWN definition of the
+        # host state it needs, so the harness can never drift from it
         self.paged = True
         self.preempt_enabled = True
         self.preempt_policy = policy
+        self.prefix_cache = False
         self.max_seq = MAX_SEQ
         self.batch = batch
+        self.page_size = PAGE
         self.manager = BlockManager(num_pages, PAGE)
         self.slots: list[Request | None] = [None] * batch
-        self.queue: "queue_mod.Queue[Request]" = queue_mod.Queue()
-        self._backlog: list[Request] = []
-        self._preempted: list[_Preempted] = []
-        self._reserved: dict[int, int] = {}
-        self._last_sched = [0] * batch
-        self._sched_counter = 0
-        self._planned = [0] * batch
+        self._init_sched_state(batch)
         self.events: list[tuple[str, int]] = []
 
     # ----- fakes for the device-touching steps -----------------------------
@@ -189,11 +187,23 @@ class _SchedHarness(BatchedServer):
         self.events.append(("resume", ps.req.uid))
         return True
 
+    def _evict_slot(self, i: int) -> None:
+        # the real one also deactivates the device slot; host-side the
+        # page/reservation release is the whole story
+        req = self.slots[i]
+        self.manager.free_slot(i)
+        self._reserved.pop(i, None)
+        self.slots[i] = None
+        self._planned[i] = 0
+        self.events.append(("evict", req.uid))
+
     # ----- churn driver -----------------------------------------------------
     def decode_tick(self, finished: list[Request]) -> None:
         """One decode block's worth of host bookkeeping: every live slot
         emits a token (growing its pages on demand, as dispatch does)
-        and finished slots reclaim."""
+        and finished slots reclaim.  Advances the server's block clock —
+        deadlines and handoff leases run on it."""
+        self.stats["blocks"] += 1
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -205,7 +215,7 @@ class _SchedHarness(BatchedServer):
                 self.manager.free_slot(i)
                 self._reserved.pop(i, None)
                 self.slots[i] = None
-                finished.append(req)
+                self._finalize(req, "completed", finished)
                 self.events.append(("finish", req.uid))
 
     def check_invariants(self) -> None:
@@ -354,6 +364,7 @@ class _HostPrefillEngine:
         slot: int
         plen: int
         done: int
+        toks: np.ndarray = None          # padded prompt (prefix sharing)
 
     @dataclasses.dataclass
     class _Handoff:
@@ -361,6 +372,8 @@ class _HostPrefillEngine:
         plen: int
         token: int
         pslot: int
+        lease_expiry_block: int = 0
+        handle: object = None            # no staged bytes host-side
 
     def __init__(self, srv, *, chunk_tokens: int = PAGE, max_inflight=2):
         import collections
@@ -375,13 +388,34 @@ class _HostPrefillEngine:
     def idle(self):
         return not self.inflight and not self.ready
 
+    def crash(self) -> None:
+        """Mirror of PrefillEngine.crash: in-flight prefills orphan
+        their partial pages, staged handoffs keep their leases."""
+        srv = self.srv
+        for inf in self.inflight:
+            srv._orphan_prefills.append((inf.slot, inf.req))
+        self.inflight.clear()
+        while self.ready:
+            srv._orphan_handoffs.append(self.ready.popleft())
+        srv.stats["engine_crashes"] += 1
+        srv.events.append(("crash", -1))
+
     def start(self, req: Request) -> None:
         srv = self.srv
         slot = -1000 - req.uid
         srv._reserved[slot] = srv._worst_pages(len(req.prompt),
                                                req.max_new_tokens)
         plen = srv._admit_plen(len(req.prompt), req.max_new_tokens)
-        self.inflight.append(self._Inflight(req, slot, plen, 0))
+        toks = np.zeros((1, plen), np.int32)
+        toks[0, plen - len(req.prompt):] = req.prompt
+        shared = (srv._shared_prefix_pages(toks, plen)
+                  if srv.prefix_cache else [])
+        if shared:
+            srv.manager.adopt(slot, shared)
+            srv.stats["prefix_hits"] += 1
+            srv.stats["prefix_shared_pages"] += len(shared)
+        self.inflight.append(self._Inflight(req, slot, plen,
+                                            len(shared) * PAGE, toks))
         srv.events.append(("start", req.uid))
 
     def pump_once(self, finished: list) -> bool:
@@ -399,9 +433,13 @@ class _HostPrefillEngine:
         srv.manager.note_tokens(inf.slot, inf.done)
         if inf.done >= inf.plen:
             self.inflight.remove(inf)
+            if srv.prefix_cache:
+                srv._register_prefix(inf.toks, inf.plen, inf.slot)
             tok = srv.manager.detach_to_handoff(inf.slot)
-            self.ready.append(self._Handoff(inf.req, inf.plen, tok,
-                                            inf.slot))
+            self.ready.append(self._Handoff(
+                inf.req, inf.plen, tok, inf.slot,
+                lease_expiry_block=(srv.stats["blocks"]
+                                    + srv.handoff_lease_blocks)))
             srv.events.append(("handoff", inf.req.uid))
         return True
 
@@ -562,3 +600,234 @@ def test_async_prefill_fairness_holds_under_preemption(shapes, schedule,
     for uid in {u for k, u in srv.events if k == "preempt"}:
         kinds = [k for k, u in srv.events if u == uid]
         assert kinds.count("resume") == kinds.count("preempt"), srv.events
+
+
+# ---------------------------------------------------------------------------
+# request lifecycle: engine crashes, handoff leases, deadlines, overload
+# ---------------------------------------------------------------------------
+
+def _assert_fully_reclaimed(srv) -> None:
+    """Zero-leak postcondition after a full drain: allocator audit
+    clean, no page allocated anywhere (handoffs included), no dangling
+    reservation or crash-recovery state, pending demand view empty."""
+    srv.manager.audit()
+    assert srv.manager.pages_in_use == 0, srv.manager.pages
+    assert srv.manager.handoff_pages == 0
+    assert not srv._reserved, srv._reserved
+    assert not srv._orphan_prefills and not srv._orphan_handoffs
+    assert srv._pending_count == 0 and srv._pending_pages == 0
+
+
+def _drive_to_drain(srv, pending, finished, rounds=800) -> None:
+    for _ in range(rounds):
+        if all(r.done.is_set() for r in pending):
+            break
+        srv.decode_tick(finished)
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+    assert all(r.done.is_set() for r in pending), (
+        f"wedged: {[r.uid for r in pending if not r.done.is_set()]}, "
+        f"events={srv.events}")
+
+
+@given(shapes=st.lists(st.tuples(st.integers(1, 12), st.integers(2, 12)),
+                       min_size=3, max_size=8),
+       schedule=st.lists(st.integers(0, 1), min_size=6, max_size=40),
+       crash_round=st.integers(0, 45),
+       lease=st.integers(1, 8),
+       share=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_prefill_crash_reclaims_requeues_and_leaks_nothing(
+        shapes, schedule, crash_round, lease, share):
+    """Crash the prefill engine at an arbitrary churn point — mid-chunk
+    prefills and staged (possibly prefix-sharing) handoffs alike.  The
+    watchdog must reclaim every orphaned page (partial prefills at
+    once, staged handoffs after their lease) and requeue the victims;
+    every request still finishes, with the allocator audit clean after
+    every step and zero pages/reservations/pending leaked at the end."""
+    srv = _AsyncSchedHarness()
+    srv.prefix_cache = share
+    srv.handoff_lease_blocks = lease
+    pending = [Request(uid=u, prompt=np.arange(p, dtype=np.int32) % 7,
+                       max_new_tokens=m)
+               for u, (p, m) in enumerate(shapes)
+               if p + max(m - 1, 0) <= MAX_SEQ]
+    for r in pending:
+        r.pos = 0
+    todo = list(pending)
+    finished: list[Request] = []
+    for rnd, op in enumerate(schedule + [1] * (crash_round + 1)):
+        if rnd == crash_round:
+            srv.prefill.crash()
+        if op == 0 and todo:
+            srv.queue.put(todo.pop(0))
+        else:
+            srv.decode_tick(finished)
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+    while todo:
+        srv.queue.put(todo.pop(0))
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+    _drive_to_drain(srv, pending, finished)
+    for r in pending:       # a crash sheds nothing: every victim retried
+        assert r.error is None, r.error
+    if ("crash", -1) in srv.events:
+        assert srv.stats["engine_crashes"] == 1
+    _assert_fully_reclaimed(srv)
+
+
+def test_lease_expiry_reclaims_staged_handoff_and_retries():
+    """A handoff staged while every decode slot is busy must not pin
+    its pool pages forever: once its lease runs out the watchdog
+    releases the registry entry and requeues the victim, which later
+    admits normally and finishes."""
+    srv = _AsyncSchedHarness(batch=2, num_pages=40)
+    srv.handoff_lease_blocks = 3
+    finished: list[Request] = []
+    # two long decoders occupy both slots for many blocks
+    busy = [Request(uid=u, prompt=np.zeros(2, np.int32), max_new_tokens=30)
+            for u in (0, 1)]
+    late = Request(uid=2, prompt=np.zeros(4, np.int32), max_new_tokens=4)
+    for r in busy + [late]:
+        r.pos = 0
+    for r in busy:
+        srv.queue.put(r)
+    srv._admit_from_queue(finished, allow_preempt=True)
+    assert all(s is not None for s in srv.slots)
+    srv.queue.put(late)
+    # pump the prefill to a staged handoff (no free slot to adopt into),
+    # then sit past the lease: the watchdog must reclaim + requeue
+    for _ in range(10):
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+        if srv.stats["lease_reclaims"]:
+            break
+        srv.decode_tick(finished)
+    assert srv.stats["lease_reclaims"] >= 1, srv.events
+    assert srv.stats["crash_requeues"] >= 1
+    assert srv.manager.handoff_pages == 0       # registry entry released
+    _drive_to_drain(srv, busy + [late], finished)
+    assert late.error is None and len(late.output) == late.max_new_tokens
+    _assert_fully_reclaimed(srv)
+
+
+def test_lease_reclaim_of_prefix_sharing_handoff_keeps_sharer_pages():
+    """Lease-expiry x prefix-sharing: reclaiming an orphaned handoff
+    whose leading pages are SHARED only drops the handoff's reference —
+    the live sharer keeps decoding on intact pages (audit-verified)."""
+    srv = _AsyncSchedHarness(batch=2, num_pages=40)
+    srv.prefix_cache = True
+    srv.handoff_lease_blocks = 2
+    finished: list[Request] = []
+    prompt = np.arange(3 * PAGE, dtype=np.int32)    # 2 shareable pages
+    first = Request(uid=0, prompt=prompt.copy(), max_new_tokens=24)
+    second = Request(uid=1, prompt=prompt.copy(), max_new_tokens=4)
+    blocker = Request(uid=2, prompt=np.zeros(2, np.int32),
+                      max_new_tokens=24)
+    for r in (first, second, blocker):
+        r.pos = 0
+    # first publishes its prefix pages and decodes; blocker takes the
+    # other slot so second's handoff has nowhere to land
+    for r in (first, blocker):
+        srv.queue.put(r)
+    for _ in range(6):
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+        if all(s is not None for s in srv.slots):
+            break
+        srv.decode_tick(finished)
+    assert all(s is not None for s in srv.slots)
+    srv.queue.put(second)
+    for _ in range(12):
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+        if srv.stats["lease_reclaims"]:
+            break
+        srv.decode_tick(finished)
+    assert srv.stats["lease_reclaims"] >= 1, srv.events
+    # the handoff really adopted first's published pages, and the
+    # reclaim gave back only the handoff's reference — first is still
+    # live on intact pages
+    assert srv.stats["prefix_hits"] >= 1, srv.events
+    assert first in srv.slots
+    srv.manager.audit()
+    _drive_to_drain(srv, [first, second, blocker], finished)
+    assert all(r.error is None for r in (first, second, blocker))
+    _assert_fully_reclaimed(srv)
+
+
+@given(shapes=st.lists(st.tuples(st.integers(1, 12), st.integers(2, 12)),
+                       min_size=3, max_size=8),
+       schedule=st.lists(st.integers(0, 1), min_size=6, max_size=40),
+       deadlines=st.lists(st.one_of(st.none(), st.integers(0, 12)),
+                          min_size=8, max_size=8),
+       asynchronous=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_deadline_expiry_at_any_stage_reclaims_everything(
+        shapes, schedule, deadlines, asynchronous):
+    """Random tight deadlines across random churn hit requests at every
+    lifecycle stage — backlogged, mid-prefill, staged handoff, live
+    decode slot, preempted.  Every request must terminate (expired or
+    served), every expiry must carry the structured error, and the
+    allocator must end fully reclaimed."""
+    srv = (_AsyncSchedHarness() if asynchronous else _SchedHarness())
+    pending = [Request(uid=u, prompt=np.zeros(p, np.int32),
+                       max_new_tokens=m)
+               for u, (p, m) in enumerate(shapes)
+               if p + max(m - 1, 0) <= MAX_SEQ]
+    for i, r in enumerate(pending):
+        r.pos = 0
+        r.deadline_blocks = deadlines[i % len(deadlines)]
+        r.submitted_block = 0
+    todo = list(pending)
+    finished: list[Request] = []
+    for op in schedule:
+        if op == 0 and todo:
+            srv.queue.put(todo.pop(0))
+        else:
+            srv.decode_tick(finished)
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+    while todo:
+        srv.queue.put(todo.pop(0))
+        srv._admit_from_queue(finished, allow_preempt=True)
+        srv.check_invariants()
+    _drive_to_drain(srv, pending, finished)
+    for r in pending:
+        if r.outcome == "expired":
+            assert r.error is not None
+            assert r.error["reason"] == "deadline_expired"
+        else:
+            assert r.error is None
+    _assert_fully_reclaimed(srv)
+
+
+def test_overload_gate_rejects_fast_and_counts_outcomes():
+    """submit() under admission control: beyond ``max_pending`` /
+    ``overload_factor`` requests come back instantly with
+    ``outcome == "rejected"`` and a structured error; the admitted ones
+    all complete and the outcome counters add up."""
+    srv = _SchedHarness(num_pages=12)
+    srv.max_pending = 3
+    srv.overload_factor = 1.5
+    reqs = [srv.submit(np.zeros(4, np.int32), max_new_tokens=4)
+            for _ in range(10)]
+    rejected = [r for r in reqs if r.outcome == "rejected"]
+    admitted = [r for r in reqs if r.outcome != "rejected"]
+    assert rejected and admitted
+    for r in rejected:
+        assert r.done.is_set()
+        assert r.error["reason"] == "admission_rejected"
+        assert not r.output
+    for r in admitted:        # host-side position for the churn driver
+        r.pos = 0
+    finished: list[Request] = []
+    srv._admit_from_queue(finished, allow_preempt=True)
+    _drive_to_drain(srv, admitted, finished)
+    assert srv.stats["rejected"] == len(rejected)
+    assert all(r.error is None for r in admitted)
+    _assert_fully_reclaimed(srv)
+    # headroom restored: a fresh request is accepted again
+    again = srv.submit(np.zeros(4, np.int32), max_new_tokens=4)
+    assert again.outcome != "rejected"

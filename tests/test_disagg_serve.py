@@ -266,7 +266,7 @@ def test_restore_rejects_busy_prefill_engine(tiny_model):
     srv = _server(tiny_model, disagg=True, batch_size=2)
     srv.submit(np.arange(1, 30, dtype=np.int32), max_new_tokens=8)
     srv._drain_queue()
-    srv.prefill.start(srv._backlog.pop(0))
+    srv.prefill.start(srv._backlog.popleft())
     assert not srv.prefill.idle
     with pytest.raises(ValueError, match="idle"):
         srv.restore({"seed": srv.seed, "uid": 0, "sequences": []})

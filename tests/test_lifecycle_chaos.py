@@ -1,0 +1,354 @@
+"""Request-lifecycle chaos on the REAL server: SLA deadlines cancel a
+request at whatever stage it is in (backlog, live decode, swapped-out
+victim, async prefill / staged handoff), engine crashes recover through
+handoff leases to BIT-IDENTICAL tokens at any temperature, poisoned
+(non-finite) logits shed only the poisoned sequence, overload rejects
+fast with a structured error, and a kill-and-restore carries remaining
+TTLs across the restart.  Every server here runs with ``audit=True``
+and every scenario ends fully reclaimed: clean ``audit()``, zero pages
+in use, zero handoff pages, zero stash bytes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_config
+from repro.memory.tiers import FaultPlan, fault_plan
+from repro.runtime import ft
+from repro.runtime.serve import BatchedServer
+
+PAGE = 4
+MAX_SEQ = 64
+CHUNK = 8
+# see test_chaos_serve: two 7-page worst cases fit, the third preempts
+SMALL_POOL = 18
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("qwen2.5-14b").reduced()
+    cfg = dataclasses.replace(cfg, remat=False, page_size=PAGE)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _server(tiny_model, *, disagg=False, **kw):
+    model, params = tiny_model
+    kw.setdefault("batch_size", 3)
+    kw.setdefault("max_seq", MAX_SEQ)
+    kw.setdefault("page_size", PAGE)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("audit", True)
+    if disagg:
+        kw.setdefault("prefill_async", True)
+        kw.setdefault("prefill_chunk_tokens", CHUNK)
+    return BatchedServer(model, params, **kw)
+
+
+def _drive(server, reqs, max_rounds=80):
+    finished = []
+    for _ in range(max_rounds):
+        finished += server.run_once()
+        if all(r.done.is_set() for r in reqs):
+            return finished
+    raise AssertionError(
+        f"requests stuck: {[(r.uid, r.done.is_set()) for r in reqs]}")
+
+
+def _assert_reclaimed(srv):
+    """The zero-leak contract after a full drain, whatever mix of
+    completions / expiries / sheds / crash recoveries got us here."""
+    srv.manager.audit()
+    assert srv.manager.pages_in_use == 0
+    assert srv.manager.handoff_pages == 0
+    assert not srv._preempted
+    assert not srv._orphan_prefills and not srv._orphan_handoffs
+    if srv.swapper is not None:
+        assert srv.swapper.outstanding_bytes == 0
+
+
+def _alive(srv):
+    """The server serves fresh work after whatever just happened."""
+    extra = srv.submit(np.asarray([7, 8], np.int32), max_new_tokens=4)
+    _drive(srv, [extra])
+    assert extra.error is None and len(extra.output) == 4
+    assert extra.outcome == "completed"
+
+
+# ---------------------------------------------------------------------------
+# deadlines: cancellation at every lifecycle stage
+# ---------------------------------------------------------------------------
+
+def test_deadline_expires_in_backlog(tiny_model):
+    """No free slot, no preemption: the queued request's TTL lapses
+    while it waits and it is cancelled without ever touching a page."""
+    srv = _server(tiny_model, batch_size=1, preempt=False,
+                  num_pages=SMALL_POOL)
+    a = srv.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=24)
+    b = srv.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=24,
+                   deadline_blocks=2)
+    _drive(srv, [a, b])
+    assert a.outcome == "completed" and len(a.output) == 24
+    assert b.outcome == "expired" and b.done.is_set()
+    assert b.error["reason"] == "deadline_expired"
+    assert "backlog" in b.error["detail"]
+    assert b.error["tokens_emitted"] == 0
+    assert srv.stats["expired"] == 1
+    _assert_reclaimed(srv)
+    _alive(srv)
+
+
+def test_deadline_expires_mid_decode_reclaims_slot(tiny_model):
+    """A live slot past its deadline is evicted only after the pipeline
+    drains; its partial output survives on the Request."""
+    srv = _server(tiny_model, batch_size=1)
+    req = srv.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=24,
+                     deadline_blocks=2)
+    _drive(srv, [req])
+    assert req.outcome == "expired"
+    assert req.error["reason"] == "deadline_expired"
+    assert 0 < len(req.output) < 24
+    assert req.error["tokens_emitted"] == len(req.output)
+    _assert_reclaimed(srv)
+    _alive(srv)
+
+
+def test_deadline_expires_while_preempted_drops_stash(tiny_model):
+    """A swapped-out victim whose TTL lapses never resumes: its remote
+    stash is released, not leaked."""
+    srv = _server(tiny_model, num_pages=SMALL_POOL, temperature=0.7)
+    reqs = [srv.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=24)
+            for _ in range(3)]
+    victim = None
+    for _ in range(60):
+        srv.run_once(max_blocks=1)
+        if srv._preempted:
+            victim = srv._preempted[0].req
+            # TTL already lapsed: submitted at block 0, clock past 1
+            victim.deadline_blocks = 1
+            break
+    assert victim is not None, "preemption never happened"
+    _drive(srv, reqs)
+    assert victim.outcome == "expired"
+    assert "preempted" in victim.error["detail"]
+    assert srv.stats["expired"] == 1
+    for r in reqs:
+        if r is not victim:
+            assert r.outcome == "completed" and len(r.output) == 24
+    _assert_reclaimed(srv)
+
+
+def test_deadline_expires_during_async_prefill(tiny_model):
+    """Disaggregated admission: prompts whose TTL lapses before their
+    prefill/handoff can reach a decode slot are cancelled mid-engine
+    and every staged page comes back."""
+    srv = _server(tiny_model, disagg=True)
+    b = srv.submit(np.arange(1, 7, dtype=np.int32), max_new_tokens=24)
+    a = srv.submit(np.arange(1, 25, dtype=np.int32), max_new_tokens=16,
+                   deadline_blocks=2)
+    c = srv.submit(np.arange(1, 14, dtype=np.int32), max_new_tokens=16,
+                   deadline_blocks=2)
+    _drive(srv, [a, b, c])
+    assert b.outcome == "completed" and len(b.output) == 24
+    for r in (a, c):
+        assert r.outcome == "expired", (r.uid, r.outcome)
+        assert r.error["reason"] == "deadline_expired"
+    assert srv.stats["expired"] == 2
+    assert srv.prefill.idle
+    _assert_reclaimed(srv)
+    _alive(srv)
+
+
+# ---------------------------------------------------------------------------
+# engine crashes: recovery must be bit-identical
+# ---------------------------------------------------------------------------
+
+def _submit_crash_mix(server):
+    return [server.submit(np.arange(1, 7, dtype=np.int32),
+                          max_new_tokens=24),
+            server.submit(np.arange(1, 25, dtype=np.int32),
+                          max_new_tokens=8),
+            server.submit(np.arange(1, 14, dtype=np.int32),
+                          max_new_tokens=12)]
+
+
+@pytest.mark.parametrize("temp", [0.0, 0.7])
+def test_prefill_crash_mid_chunk_recovers_bit_identical(tiny_model, temp):
+    """The prefill engine dies between chunks: in-flight prefills lose
+    their partial pages and requeue; staged handoffs are reclaimed on
+    lease expiry.  Retried requests emit the exact tokens of the
+    crash-free run."""
+    ref_srv = _server(tiny_model, disagg=True, temperature=temp)
+    ref = _submit_crash_mix(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(tiny_model, disagg=True, temperature=temp,
+                  handoff_lease_blocks=3)
+    got = _submit_crash_mix(srv)
+    with fault_plan(FaultPlan(crash_prefill_at_chunk=2)):
+        _drive(srv, got)
+    assert srv.stats["engine_crashes"] >= 1
+    assert srv.stats["crash_requeues"] >= 1
+    for a, b in zip(ref, got):
+        assert a.output == b.output, (temp, a.uid, a.output, b.output)
+        assert b.error is None and b.outcome == "completed"
+    _assert_reclaimed(srv)
+
+
+@pytest.mark.parametrize("temp", [0.0, 0.7])
+def test_adopt_crash_lease_reclaim_bit_identical(tiny_model, temp):
+    """The decode side dies mid-adoption: the popped handoff is
+    orphaned, the watchdog reclaims it when its lease lapses, the
+    victim re-prefills from scratch — and still emits the exact tokens
+    of the crash-free run."""
+    def run(server, plan):
+        a = server.submit(np.arange(1, 7, dtype=np.int32),
+                          max_new_tokens=24)
+        server.run_once(max_blocks=2)        # a adopted, clock ticking
+        b = server.submit(np.arange(1, 14, dtype=np.int32),
+                          max_new_tokens=8)
+        if plan is not None:
+            with fault_plan(plan):
+                _drive(server, [a, b])
+        else:
+            _drive(server, [a, b])
+        return a, b
+
+    ref_srv = _server(tiny_model, disagg=True, temperature=temp)
+    ref = run(ref_srv, None)
+
+    srv = _server(tiny_model, disagg=True, temperature=temp,
+                  handoff_lease_blocks=2)
+    got = run(srv, FaultPlan(crash_adopt_at_block=1))
+    assert srv.stats["engine_crashes"] >= 1
+    assert srv.stats["lease_reclaims"] >= 1
+    assert srv.stats["crash_requeues"] >= 1
+    for a, b in zip(ref, got):
+        assert a.output == b.output, (temp, a.uid, a.output, b.output)
+        assert b.error is None and b.outcome == "completed"
+    _assert_reclaimed(srv)
+
+
+# ---------------------------------------------------------------------------
+# poison shedding: one bad sequence must not take the batch down
+# ---------------------------------------------------------------------------
+
+def test_poisoned_logits_shed_only_the_victim(tiny_model):
+    """NaN scribbled into ONE sequence's KV pages mid-decode: its next
+    harvest hits non-finite logits and ONLY that sequence is shed with
+    a structured error; batchmates decode every token they would have
+    anyway."""
+    srv = _server(tiny_model)
+    reqs = [srv.submit(np.arange(1, 5, dtype=np.int32) + 10 * i,
+                       max_new_tokens=24) for i in range(3)]
+    srv.run_once(max_blocks=1)
+    slot = 1
+    victim = srv.slots[slot]
+    assert victim is not None
+    kept = len(victim.output)
+    # poison a page OWNED by the victim alone — the bucketed prompt's
+    # leading padding page is legitimately shared by the whole batch,
+    # and NaN there would (correctly!) poison all three
+    pid = next(p for p in srv.manager.pages[slot]
+               if srv.manager.refcount[p] == 1)
+    srv.cache["k_pages"] = srv.cache["k_pages"].at[:, pid].set(jnp.nan)
+    for _ in range(60):
+        srv.run_once(max_blocks=1)
+        if victim.done.is_set():
+            break
+    # scrub non-finites out of the (now freed) pages before the pool
+    # hands them to anyone else — the fault model is a one-shot
+    # corruption, not a permanently broken device buffer; the victim's
+    # last block also WROTE NaN activations into its own k/v pages
+    for pool in ("k_pages", "v_pages"):
+        srv.cache[pool] = jnp.nan_to_num(srv.cache[pool])
+    _drive(srv, reqs)
+    assert victim.outcome == "shed"
+    assert victim.error["reason"] == "poisoned_logits"
+    assert victim.error["tokens_emitted"] == len(victim.output) >= kept
+    assert srv.stats["poison_sheds"] == 1
+    assert srv.stats["sheds"] == 1
+    for r in reqs:
+        if r is not victim:
+            assert r.outcome == "completed" and r.error is None
+            assert len(r.output) == 24
+    _assert_reclaimed(srv)
+    _alive(srv)
+
+
+# ---------------------------------------------------------------------------
+# overload admission control on the live server
+# ---------------------------------------------------------------------------
+
+def test_overload_rejects_fast_with_structured_error(tiny_model):
+    """Past ``max_pending`` the submitter gets an immediate structured
+    rejection — no page touched, no queue joined — and the admitted
+    requests all complete.  Once drained, the server accepts again."""
+    srv = _server(tiny_model, batch_size=2, num_pages=SMALL_POOL,
+                  max_pending=3, overload_factor=1.5)
+    reqs = [srv.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=16)
+            for _ in range(8)]
+    rejected = [r for r in reqs if r.outcome == "rejected"]
+    admitted = [r for r in reqs if r.outcome != "rejected"]
+    assert len(rejected) == 5 and len(admitted) == 3
+    for r in rejected:
+        assert r.done.is_set() and len(r.output) == 0
+        assert r.error["reason"] == "admission_rejected"
+        assert "max_pending" in r.error["detail"]
+    _drive(srv, admitted)
+    for r in admitted:
+        assert r.outcome == "completed" and len(r.output) == 16
+    assert srv.stats["rejected"] == 5
+    assert srv.stats["completed"] == 3
+    assert srv.stats["e2e_p99_blocks"] > 0.0
+    _assert_reclaimed(srv)
+    _alive(srv)                               # not wedged shut
+
+
+# ---------------------------------------------------------------------------
+# restart: remaining TTLs survive a kill-and-restore
+# ---------------------------------------------------------------------------
+
+def test_restart_preserves_remaining_ttl(tiny_model, tmp_path):
+    """Kill a server mid-decode and restore from disk: deadline
+    metadata rides the snapshot and is REBASED onto the new server's
+    clock, so a tight TTL still expires after the restart while
+    generous ones complete bit-identically."""
+    def submit_all(server):
+        return [server.submit(np.arange(1, 5, dtype=np.int32),
+                              max_new_tokens=24),
+                server.submit(np.arange(1, 5, dtype=np.int32),
+                              max_new_tokens=24, deadline_blocks=50),
+                server.submit(np.arange(1, 5, dtype=np.int32),
+                              max_new_tokens=24, deadline_blocks=3)]
+
+    ref_srv = _server(tiny_model, temperature=0.7)
+    ref = submit_all(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(tiny_model, temperature=0.7)
+    reqs = submit_all(srv)
+    srv.run_once(max_blocks=1)
+    snap = ft.snapshot_server(srv)
+    assert snap["blocks"] == 1
+    assert any(s.get("deadline_blocks") == 3 for s in snap["sequences"])
+    path = ft.save_server_snapshot(tmp_path / "lifecycle_ckpt", snap)
+    del srv
+
+    srv2 = _server(tiny_model, temperature=0.7)
+    ft.restore_server(srv2, ft.load_server_snapshot(path))
+    by_uid = {r.uid: r for r in srv2._backlog}
+    by_uid.update({ps.req.uid: ps.req for ps in srv2._preempted})
+    got = [by_uid[r.uid] for r in reqs]
+    _drive(srv2, got)
+    assert got[0].outcome == "completed"
+    assert got[1].outcome == "completed"
+    assert got[2].outcome == "expired"        # 1 pre-crash + post-restart
+    assert got[2].error["reason"] == "deadline_expired"
+    for a, b in zip(ref[:2], got[:2]):
+        assert a.output == b.output, (a.uid, a.output, b.output)
+    assert srv2.stats["expired"] == 1
+    _assert_reclaimed(srv2)
