@@ -30,6 +30,12 @@ gates the headline numbers so they cannot silently rot:
   activity (>= 1 preemption AND resume, 0 sheds), bit-identical tokens,
   a clean allocator audit trail, and a shorter worst-case admission
   wait than the no-preemption server;
+* canonical tiers (``local`` / ``remote`` / ``cold``) must appear in
+  hierarchy order in every tier block, and the ``cold_park``
+  deep-preemption row must show real cold parking: both victims parked
+  AND promoted back, bit-identical tokens, a reduced remote-tier
+  high-water mark, and nonzero modeled traffic on the ``local->cold``
+  and ``cold->remote`` edges of its transfer ledger;
 * the ``disagg`` interference scenario must show the async prefill
   engine earning its keep: worst-case decode stall <= 1 block vs >= 3
   for monolithic admission, tokens bit-identical at temperature 0.0 AND
@@ -61,8 +67,9 @@ TOP_KEYS = {
     "model", "batch", "prompt", "new_tokens", "block_size", "max_seq",
     "tokens_per_s", "speedup_block_vs_per_token",
     "paged_vs_dense_tokens_identical", "kv_memory", "kv_quant",
-    "pipeline", "prefix_cache", "sharded", "preemption", "disagg",
-    "overload", "tiers", "tiers_peak", "attention_scaling",
+    "pipeline", "prefix_cache", "sharded", "preemption", "cold_park",
+    "disagg", "overload", "tiers", "tiers_peak", "transfers",
+    "attention_scaling",
 }
 TOKENS_PER_S_KEYS = {"per_token_dense", "block_dense", "server_dense",
                      "server_paged", "server_paged_q8",
@@ -129,6 +136,19 @@ OVERLOAD_SIDE_KEYS = {
     "drain_s",
 }
 TIER_KEYS = {"in_use_bytes", "hwm_bytes", "capacity_bytes", "by_class"}
+# canonical hierarchy order: any of these that appear in a tier block
+# must appear in this relative order (the ledger iterates the registry's
+# ordered hierarchy; a shuffled block means the ordering contract broke)
+TIER_ORDER = ("local", "remote", "cold")
+COLD_PARK_KEYS = {
+    "num_pages", "page_size", "hogs", "hog_new_tokens", "big_new_tokens",
+    "preemptions", "cold_parks", "cold_promotes",
+    "remote_hwm_bytes_no_park", "remote_hwm_bytes_cold_park",
+    "remote_hwm_reduction", "transfers_cold_park",
+    "drain_s_no_park", "drain_s_cold_park",
+    "tokens_identical_to_uncontended",
+}
+TRANSFER_EDGE_KEYS = {"bytes", "modeled_s", "count"}
 # server_paged may not drop below this fraction of server_dense (the
 # tentpole claim; headroom for CI timing noise)
 PAGED_VS_DENSE_FLOOR = 0.95
@@ -198,6 +218,8 @@ def check(path: Path, *, require_sharded: bool = False) -> list[str]:
     errors.extend(_check_kv_quant(bench))
     errors.extend(_check_sharded(bench, require_multi=require_sharded))
     errors.extend(_check_preemption(bench))
+    errors.extend(_check_cold_park(bench))
+    errors.extend(_check_transfer_map("transfers", bench.get("transfers")))
     errors.extend(_check_disagg(bench))
     errors.extend(_check_overload(bench))
     errors.extend(_check_regressions(bench))
@@ -239,6 +261,79 @@ def _check_tier_block(block: str, tiers) -> list[str]:
                         f"records residency without capacity")
     if isinstance(tiers, dict) and "local" not in tiers:
         errors.append(f"{block} must include the 'local' tier")
+    if isinstance(tiers, dict):
+        canon = [n for n in tiers if n in TIER_ORDER]
+        if canon != sorted(canon, key=TIER_ORDER.index):
+            errors.append(
+                f"{block} canonical tiers appear as {canon}; they must "
+                f"follow the hierarchy order {list(TIER_ORDER)} (the "
+                f"ledger's ordered-registry contract broke)")
+    return errors
+
+
+def _check_transfer_map(label: str, xfers) -> list[str]:
+    """A tier-edge transfer ledger: ``"src->dst"`` keys mapping to
+    non-negative ``bytes`` / ``modeled_s`` / ``count`` records."""
+    errors: list[str] = []
+    if not isinstance(xfers, dict):
+        return [f"{label} must be a mapping of 'src->dst' edges"]
+    for edge, rec in xfers.items():
+        if not (isinstance(edge, str) and edge.count("->") == 1
+                and all(edge.split("->"))):
+            errors.append(f"{label} edge key {edge!r} is not 'src->dst'")
+            continue
+        missing = TRANSFER_EDGE_KEYS - (rec.keys() if isinstance(rec, dict)
+                                        else set())
+        if missing:
+            errors.append(f"{label}['{edge}'] missing {sorted(missing)}")
+            continue
+        for field in TRANSFER_EDGE_KEYS:
+            v = rec[field]
+            if not isinstance(v, (int, float)) or v < 0:
+                errors.append(f"{label}['{edge}'] {field} must be a "
+                              f"non-negative number, got {v!r}")
+    return errors
+
+
+def _check_cold_park(bench: dict) -> list[str]:
+    """The deep-preemption cold-parking row: parking must have really
+    fired (both victims demoted AND promoted back), tokens bit-identical,
+    the remote-tier high-water mark reduced, and real modeled traffic on
+    the cold-tier edges of the transfer ledger."""
+    cp = bench.get("cold_park")
+    if not isinstance(cp, dict):
+        return ["cold_park must be a mapping (the serve_cold_park row)"]
+    missing = COLD_PARK_KEYS - cp.keys()
+    if missing:
+        return [f"missing cold_park keys: {sorted(missing)}"]
+    errors: list[str] = []
+    if cp["tokens_identical_to_uncontended"] is not True:
+        errors.append("cold_park tokens_identical_to_uncontended must be "
+                      "true (cold park/promote changed the tokens)")
+    for field, floor in (("preemptions", 1), ("cold_parks", 2),
+                         ("cold_promotes", 2)):
+        v = cp.get(field)
+        if not isinstance(v, int) or v < floor:
+            errors.append(f"cold_park {field} must be an int >= {floor}, "
+                          f"got {v!r}: the cold-parking scenario is "
+                          f"degenerate")
+    red = cp.get("remote_hwm_reduction")
+    if not isinstance(red, (int, float)) or red <= 0:
+        errors.append(
+            f"cold_park remote_hwm_reduction must be > 0 (parking victims "
+            f"cold must shrink the remote-tier high-water mark), got "
+            f"{red!r}")
+    xfers = cp.get("transfers_cold_park")
+    errors.extend(_check_transfer_map("cold_park.transfers_cold_park",
+                                      xfers))
+    if isinstance(xfers, dict):
+        for edge in ("local->cold", "cold->remote"):
+            rec = xfers.get(edge)
+            if not (isinstance(rec, dict) and rec.get("bytes", 0) > 0):
+                errors.append(
+                    f"cold_park.transfers_cold_park['{edge}'] must show "
+                    f"nonzero bytes: the cold tier saw no traffic in the "
+                    f"cold-park row")
     return errors
 
 

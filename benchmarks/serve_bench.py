@@ -473,6 +473,81 @@ def _serve_preemption(cfg, params) -> dict:
     }
 
 
+COLD_BIG_NEW = 88             # worst-case 24 pages: shortfall evicts BOTH hogs
+
+
+def _serve_cold_park(cfg, params) -> dict:
+    """Deep-preemption cold-parking scenario: two hog requests reserve
+    nearly the whole small pool, then one big request arrives whose
+    worst-case reservation exceeds what evicting a single hog frees —
+    both hogs are stashed in ONE preemption round.  Without cold parking
+    both stashes sit in the remote tier simultaneously (remote hwm = two
+    stashes); with ``cold_park_after_blocks=0`` victims swap straight to
+    the cold tier and only transit remote one at a time on the
+    promote-through-remote resume path (remote hwm = one stash).  Tokens
+    stay bit-identical to an uncontended big-pool run in every config —
+    tier moves never touch bytes."""
+    def submit_all(server):
+        rng = np.random.RandomState(29)
+        reqs = [server.submit(rng.randint(0, cfg.vocab, PROMPT)
+                              .astype(np.int32),
+                              max_new_tokens=HOG_NEW_TOKENS)
+                for _ in range(N_HOGS)]
+        reqs.append(server.submit(rng.randint(0, cfg.vocab, PROMPT)
+                                  .astype(np.int32),
+                                  max_new_tokens=COLD_BIG_NEW))
+        return reqs
+
+    def serve(cold_park: int | None, num_pages: int | None):
+        srv = BatchedServer(build_model(cfg), params, batch_size=3,
+                            max_seq=PREEMPT_MAX_SEQ, block_size=PREEMPT_BLOCK,
+                            paged=True, page_size=PREEMPT_PAGE,
+                            num_pages=num_pages, preempt=True, audit=True,
+                            cold_park_after_blocks=cold_park)
+        reqs = submit_all(srv)
+        t0 = time.perf_counter()
+        srv.run_once()
+        dt = time.perf_counter() - t0
+        assert all(r.done.is_set() and r.error is None for r in reqs), \
+            [(r.uid, r.error) for r in reqs]
+        return [tuple(r.output) for r in reqs], dt, srv
+
+    out_ref, _, _ = serve(None, None)                  # uncontended pool
+    out_n, dt_n, srv_n = serve(None, PREEMPT_POOL)     # remote-only stashes
+    out_c, dt_c, srv_c = serve(0, PREEMPT_POOL)        # park straight to cold
+    assert out_n == out_ref, \
+        "remote-stash serving must emit identical tokens to uncontended"
+    assert out_c == out_ref, \
+        "cold-parked serving must emit identical tokens to uncontended"
+    assert srv_n.stats["cold_parks"] == 0, srv_n.stats
+    assert srv_c.stats["cold_parks"] >= 2, srv_c.stats
+    assert srv_c.stats["cold_promotes"] == srv_c.stats["cold_parks"], \
+        srv_c.stats
+    hwm_n = srv_n.mem.ledger.snapshot()["remote"]["hwm_bytes"]
+    hwm_c = srv_c.mem.ledger.snapshot()["remote"]["hwm_bytes"]
+    assert 0 < hwm_c < hwm_n, (hwm_c, hwm_n)
+    xfers = srv_c.mem.ledger.transfers()
+    assert xfers.get("local->cold", {}).get("bytes", 0) > 0, xfers
+    assert xfers.get("cold->remote", {}).get("bytes", 0) > 0, xfers
+    return {
+        "num_pages": PREEMPT_POOL, "page_size": PREEMPT_PAGE,
+        "hogs": N_HOGS, "hog_new_tokens": HOG_NEW_TOKENS,
+        "big_new_tokens": COLD_BIG_NEW,
+        "preemptions": srv_c.stats["preemptions"],
+        "cold_parks": srv_c.stats["cold_parks"],
+        "cold_promotes": srv_c.stats["cold_promotes"],
+        "remote_hwm_bytes_no_park": hwm_n,
+        "remote_hwm_bytes_cold_park": hwm_c,
+        "remote_hwm_reduction": round(1 - hwm_c / max(hwm_n, 1), 3),
+        # modeled tier-edge traffic of the cold-park run: bytes, modeled
+        # transfer seconds and move count per hierarchy edge
+        "transfers_cold_park": xfers,
+        "drain_s_no_park": round(dt_n, 3),
+        "drain_s_cold_park": round(dt_c, 3),
+        "tokens_identical_to_uncontended": True,
+    }
+
+
 DISAGG_LONG_PROMPT = 128      # the mid-stream arrival that stalls decode
 DISAGG_LONG_NEW = 8
 DISAGG_N_LONG = 2
@@ -728,6 +803,7 @@ def run() -> list[str]:
     prefix = _serve_prefix(cfg, params)
     sharded = _serve_sharded(cfg, params, out_paged)
     preemption = _serve_preemption(cfg, params)
+    cold_park = _serve_cold_park(cfg, params)
     disagg = _serve_disagg(cfg, params)
     overload = _serve_overload(cfg, params)
 
@@ -805,6 +881,12 @@ def run() -> list[str]:
         # magnitude earlier than waiting on hog reclamation, with
         # bit-identical tokens and a clean allocator audit every block
         "preemption": preemption,
+        # cold-tier parking under deep preemption: with
+        # cold_park_after_blocks=0 both victims of a two-victim round
+        # swap straight to the cold tier and only transit remote one at
+        # a time on resume — the remote-tier high-water mark halves
+        # while every token stays bit-identical
+        "cold_park": cold_park,
         # disaggregated prefill/decode: mid-stream long-prompt arrivals
         # stall monolithic decode for whole-prompt prefills; the async
         # engine bounds the stall to one chunk with bit-identical tokens
@@ -824,6 +906,10 @@ def run() -> list[str]:
         # class is non-degenerate.
         "tiers": srv_paged.tier_stats(),
         "tiers_peak": srv_paged.tier_stats_peak(),
+        # tier-edge transfer ledger of the headline paged server: bytes
+        # moved, modeled seconds (bandwidth/latency link model shared
+        # with the Table-4.3 simulator) and move count per edge
+        "transfers": srv_paged.mem.ledger.transfers(),
         "attention_scaling": _attention_scaling(model),
     }
     JSON_PATH.write_text(json.dumps(bench, indent=2) + "\n")
@@ -890,6 +976,14 @@ def run() -> list[str]:
         f"{preemption['max_admission_wait_blocks_no_preempt']}"
         f" wait_reduction={preemption['admission_wait_reduction']:.1%}"
         f" audits={preemption['audits']} identical_tokens=True",
+        f"serve_cold_park,"
+        f"{cold_park['drain_s_cold_park'] * 1e6:.0f},"
+        f"cold_parks={cold_park['cold_parks']}"
+        f" cold_promotes={cold_park['cold_promotes']}"
+        f" remote_hwm_cold={cold_park['remote_hwm_bytes_cold_park']}"
+        f" vs_no_park={cold_park['remote_hwm_bytes_no_park']}"
+        f" remote_hwm_reduction={cold_park['remote_hwm_reduction']:.1%}"
+        f" identical_tokens=True",
         f"server_disagg,{dt_disagg / NEW_TOKENS * 1e6:.0f},"
         f"tok_s={tps_disagg:.0f}"
         f" vs_paged={tps_disagg / tps_paged:.2f}x"

@@ -40,11 +40,17 @@ class LinkModel:
         return self.eff_min + (self.eff_max - self.eff_min) * frac
 
     def transfer_time(self, size_bytes: float) -> float:
-        """Eq. (4.1): size / (BW * efficiency(size)) + fixed latency."""
-        if size_bytes <= 0:
-            return self.fixed_latency_s
-        bw = self.bandwidth_Bps * self.efficiency(size_bytes)
-        return self.fixed_latency_s + size_bytes / bw
+        """Eq. (4.1): size / (BW * efficiency(size)) + fixed latency.
+
+        Routed through :func:`repro.memory.accounting.modeled_transfer_s`
+        — the same formula the live MemoryLedger charges per tier edge —
+        so simulated and measured transfer costs are one code path.
+        (Function-level import: this module stays jax-free at import.)"""
+        from repro.memory.accounting import modeled_transfer_s
+        return modeled_transfer_s(size_bytes,
+                                  bandwidth_gbps=self.bandwidth_Bps / GB,
+                                  latency_us=self.fixed_latency_s * 1e6,
+                                  efficiency=self.efficiency(size_bytes))
 
 
 # ---------------------------------------------------------------------------

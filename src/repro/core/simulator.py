@@ -85,6 +85,25 @@ class SystemConfig:
             return latency.make_fh_link(self.fabric_bw)
         return latency.make_nvlink(self.fabric_bw)
 
+    def tier_links(self) -> dict[str, tuple[float, float]]:
+        """Registry-style per-tier link view ``{tier: (bandwidth_gbps,
+        latency_us)}``: local/remote from this node's modeled hardware,
+        cold from the registry's default (High-Bandwidth-Flash) link —
+        the same (bandwidth, latency) vocabulary
+        :data:`repro.memory.tiers.DEFAULT_TIER_LINKS` carries, and the
+        same :func:`~repro.memory.accounting.modeled_transfer_s` formula
+        (via ``LinkModel.transfer_time``) prices both.  This is what
+        keeps the simulator's per-tier costs and the live ledger's
+        tier-edge charges one code path."""
+        from repro.memory.tiers import COLD, DEFAULT_TIER_LINKS, LOCAL, REMOTE
+        return {
+            LOCAL: (self.local_bw / GB,
+                    hw.PAPER_READ_LATENCY_NS * 1e-3),
+            REMOTE: (self.remote_bw / GB,
+                     hw.PAPER_READ_LATENCY_NS * 1e-3),
+            COLD: DEFAULT_TIER_LINKS[COLD],
+        }
+
 
 def baseline8() -> SystemConfig:
     """8x H200 + NVLink 4.0 (Table 4.1/4.2)."""

@@ -2,9 +2,10 @@
 
 One place for everything the paper calls *memory orchestration*:
 
-* :mod:`repro.memory.tiers` — backend-resolved tier registry (local HBM /
-  host / remote pool) and the placement primitives (``page_in`` /
-  ``page_out`` / ``host_put`` / sharded variants).
+* :mod:`repro.memory.tiers` — backend-resolved N-tier registry (the
+  ordered ``local``/``remote``/``cold`` hierarchy with per-tier modeled
+  bandwidth/latency) and the placement primitives (``page_in`` /
+  ``page_out`` / ``eager_to_tier`` / ``host_put`` / sharded variants).
 * :mod:`repro.memory.policies` — the :class:`ResidencyPolicy` seam and
   its concrete policies (``PinLocal``, ``DoubleBufferPrefetch``,
   ``BlockPoolResidency``, ``OffloadBetweenSteps``,
@@ -27,26 +28,31 @@ The ``repro.core.pager`` re-export shim promised for one release is
 gone; import from here.
 """
 from repro.memory.accounting import (MemoryLedger, capacity_reduction,
-                                     paged_window_bytes, peak_local_bytes,
-                                     resident_window_bytes, tree_bytes)
+                                     modeled_transfer_s, paged_window_bytes,
+                                     peak_local_bytes, resident_window_bytes,
+                                     tree_bytes)
 from repro.memory.orchestrator import (MemoryOrchestrator, donating_jit,
                                        paged_map, paged_scan,
                                        paged_scan_cache)
 from repro.memory.policies import (BlockPoolResidency, DoubleBufferPrefetch,
                                    OffloadBetweenSteps, PagerConfig, PinLocal,
                                    ResidencyPolicy, TopKExpertPrefetch)
-from repro.memory.tiers import (LOCAL, REMOTE, FaultPlan, TierTransferError,
-                                active_fault_plan, fault_plan, host_put,
+from repro.memory.tiers import (COLD, HIERARCHY, LOCAL, REMOTE, FaultPlan,
+                                Tier, TierEdge, TierTransferError,
+                                active_fault_plan, eager_to_remote,
+                                eager_to_tier, fault_plan, host_put,
                                 install_fault_plan, local_sharding, page_in,
                                 page_out, remote_sharding, reset,
+                                resolved_cold_kind, resolved_kind,
                                 resolved_local_kind, resolved_remote_kind,
                                 supports_memory_spaces, tier_sharding,
                                 to_remote, transfer_with_retry)
 from repro.memory.swap import PageSwapper, SwapHandle
 
 __all__ = [
-    "MemoryLedger", "capacity_reduction", "paged_window_bytes",
-    "peak_local_bytes", "resident_window_bytes", "tree_bytes",
+    "MemoryLedger", "capacity_reduction", "modeled_transfer_s",
+    "paged_window_bytes", "peak_local_bytes", "resident_window_bytes",
+    "tree_bytes",
     "MemoryOrchestrator", "donating_jit", "paged_map", "paged_scan",
     "paged_scan_cache",
     "BlockPoolResidency", "DoubleBufferPrefetch", "OffloadBetweenSteps",
@@ -54,8 +60,9 @@ __all__ = [
     "PageSwapper", "SwapHandle",
     "FaultPlan", "TierTransferError", "active_fault_plan", "fault_plan",
     "install_fault_plan", "transfer_with_retry",
-    "LOCAL", "REMOTE", "host_put", "local_sharding", "page_in", "page_out",
-    "remote_sharding", "reset", "resolved_local_kind",
-    "resolved_remote_kind", "supports_memory_spaces", "tier_sharding",
-    "to_remote",
+    "COLD", "HIERARCHY", "LOCAL", "REMOTE", "Tier", "TierEdge",
+    "eager_to_remote", "eager_to_tier", "host_put", "local_sharding",
+    "page_in", "page_out", "remote_sharding", "reset", "resolved_cold_kind",
+    "resolved_kind", "resolved_local_kind", "resolved_remote_kind",
+    "supports_memory_spaces", "tier_sharding", "to_remote",
 ]

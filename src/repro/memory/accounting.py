@@ -29,9 +29,29 @@ from typing import Any
 
 import jax
 
+# Canonical hierarchy order for per-tier views (mirrors
+# ``tiers.HIERARCHY`` without importing it — accounting sits below the
+# registry in the import graph).  Unknown tier names sort after these,
+# alphabetically.
+_TIER_ORDER = ("local", "remote", "cold")
+
 
 def tree_bytes(tree: Any) -> int:
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def modeled_transfer_s(nbytes: float, *, bandwidth_gbps: float,
+                       latency_us: float = 0.0,
+                       efficiency: float = 1.0) -> float:
+    """THE modeled transfer-time formula: fixed latency + bytes over
+    effective bandwidth.  Both the live :class:`MemoryLedger` (per
+    tier-edge charges) and the Table-4.3 simulator's
+    :class:`~repro.core.latency.LinkModel` route through this, so
+    measured and simulated transfer costs cannot drift apart."""
+    lat = latency_us * 1e-6
+    if nbytes <= 0 or bandwidth_gbps <= 0 or efficiency <= 0:
+        return lat
+    return lat + float(nbytes) / (bandwidth_gbps * 1e9 * efficiency)
 
 
 def paged_window_bytes(per_layer_bytes: float, lookahead: int = 1) -> float:
@@ -96,6 +116,8 @@ class MemoryLedger:
         self._now: dict[str, dict[str, int]] = {}
         self._hwm: dict[str, int] = {}
         self._cap: dict[str, dict[str, int]] = {}
+        # per-tier-edge transfer accounting: (src, dst) -> counters
+        self._xfer: dict[tuple[str, str], dict] = {}
         self.shards = 1          # model-axis shards the bytes are "per"
 
     def record(self, tier: str, tensor_class: str, nbytes: int) -> None:
@@ -123,7 +145,53 @@ class MemoryLedger:
         return dict(self._now.get(tier, {}))
 
     def tiers(self) -> list[str]:
-        return sorted(set(self._now) | set(self._hwm) | set(self._cap))
+        """Every tier the ledger has seen, in hierarchy order (local,
+        remote, cold, then any custom names alphabetically) — the order
+        the BENCH ``tiers`` map is emitted and schema-checked in."""
+        names = set(self._now) | set(self._hwm) | set(self._cap)
+        rank = {n: i for i, n in enumerate(_TIER_ORDER)}
+        return sorted(names, key=lambda n: (rank.get(n, len(rank)), n))
+
+    # ----- tier-edge transfers ----------------------------------------------
+    def charge_transfer(self, src: str, dst: str, nbytes: int, *,
+                        bandwidth_gbps: float | None = None,
+                        latency_us: float | None = None) -> float:
+        """Charge one eager transfer of ``nbytes`` across the
+        ``src -> dst`` tier edge: accumulates transfer bytes, a transfer
+        count, and the MODELED transfer time (per-tier bandwidth/latency
+        from the registry's edge model unless given explicitly).
+        Returns the modeled seconds for this transfer.
+
+        Only *eager* host-level movements charge here (placements,
+        swap stashes, cold parks/promotes, handoff staging); the traced
+        paging streams inside jit (layer prefetch, offload_kv round
+        trips) are modeled by the simulator's paging stream instead —
+        both through :func:`modeled_transfer_s`."""
+        if bandwidth_gbps is None or latency_us is None:
+            from repro.memory import tiers as _tiers
+            e = _tiers.registry().edge(src, dst)
+            bandwidth_gbps = e.bandwidth_gbps if bandwidth_gbps is None \
+                else bandwidth_gbps
+            latency_us = e.latency_us if latency_us is None else latency_us
+        dt = modeled_transfer_s(nbytes, bandwidth_gbps=bandwidth_gbps,
+                                latency_us=latency_us)
+        edge = self._xfer.setdefault(
+            (src, dst), {"bytes": 0, "modeled_s": 0.0, "count": 0})
+        edge["bytes"] += int(nbytes)
+        edge["modeled_s"] += dt
+        edge["count"] += 1
+        return dt
+
+    def transferred_bytes(self, src: str, dst: str) -> int:
+        return self._xfer.get((src, dst), {}).get("bytes", 0)
+
+    def transfers(self) -> dict:
+        """Per-edge transfer view (the BENCH ``transfers`` shape):
+        ``{"src->dst": {bytes, modeled_s, count}}``."""
+        return {f"{s}->{d}": {"bytes": v["bytes"],
+                              "modeled_s": round(v["modeled_s"], 9),
+                              "count": v["count"]}
+                for (s, d), v in self._xfer.items()}
 
     def snapshot(self) -> dict:
         """Machine-readable per-tier view (the BENCH_serve.json shape).

@@ -377,32 +377,68 @@ class MemoryOrchestrator:
         return lambda path: not ep.matches(path)
 
     # ----- placement --------------------------------------------------------
-    def place(self, tensor_class: str, tree: Any) -> Any:
-        """Place a whole tensor class in its policy's home tier and
-        record the residency."""
+    def place(self, tensor_class: str, tree: Any,
+              access_stats: dict | None = None) -> Any:
+        """Place a whole tensor class in the tier its policy picks —
+        the home tier, or a colder one when ``access_stats`` justify it
+        (``pick_tier``) — recording residency, provisioned capacity and
+        the placement's tier-edge transfer charge.
+
+        Degradation contract (same as :meth:`place_kv_pool`): an eager
+        placement that exhausts its retry budget falls back to LOCAL
+        residency and records the reason in ``degraded[tensor_class]``
+        — a failed placement is never silent."""
         policy = self.policies.get(tensor_class, PinLocal())
-        placed = policy.place(tree)
+        # pick_tier is optional on ad-hoc policies — home tier then
+        tier = (policy.pick_tier(access_stats)
+                if hasattr(policy, "pick_tier") else policy.tier)
         nb = tree_bytes(tree)
-        self.ledger.record(policy.tier, tensor_class, nb)
-        self.ledger.record_capacity(policy.tier, tensor_class, nb)
+        try:
+            placed = (policy.place(tree) if tier == policy.tier
+                      else tiers.eager_to_tier(
+                          tree, tier, what=f"place_{tensor_class}"))
+        except tiers.TierTransferError as e:
+            self.degraded[tensor_class] = (
+                f"{tier} placement -> local residency ({e})")
+            tier = tiers.LOCAL
+            placed = tree
+        self.ledger.record(tier, tensor_class, nb)
+        self.ledger.record_capacity(tier, tensor_class, nb)
+        if tier != tiers.LOCAL:
+            self.ledger.charge_transfer(tiers.LOCAL, tier, nb)
         return placed
 
     def place_layer_weights(self, stacked: Any) -> Any:
         """Place stacked per-layer params: expert-bank leaves go to the
         expert policy's tier, the rest to the layer-weights policy's.
-        Records both residencies plus the local prefetch window."""
+        Records both residencies plus the local prefetch window, and
+        charges the placement transfers.  An unrecoverable tier fault
+        degrades to local residency (paging disabled, reason recorded
+        in ``degraded["layer_weights"]``) — same contract as
+        :meth:`place_kv_pool`."""
         wp = self.policies["layer_weights"]
         ep = self.expert_policy
+
+        def put(path, x):
+            p = jax.tree_util.keystr(path)
+            if ep.matches(p):
+                return tiers.host_put(x)
+            return x if isinstance(wp, PinLocal) else tiers.host_put(x)
+
+        try:
+            placed = (wp.place(stacked) if ep is None
+                      else jax.tree_util.tree_map_with_path(put, stacked))
+        except tiers.TierTransferError as e:
+            self.degraded["layer_weights"] = (
+                f"remote paging -> local residency ({e})")
+            wp = PinLocal()
+            self.policies["layer_weights"] = wp
+            self.config = dataclasses.replace(self.config, enabled=False)
+            placed = stacked
+            ep = None
         if ep is None:
-            placed = wp.place(stacked)
             expert_bytes = 0
         else:
-            def put(path, x):
-                p = jax.tree_util.keystr(path)
-                if ep.matches(p):
-                    return tiers.host_put(x)
-                return x if isinstance(wp, PinLocal) else tiers.host_put(x)
-            placed = jax.tree_util.tree_map_with_path(put, stacked)
             expert_bytes = sum(
                 x.size * x.dtype.itemsize
                 for p, x in jax.tree_util.tree_leaves_with_path(stacked)
@@ -410,8 +446,13 @@ class MemoryOrchestrator:
             self.ledger.record(ep.tier, ep.tensor_class, expert_bytes)
             self.ledger.record_capacity(ep.tier, ep.tensor_class,
                                         expert_bytes)
+            if ep.tier != tiers.LOCAL:
+                self.ledger.charge_transfer(tiers.LOCAL, ep.tier,
+                                            expert_bytes)
         total = tree_bytes(stacked)
         if wp.tier == tiers.REMOTE:
+            self.ledger.charge_transfer(tiers.LOCAL, tiers.REMOTE,
+                                        total - expert_bytes)
             self.ledger.record(tiers.REMOTE, "layer_weights",
                                total - expert_bytes)
             self.ledger.record_capacity(tiers.REMOTE, "layer_weights",
@@ -467,6 +508,9 @@ class MemoryOrchestrator:
         # size while only live pages count as in-use (no double count)
         self.ledger.record_capacity(policy.tier, "kv_pool",
                                     tree_bytes(cache))
+        if policy.tier != tiers.LOCAL:
+            self.ledger.charge_transfer(tiers.LOCAL, policy.tier,
+                                        tree_bytes(cache))
         return placed
 
     # ----- block pool -------------------------------------------------------

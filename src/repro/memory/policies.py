@@ -6,7 +6,11 @@ A :class:`ResidencyPolicy` answers two questions for one *tensor class*
 banks): **where does it live at rest** (``tier`` + ``place``) and **how
 does it move through local memory while computing** (policy-specific:
 the double-buffered prefetch window, the scan-carry offload, the
-block-pool page tables, the routed-expert gather).  The
+block-pool page tables, the routed-expert gather).  ``pick_tier``
+is the access-frequency face of the first question: given observed
+access stats, a policy may answer with a *colder* hierarchy level than
+its home tier (long-idle pools and rarely-routed expert banks demote
+to ``cold``).  The
 :class:`~repro.memory.orchestrator.MemoryOrchestrator` binds classes to
 policies and owns the scan transforms the policies ride.
 
@@ -86,6 +90,15 @@ class ResidencyPolicy(Protocol):
         """NamedSharding placing one leaf in the policy's tier."""
         ...
 
+    def pick_tier(self, access_stats: dict | None = None) -> str:
+        """Hierarchy level this class should occupy given how it is
+        being accessed (``access_stats`` keys are policy-specific:
+        ``idle_steps`` for between-step offload, ``route_fraction`` for
+        expert banks).  The home ``tier`` when stats are absent or
+        unremarkable; a colder tier when access frequency justifies the
+        bandwidth gap."""
+        ...
+
 
 @dataclasses.dataclass(frozen=True)
 class PinLocal:
@@ -98,6 +111,9 @@ class PinLocal:
 
     def sharding(self, mesh, spec):
         return tiers.tier_sharding(mesh, spec, self.tier)
+
+    def pick_tier(self, access_stats: dict | None = None) -> str:
+        return self.tier
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,6 +130,11 @@ class DoubleBufferPrefetch:
     def sharding(self, mesh, spec):
         return tiers.tier_sharding(mesh, spec, self.tier)
 
+    def pick_tier(self, access_stats: dict | None = None) -> str:
+        # the prefetch window touches every layer every step — layer
+        # weights never go colder than their home tier
+        return self.tier
+
 
 @dataclasses.dataclass(frozen=True)
 class OffloadBetweenSteps:
@@ -124,6 +145,9 @@ class OffloadBetweenSteps:
 
     pool_keys: tuple[str, ...] = ("k_pages", "v_pages", "k_scale", "v_scale")
     tier: str = tiers.REMOTE
+    # a pool untouched for this many steps (a long-idle prefix page set,
+    # a parked conversation) belongs in the cold tier
+    cold_after_idle_steps: int = 64
 
     def place(self, tree: Any) -> Any:
         return {k: (tiers.host_put(v) if k in self.pool_keys else v)
@@ -134,6 +158,17 @@ class OffloadBetweenSteps:
         tier = self.tier if (key is None or key in self.pool_keys) \
             else tiers.LOCAL
         return tiers.tier_sharding(mesh, spec, tier)
+
+    def pick_tier(self, access_stats: dict | None = None) -> str:
+        """Access-frequency placement: a pool idle for
+        ``cold_after_idle_steps`` dispatches demotes to cold (it pays
+        the flash-bandwidth gap once on resume instead of holding remote
+        capacity every step it is not read)."""
+        if (access_stats
+                and access_stats.get("idle_steps", 0)
+                >= self.cold_after_idle_steps):
+            return tiers.COLD
+        return self.tier
 
 
 class BlockPoolResidency:
@@ -181,6 +216,11 @@ class BlockPoolResidency:
 
     def sharding(self, mesh, spec):
         return tiers.tier_sharding(mesh, spec, self.tier)
+
+    def pick_tier(self, access_stats: dict | None = None) -> str:
+        # the live pool is read every attention step; only its
+        # preemption stashes move down-hierarchy (PageSwapper.park)
+        return self.tier
 
     def bind_kv_shape(self, kv_heads: int, head_dim: int, itemsize: int,
                       num_layers: int = 1, scale_itemsize: int = 0) -> None:
@@ -304,6 +344,10 @@ class TopKExpertPrefetch:
     top_k: int
     bank_keys: tuple[str, ...] = ("wi", "wg", "wo")
     tier: str = tiers.REMOTE
+    # an expert routed to fewer than this fraction of tokens earns cold
+    # residency (rarely-read, read-mostly: the High-Bandwidth-Flash
+    # tenant profile)
+    cold_route_fraction: float = 0.02
     ledger: MemoryLedger | None = None
     tensor_class = "expert_weights"
 
@@ -322,6 +366,54 @@ class TopKExpertPrefetch:
 
     def sharding(self, mesh, spec):
         return tiers.tier_sharding(mesh, spec, self.tier)
+
+    def pick_tier(self, access_stats: dict | None = None) -> str:
+        """Access-frequency placement: ``route_fraction`` (this bank's
+        share of routed tokens) below ``cold_route_fraction`` -> cold."""
+        if (access_stats is not None
+                and access_stats.get("route_fraction", 1.0)
+                < self.cold_route_fraction):
+            return tiers.COLD
+        return self.tier
+
+    def bank_tiers(self, route_counts) -> list[str]:
+        """Per-expert tier choice from observed routing counts (one
+        count per expert): expert e's share of total routes drives
+        :meth:`pick_tier`."""
+        counts = [int(c) for c in route_counts]
+        total = max(sum(counts), 1)
+        return [self.pick_tier({"route_fraction": c / total})
+                for c in counts]
+
+    def rebalance(self, banks: dict, route_counts) -> list[str]:
+        """Re-split the ledger's ``expert_weights`` residency between
+        the home tier and cold from observed routing, charging the tier
+        edge for every expert bank that moved since the last rebalance.
+
+        The physical banks stay ONE stacked array per key (a per-expert
+        physical split would retrace the routed gather); what moves is
+        the hierarchy's *view* — residency lines and modeled transfer
+        charges.  The gather reads the same array either way, so routed
+        outputs are bit-identical by construction."""
+        chosen = self.bank_tiers(route_counts)
+        cold = {i for i, t in enumerate(chosen) if t == tiers.COLD}
+        if self.ledger is not None:
+            nb = tree_bytes({k: banks[k] for k in self.bank_keys
+                             if k in banks})
+            per = nb // max(self.num_experts, 1)
+            prev = getattr(self, "_cold_experts", set())
+            for _ in cold - prev:
+                self.ledger.charge_transfer(self.tier, tiers.COLD, per)
+            for _ in prev - cold:
+                self.ledger.charge_transfer(tiers.COLD, self.tier, per)
+            cold_b = per * len(cold)
+            self.ledger.record(self.tier, self.tensor_class, nb - cold_b)
+            self.ledger.record(tiers.COLD, self.tensor_class, cold_b)
+            self._cold_cap = max(getattr(self, "_cold_cap", 0), cold_b)
+            self.ledger.record_capacity(tiers.COLD, self.tensor_class,
+                                        self._cold_cap)
+        self._cold_experts = cold
+        return chosen
 
     def resident_bytes(self, banks: dict, num_rows: int) -> int:
         """Local bytes the gather keeps resident: ``num_rows`` routed

@@ -14,8 +14,11 @@ Every transfer is a *fallible, bounded-latency* operation: it runs
 through :func:`repro.memory.tiers.transfer_with_retry` (fault-injection
 checkpoint, retry with exponential backoff, timeout) and reports its
 duration to an optional :class:`repro.runtime.ft.StragglerMonitor` so
-slow tier transfers are flagged.  Stashed bytes are ledger-accounted in
-the remote tier under the ``kv_swap`` tensor class.
+slow tier transfers are flagged.  Stashed bytes are ledger-accounted
+per tier under the ``kv_swap`` tensor class, and every stash movement
+(swap-out, swap-in, :meth:`PageSwapper.park` to the cold tier,
+:meth:`PageSwapper.promote` back up) charges the ledger's tier-edge
+transfer model.
 """
 from __future__ import annotations
 
@@ -45,7 +48,14 @@ class SwapHandle:
     ``k``/``v`` directly must :meth:`materialize` first.  Accounting and
     fault injection are NOT deferred: the stash's bytes joined the
     remote-tier ledger line and its transfer slot fired when it was
-    created."""
+    created.
+
+    ``tier`` names the hierarchy level the stash currently occupies
+    (``remote`` at creation; ``cold`` after
+    :meth:`PageSwapper.park` demotes a long-idle stash).  Moving a
+    stash between tiers never touches the bytes — only accounting and
+    the modeled transfer cost move — so a cold-parked stash restores
+    bit-identically."""
 
     page_count: int
     k: np.ndarray | None     # (L, n, page, Hkv, hd)
@@ -54,6 +64,7 @@ class SwapHandle:
     k_scale: np.ndarray | None = None
     v_scale: np.ndarray | None = None
     _pull: object = None     # () -> [k, v(, k_scale, v_scale)] host pull
+    tier: str = tiers.REMOTE
 
     def materialize(self) -> "SwapHandle":
         """Resolve a deferred stash to host arrays (idempotent)."""
@@ -100,24 +111,35 @@ class PageSwapper:
         self.monitor = monitor
         self.swap_outs = 0
         self.swap_ins = 0
+        self.parks = 0               # stashes demoted to a colder tier
+        self.promotes = 0            # stashes promoted back up
         self.retry_attempts = 0      # failed attempts that were retried
         self.live_handles = 0        # stashes created and not yet released
-        self._stash_bytes = 0
-        self._stash_hwm = 0
+        # per-tier stash accounting: a swapper's stashes may sit in
+        # several hierarchy levels at once (fresh stashes remote,
+        # long-idle ones cold-parked)
+        self._stash_bytes: dict[str, int] = {}
+        self._stash_hwm: dict[str, int] = {}
         self._scatter = jax.jit(self._scatter_fn, donate_argnums=(0,))
         self._gather = jax.jit(self._gather_fn)
 
     # ----- ledger ------------------------------------------------------------
-    def _record(self) -> None:
-        if self.ledger is not None:
-            self.ledger.record(self.tier, self.tensor_class,
-                               self._stash_bytes)
+    def _record(self, tier: str | None = None) -> None:
+        if self.ledger is None:
+            return
+        for t in ([tier] if tier is not None else self._stash_bytes):
+            b = self._stash_bytes.get(t, 0)
+            self.ledger.record(t, self.tensor_class, b)
             # the stash arena grows on demand: its provisioned capacity
             # is the largest footprint it ever held, keeping the tier's
             # hwm <= capacity invariant auditable
-            self._stash_hwm = max(self._stash_hwm, self._stash_bytes)
-            self.ledger.record_capacity(self.tier, self.tensor_class,
-                                        self._stash_hwm)
+            hwm = max(self._stash_hwm.get(t, 0), b)
+            self._stash_hwm[t] = hwm
+            self.ledger.record_capacity(t, self.tensor_class, hwm)
+
+    def _account(self, tier: str, delta: int) -> None:
+        self._stash_bytes[tier] = self._stash_bytes.get(tier, 0) + delta
+        self._record(tier)
 
     def _transfer(self, fn, *, what: str, nbytes: int):
         before = (tiers.active_fault_plan().failures
@@ -155,11 +177,14 @@ class PageSwapper:
         return out
 
     def swap_out(self, cache: dict, page_ids: list[int],
-                 defer: bool = False) -> SwapHandle:
+                 defer: bool = False, tier: str | None = None) -> SwapHandle:
         """Gather ``page_ids`` from the stacked pools and stash them in
-        the remote tier; raises :class:`tiers.TierTransferError` after
-        the retry budget is exhausted (the caller's degradation policy —
-        shed the victim — takes over).
+        ``tier`` (the swapper's home tier — normally remote — when not
+        given; ``tiers.COLD`` stashes a deep-preemption victim directly
+        in the cold tier so the remote tier never holds it); raises
+        :class:`tiers.TierTransferError` after the retry budget is
+        exhausted (the caller's degradation policy — shed the victim —
+        takes over).
 
         ``defer=True`` keeps the staged copy on device and postpones the
         host byte movement until the stash is read (a handoff adopted
@@ -167,6 +192,7 @@ class PageSwapper:
         pull).  The transfer SLOT is not deferred: seeded fault/latency
         injection, the straggler monitor and the retry budget all fire
         here, at the same schedule position as an eager swap."""
+        tier = self.tier if tier is None else tier
         # bucket the gather width so the jitted executable is reused
         # across nearby page counts (pad with the null page, slice the
         # true count back out on the host)
@@ -186,17 +212,19 @@ class PageSwapper:
         if defer:
             self._transfer(lambda: None, what="kv_swap_out", nbytes=nbytes)
             handle = SwapHandle(page_count=n, k=None, v=None,
-                                nbytes=nbytes, _pull=pull)
+                                nbytes=nbytes, _pull=pull, tier=tier)
         else:
             host = self._transfer(pull, what="kv_swap_out", nbytes=nbytes)
             handle = SwapHandle(page_count=n, k=host[0], v=host[1],
                                 nbytes=nbytes,
                                 k_scale=host[2] if quant else None,
-                                v_scale=host[3] if quant else None)
+                                v_scale=host[3] if quant else None,
+                                tier=tier)
         self.swap_outs += 1
         self.live_handles += 1
-        self._stash_bytes += nbytes
-        self._record()
+        self._account(tier, nbytes)
+        if self.ledger is not None:
+            self.ledger.charge_transfer(tiers.LOCAL, tier, nbytes)
         return handle
 
     # ----- swap in -----------------------------------------------------------
@@ -250,16 +278,55 @@ class PageSwapper:
         new_cache = self._transfer(push, what="kv_swap_in",
                                    nbytes=handle.nbytes)
         self.swap_ins += 1
+        if self.ledger is not None:
+            self.ledger.charge_transfer(handle.tier, tiers.LOCAL,
+                                        handle.nbytes)
         self.release(handle)
         return new_cache
 
+    # ----- tier moves ---------------------------------------------------------
+    def _move(self, handle: SwapHandle, tier: str, *, what: str) -> SwapHandle:
+        """Move a stash between hierarchy levels.  The bytes are never
+        touched — a park/promote is a fault-injection checkpoint, a
+        per-tier accounting move and a modeled edge charge — so a
+        round-tripped stash restores bit-identically by construction.
+        Deferred stashes materialize first: cold-parking is the moment
+        the bytes must actually leave the device."""
+        if handle.tier == tier or not handle.nbytes:
+            return handle
+        handle.materialize()
+        src = handle.tier
+        self._transfer(lambda: None, what=what, nbytes=handle.nbytes)
+        self._account(src, -handle.nbytes)
+        self._account(tier, handle.nbytes)
+        if self.ledger is not None:
+            self.ledger.charge_transfer(src, tier, handle.nbytes)
+        handle.tier = tier
+        return handle
+
+    def park(self, handle: SwapHandle, tier: str = tiers.COLD) -> SwapHandle:
+        """Demote a stash to a colder tier (default ``cold``) — the
+        long-idle-preemption path.  Fallible like any transfer: a
+        :class:`tiers.TierTransferError` leaves the stash where it was."""
+        h = self._move(handle, tier, what="kv_cold_park")
+        self.parks += 1
+        return h
+
+    def promote(self, handle: SwapHandle,
+                tier: str = tiers.REMOTE) -> SwapHandle:
+        """Promote a stash back up the hierarchy (default ``remote`` —
+        the promote-through-remote step a cold-parked victim pays before
+        its swap-in; resume then charges remote->local as usual)."""
+        h = self._move(handle, tier, what="kv_cold_promote")
+        self.promotes += 1
+        return h
+
     def adopt(self, handle: SwapHandle) -> None:
         """Account for a stash produced elsewhere (snapshot restore): the
-        bytes join this swapper's remote-tier ledger line as if it had
-        swapped them out itself."""
-        self._stash_bytes += handle.nbytes
+        bytes join this swapper's ledger line for the tier the handle
+        says it lives in, as if it had swapped them out itself."""
+        self._account(handle.tier, handle.nbytes)
         self.live_handles += 1
-        self._record()
 
     def release(self, handle: SwapHandle) -> None:
         """Drop a stash without restoring it (victim shed / expired
@@ -267,14 +334,14 @@ class PageSwapper:
         double release — e.g. the lease watchdog racing a snapshot —
         is accounting-neutral."""
         if handle.nbytes:
-            self._stash_bytes -= handle.nbytes
+            self._account(handle.tier, -handle.nbytes)
             handle.nbytes = 0
             self.live_handles -= 1
-            self._record()
 
     @property
     def outstanding_bytes(self) -> int:
-        """Stash bytes currently parked in the remote tier — the leak
-        gauge the chaos harness drives to zero after every reclamation
-        (ledger drift zero <=> this is zero after a drain)."""
-        return self._stash_bytes
+        """Stash bytes currently parked anywhere in the hierarchy — the
+        leak gauge the chaos harness drives to zero after every
+        reclamation (ledger drift zero <=> this is zero after a
+        drain)."""
+        return sum(self._stash_bytes.values())

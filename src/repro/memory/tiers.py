@@ -1,14 +1,29 @@
 """Memory-tier registry: the FengHuang hierarchy resolved per backend.
 
 Maps the paper's multi-tier shared-memory hierarchy onto JAX memory
-kinds:
+kinds, as an ORDERED hierarchy (fastest first):
 
 * **local tier**  = ``memory_kind="device"`` (HBM),
 * **remote tier** = the best host-side kind the backend exposes —
   ``pinned_host`` (host DRAM behind the DMA engine; the TAB-attached
   LPDDR6 pool in the paper's node) on GPU/TPU, ``unpinned_host`` on the
   CPU backend (where local == remote, so paging degenerates to the
-  identity while keeping every transform's semantics intact).
+  identity while keeping every transform's semantics intact),
+* **cold tier**   = the capacity backstop (the High-Bandwidth-Flash
+  direction in Ma & Patterson): the next distinct host kind after the
+  remote tier's, or — on backends exposing only one host kind — the
+  SAME kind as remote.  Tiers are logical levels of the hierarchy, not
+  memory kinds: on CPU all three share ``unpinned_host``, yet the
+  ledger, the swapper and the bandwidth model keep them distinct, so
+  the placement/accounting semantics are exactly what a real flash
+  tier would see.
+
+Each :class:`Tier` carries a *modeled* ``bandwidth_gbps`` /
+``latency_us`` for its link into the hierarchy; tier-edge transfer time
+(:meth:`TierRegistry.edge`) goes through the same
+:func:`repro.memory.accounting.modeled_transfer_s` formula the Table-4.3
+simulator's :class:`~repro.core.latency.LinkModel` uses, so measured
+(ledger-charged) and simulated transfer costs stay one code path.
 
 Resolution is cached **per backend** in a :class:`TierRegistry` — unlike
 the old module-level ``lru_cache`` in ``core.pager`` it is invalidated
@@ -27,15 +42,32 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-# Canonical tier names used across policies, the ledger and BENCH JSON.
+from repro.memory.accounting import modeled_transfer_s
+
+# Canonical tier names used across policies, the ledger and BENCH JSON,
+# in hierarchy order (fastest/smallest first).
 LOCAL = "local"
 REMOTE = "remote"
+COLD = "cold"
+HIERARCHY = (LOCAL, REMOTE, COLD)
 
 LOCAL_KIND = "device"
 REMOTE_KIND = "pinned_host"
 
 # Host-side kinds that can back the FengHuang remote tier, best first.
 _HOST_KINDS = ("pinned_host", "unpinned_host")
+
+# Modeled per-tier link parameters (bandwidth_gbps, latency_us) — the
+# bandwidth of each tier's link into the hierarchy and its access
+# latency.  local ~ H200-class HBM; remote ~ the FengHuang TAB crossbar
+# slice per GPU (§4.1, 4 TB/s); cold ~ High-Bandwidth-Flash (Ma &
+# Patterson: HBM-adjacent bandwidth class, but a real latency gap).
+# These are MODEL numbers charged by the ledger, not measurements.
+DEFAULT_TIER_LINKS: dict[str, tuple[float, float]] = {
+    LOCAL: (4800.0, 0.22),
+    REMOTE: (4000.0, 2.0),
+    COLD: (64.0, 50.0),
+}
 
 try:  # public since jax 0.5
     from jax.sharding import TransferToMemoryKind as _TransferToMemoryKind
@@ -47,17 +79,54 @@ except ImportError:  # pragma: no cover - version specific
         _TransferToMemoryKind = None
 
 
+def _link(name: str) -> tuple[float, float]:
+    return DEFAULT_TIER_LINKS.get(name, DEFAULT_TIER_LINKS[REMOTE])
+
+
 @dataclasses.dataclass(frozen=True)
 class Tier:
     """One level of the hierarchy: a logical name bound to the memory
-    kind that backs it on the current backend (None = unavailable)."""
+    kind that backs it on the current backend (None = unavailable),
+    plus the modeled bandwidth/latency of its link into the hierarchy.
+
+    Several tiers may share one memory kind (the CPU degenerate case:
+    remote and cold both resolve to ``unpinned_host``) — the logical
+    level, not the kind, is what the ledger and policies reason about.
+    """
 
     name: str
     kind: str | None
+    bandwidth_gbps: float = 0.0
+    latency_us: float = 0.0
+
+    def __post_init__(self) -> None:
+        if not self.bandwidth_gbps:
+            bw, lat = _link(self.name)
+            object.__setattr__(self, "bandwidth_gbps", bw)
+            if not self.latency_us:
+                object.__setattr__(self, "latency_us", lat)
 
     @property
     def available(self) -> bool:
         return self.kind is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class TierEdge:
+    """The modeled link between two tiers: bandwidth is the bottleneck
+    of the two endpoints, latency crosses both interfaces."""
+
+    src: str
+    dst: str
+    bandwidth_gbps: float
+    latency_us: float
+
+    def transfer_s(self, nbytes: int) -> float:
+        """Modeled time to move ``nbytes`` across this edge (the same
+        formula the simulator's LinkModel uses — one code path)."""
+        return modeled_transfer_s(nbytes,
+                                  bandwidth_gbps=self.bandwidth_gbps,
+                                  latency_us=self.latency_us)
 
 
 class TierRegistry:
@@ -78,6 +147,11 @@ class TierRegistry:
             return "<none>"
 
     def _resolve(self, backend: str) -> dict[str, Tier]:
+        """Resolve the ORDERED hierarchy (local, remote, cold) against
+        the backend's exposed memory kinds.  Backends with fewer
+        distinct kinds degenerate cleanly: the cold tier falls back to
+        the remote tier's host kind (and on CPU local aliases them too)
+        — tiers stay logically distinct even when physically aliased."""
         try:
             kinds = frozenset(
                 m.kind for m in jax.devices()[0].addressable_memories())
@@ -90,13 +164,45 @@ class TierRegistry:
             except Exception:  # pragma: no cover - platform specific
                 local = None
         remote = next((k for k in _HOST_KINDS if k in kinds), None)
-        return {LOCAL: Tier(LOCAL, local), REMOTE: Tier(REMOTE, remote)}
+        # cold: the next distinct host kind after remote's, else remote's
+        cold = next((k for k in _HOST_KINDS
+                     if k in kinds and k != remote), remote)
+        return {LOCAL: Tier(LOCAL, local), REMOTE: Tier(REMOTE, remote),
+                COLD: Tier(COLD, cold)}
 
     def tiers(self) -> dict[str, Tier]:
         backend = self._backend()
         if backend not in self._tiers:
             self._tiers[backend] = self._resolve(backend)
         return self._tiers[backend]
+
+    def hierarchy(self) -> tuple[Tier, ...]:
+        """The resolved tiers in hierarchy order, fastest first."""
+        return tuple(self.tiers().values())
+
+    def tier(self, name: str) -> Tier:
+        t = self.tiers().get(name)
+        if t is None:
+            raise KeyError(f"unknown tier {name!r}; hierarchy is "
+                           f"{[x.name for x in self.hierarchy()]}")
+        return t
+
+    def edge(self, src: str, dst: str) -> TierEdge:
+        """The modeled link between two tiers.  Unknown names fall back
+        to the default link table, so ledger charging never throws on a
+        custom tier label."""
+        resolved = self.tiers()
+
+        def params(name):
+            t = resolved.get(name)
+            if t is not None:
+                return t.bandwidth_gbps, t.latency_us
+            return _link(name)
+
+        (sbw, slat), (dbw, dlat) = params(src), params(dst)
+        return TierEdge(src=src, dst=dst,
+                        bandwidth_gbps=min(sbw, dbw) or max(sbw, dbw),
+                        latency_us=slat + dlat)
 
     @property
     def local(self) -> Tier:
@@ -105,6 +211,10 @@ class TierRegistry:
     @property
     def remote(self) -> Tier:
         return self.tiers()[REMOTE]
+
+    @property
+    def cold(self) -> Tier:
+        return self.tier(COLD)
 
     def reset(self) -> None:
         """Drop every cached resolution (tests; backend swaps)."""
@@ -123,6 +233,13 @@ def reset() -> None:
     _REGISTRY.reset()
 
 
+def resolved_kind(tier: str) -> str | None:
+    """The memory kind backing ``tier`` on this backend (None for a
+    tier the backend cannot back — placement degenerates to a no-op)."""
+    t = _REGISTRY.tiers().get(tier)
+    return t.kind if t is not None else None
+
+
 def resolved_local_kind() -> str | None:
     """The memory kind backing the local tier on this backend."""
     return _REGISTRY.local.kind
@@ -131,6 +248,11 @@ def resolved_local_kind() -> str | None:
 def resolved_remote_kind() -> str | None:
     """The memory kind backing the remote tier on this backend."""
     return _REGISTRY.remote.kind
+
+
+def resolved_cold_kind() -> str | None:
+    """The memory kind backing the cold tier on this backend."""
+    return resolved_kind(COLD)
 
 
 def supports_memory_spaces() -> bool:
@@ -327,11 +449,12 @@ def transfer_with_retry(fn: Callable[[], Any], *, what: str,
 # ---------------------------------------------------------------------------
 
 def tier_sharding(mesh, pspec: P, tier: str) -> NamedSharding:
-    """NamedSharding placing data in ``tier`` (``LOCAL``/``REMOTE``) with
+    """NamedSharding placing data in ``tier`` (any hierarchy level) with
     the memory kind the *current backend* actually exposes — resolved
     through the registry, never hardcoded.  A ``None`` kind (tier not
     backed on this platform) falls back to the backend default, so CPU —
-    where local == remote == ``unpinned_host`` — degenerates cleanly."""
+    where local == remote == cold == ``unpinned_host`` — degenerates
+    cleanly."""
     kind = _REGISTRY.tiers().get(tier, Tier(tier, None)).kind
     return NamedSharding(mesh, pspec, memory_kind=kind)
 
@@ -376,15 +499,30 @@ def page_out(tree: Any) -> Any:
     return jax.tree.map(lambda x: _put_kind(x, resolved_remote_kind()), tree)
 
 
-def host_put(tree: Any) -> Any:
-    """Eagerly place a pytree in the remote tier (single-device helper for
-    examples/tests; sharded placement goes through :func:`to_remote`).
+def eager_to_tier(tree: Any, tier: str, *, what: str | None = None) -> Any:
+    """Eagerly place a pytree in ``tier`` (single-device helper for
+    examples/tests; sharded placement goes through :func:`tier_sharding`
+    / :func:`to_remote`).
 
     As an *eager* tier transfer it is a fault-injection checkpoint: an
     installed :class:`FaultPlan` may delay or fail it, and callers with
-    a degradation policy (``MemoryOrchestrator.place_kv_pool``) catch
-    :class:`TierTransferError` and fall back to local residency."""
+    a degradation policy (``MemoryOrchestrator.place`` /
+    ``place_kv_pool``) catch :class:`TierTransferError`, fall back to
+    local residency and record the degradation in
+    ``MemoryOrchestrator.degraded``."""
     leaves = [x for x in jax.tree.leaves(tree) if hasattr(x, "nbytes")]
-    check_transfer("host_put", sum(x.nbytes for x in leaves))
-    return jax.tree.map(lambda x: _put_kind(jnp.asarray(x),
-                                            resolved_remote_kind()), tree)
+    check_transfer(what or f"eager_to_{tier}",
+                   sum(x.nbytes for x in leaves))
+    kind = resolved_kind(tier)
+    return jax.tree.map(lambda x: _put_kind(jnp.asarray(x), kind), tree)
+
+
+def eager_to_remote(tree: Any) -> Any:
+    """Eagerly place a pytree in the remote tier (fault-checkpointed)."""
+    return eager_to_tier(tree, REMOTE, what="host_put")
+
+
+def host_put(tree: Any) -> Any:
+    """Historic name for :func:`eager_to_remote` (kept: it is the eager
+    placement primitive every policy's ``place`` rides)."""
+    return eager_to_remote(tree)

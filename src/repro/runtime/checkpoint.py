@@ -155,9 +155,13 @@ def restore(ckpt_dir: str | Path, template: Any, *, step: int | None = None,
                              f"{arr.shape} vs {leaf.shape}")
         val = jnp.asarray(arr, dtype=leaf.dtype)
         if spec is not None:
+            from repro.memory import tiers as memtiers
             from repro.runtime.sharding import resolve_spec
-            from jax.sharding import NamedSharding
+            # tier-registry sharding (local tier), not a bare
+            # NamedSharding: restored params land with the memory kind
+            # the current backend actually exposes
             val = jax.device_put(
-                val, NamedSharding(mesh, resolve_spec(spec, mesh)))
+                val, memtiers.tier_sharding(mesh, resolve_spec(spec, mesh),
+                                            memtiers.LOCAL))
         leaves.append(val)
     return jax.tree_util.tree_unflatten(treedef, leaves), step

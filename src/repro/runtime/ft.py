@@ -178,6 +178,10 @@ def save_server_snapshot(path, snap: dict):
         for k in ("submitted_block", "deadline_blocks"):
             if s.get(k) is not None:
                 entry[k] = int(s[k])
+        # hierarchy level of the stash (remote / cold): a restored
+        # server re-adopts it in the SAME tier it was parked in
+        if s.get("tier") is not None:
+            entry["tier"] = str(s["tier"])
         arrays[f"seq{i}_prompt"] = np.asarray(s["prompt"], np.int32)
         if s["pos"]:
             # quantized pools persist their dequant scales alongside the

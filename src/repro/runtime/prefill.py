@@ -71,7 +71,9 @@ class KVHandoff:
     req: object                      # runtime.serve.Request
     plen: int                        # bucketed prompt length (positions)
     token: int                       # BlockManager handoff-registry token
-    handle: SwapHandle               # staged page bytes in the remote tier
+    # staged page bytes; handle.tier names the hierarchy level the
+    # staging buffer occupies (remote — the staging swapper's home tier)
+    handle: SwapHandle
     nxt: jax.Array                   # (1, 1) token sampled at
                                      # fold_in(req_key, plen), device
     key: jax.Array                   # (2,) uint32 per-request PRNG key

@@ -119,13 +119,17 @@ class Request:
 @dataclasses.dataclass
 class _Preempted:
     """A sequence swapped out of the live batch: its request, the decode
-    position it will resume from, the remote-tier KV stash, and its
-    per-request PRNG key (so resumed sampling is bit-identical)."""
+    position it will resume from, the KV stash (``handle.tier`` says
+    which hierarchy level it currently occupies), and its per-request
+    PRNG key (so resumed sampling is bit-identical)."""
 
     req: Request
     pos: int
     handle: SwapHandle
     key: np.ndarray                  # (2,) uint32
+    # stats["blocks"] when the stash was created — the cold-park sweep's
+    # age clock (stash age = blocks - stashed_block)
+    stashed_block: int = 0
 
 
 def make_prefill_step(model) -> Callable:
@@ -279,6 +283,11 @@ class BatchedServer:
     # blocks a staged KVHandoff stays adoptable before the lease
     # watchdog may reclaim its pages and re-enqueue the victim
     handoff_lease_blocks: int = 64
+    # cold-tier parking of preemption stashes (class default so
+    # scheduler-only harnesses that skip __init__ resolve it): None =
+    # disabled, 0 = stash victims directly to cold, N > 0 = park
+    # stashes older than N decode blocks
+    cold_park_after_blocks: int | None = None
 
     def __init__(self, model, params, *, batch_size: int = 4,
                  max_seq: int = 256, temperature: float = 0.0, seed: int = 0,
@@ -292,7 +301,8 @@ class BatchedServer:
                  prefill_chunk_tokens: int | None = None,
                  max_pending: int | None = None,
                  overload_factor: float | None = None,
-                 handoff_lease_blocks: int = 64):
+                 handoff_lease_blocks: int = 64,
+                 cold_park_after_blocks: int | None = None):
         self.model = model
         self.batch = batch_size
         self.max_seq = max_seq
@@ -309,6 +319,14 @@ class BatchedServer:
         self.max_pending = max_pending
         self.overload_factor = overload_factor
         self.handoff_lease_blocks = handoff_lease_blocks
+        # cold-tier parking of preemption stashes: None = disabled (the
+        # pre-hierarchy behavior, zero drift); 0 = deep preemption —
+        # victims stash DIRECTLY to the cold tier (the remote tier never
+        # holds them); N > 0 = stashes older than N decode blocks are
+        # demoted remote -> cold by the park sweep.  Either way a parked
+        # victim promotes back THROUGH the remote tier on resume and
+        # decodes bit-identically (tier moves never touch the bytes).
+        self.cold_park_after_blocks = cold_park_after_blocks
         if paged is None:
             paged = getattr(model, "supports_paged_kv", lambda: False)()
         self.paged = bool(paged)
@@ -398,6 +416,7 @@ class BatchedServer:
                       "table_delta_entries": 0, "prefix_hits": 0,
                       "prefix_shared_pages": 0,
                       "preemptions": 0, "resumes": 0, "sheds": 0,
+                      "cold_parks": 0, "cold_promotes": 0,
                       "preempted_pages": 0, "pool_faults": 0,
                       "prefix_drops": 0, "swap_retries": 0,
                       "slow_transfers": 0, "audits": 0,
@@ -1326,20 +1345,46 @@ class BatchedServer:
         req = self.slots[i]
         pos = self._slot_pos[i]
         pids = self.manager.slot_pages(i)[:self.manager.pages_for(pos)]
+        # deep preemption (threshold 0): stash straight to the cold tier
+        # so the remote tier never holds the victim — its hwm stays flat
+        # through the preemption round
+        tier = (memtiers.COLD if self.cold_park_after_blocks == 0
+                else memtiers.REMOTE)
         try:
             with self._mesh_ctx():
-                handle = self.swapper.swap_out(self.cache, pids)
+                handle = self.swapper.swap_out(self.cache, pids, tier=tier)
         except memtiers.TierTransferError as e:
             self._shed(i, finished, reason="preempt_swap_failed",
                        detail=str(e))
             return
+        if tier == memtiers.COLD:
+            self.stats["cold_parks"] += 1
         key = np.asarray(jax.device_get(self._req_key(req.uid)))
         self._preempted.append(_Preempted(req=req, pos=pos, handle=handle,
-                                          key=key))
+                                          key=key,
+                                          stashed_block=self.stats["blocks"]))
         self._evict_slot(i)
         self.stats["preemptions"] += 1
         self.stats["preempted_pages"] += len(pids)
         self.kv.record()
+
+    def _cold_park_sweep(self) -> None:
+        """Demote remote-tier stashes whose age (decode blocks since the
+        swap-out) exceeds ``cold_park_after_blocks`` to the cold tier.
+        Fallible like any transfer: a park that exhausts its retry
+        budget leaves the stash in the remote tier (the degradation is
+        just capacity not reclaimed — correctness is untouched)."""
+        thresh = self.cold_park_after_blocks
+        if not thresh or self.swapper is None:   # None or 0: no sweep
+            return
+        for ps in self._preempted:
+            if (ps.handle.tier == memtiers.REMOTE
+                    and self.stats["blocks"] - ps.stashed_block >= thresh):
+                try:
+                    self.swapper.park(ps.handle)
+                    self.stats["cold_parks"] += 1
+                except memtiers.TierTransferError:
+                    pass
 
     def _evict_slot(self, i: int) -> None:
         """Release slot ``i``'s pages/reservation and deactivate it on
@@ -1419,6 +1464,13 @@ class BatchedServer:
             return False
         try:
             with self._mesh_ctx():
+                if ps.handle.tier != memtiers.REMOTE:
+                    # promote-through-remote: a cold-parked stash pays
+                    # the cold->remote edge first, then the ordinary
+                    # remote->local swap-in — the hierarchy is a path,
+                    # not a teleport
+                    self.swapper.promote(ps.handle)
+                    self.stats["cold_promotes"] += 1
                 self.cache = self.swapper.swap_in(self.cache, new_ids,
                                                   ps.handle)
         except memtiers.TierTransferError as e:
@@ -1696,6 +1748,7 @@ class BatchedServer:
             self.stats["kv_pages_in_use"] = self.manager.pages_in_use
             self.stats["kv_pages_hwm"] = self.manager.hwm
             self.kv.record()               # per-tier ledger accounting
+        self._cold_park_sweep()            # demote over-age stashes
 
     def run_once(self, max_blocks: int | None = None) -> list[Request]:
         """Admit queued requests and serve until every admitted request
@@ -1828,6 +1881,10 @@ class BatchedServer:
                 e["k"], e["v"] = h.k, h.v
                 if h.k_scale is not None:    # quantized pool: scales too
                     e["k_scale"], e["v_scale"] = h.k_scale, h.v_scale
+                # which hierarchy level the stash occupied — restore
+                # puts it back in the SAME tier (a cold-parked victim
+                # stays cold-parked across a restart)
+                e["tier"] = h.tier
             return e
 
         for i, req in enumerate(self.slots):
@@ -1900,11 +1957,13 @@ class BatchedServer:
                 handle = SwapHandle(
                     page_count=k.shape[1], k=k, v=v,
                     nbytes=sum(a.size * a.dtype.itemsize for a in arrs),
-                    k_scale=ksc, v_scale=vsc)
+                    k_scale=ksc, v_scale=vsc,
+                    tier=s.get("tier", memtiers.REMOTE))
                 self.swapper.adopt(handle)
                 key = np.asarray(jax.device_get(self._req_key(req.uid)))
                 self._preempted.append(_Preempted(
-                    req=req, pos=int(s["pos"]), handle=handle, key=key))
+                    req=req, pos=int(s["pos"]), handle=handle, key=key,
+                    stashed_block=self.stats["blocks"]))
             else:
                 self._backlog.append(req)
                 self._pending_add(req)

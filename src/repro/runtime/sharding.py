@@ -100,8 +100,11 @@ def batch_spec(mesh: Mesh, *trailing) -> P:
 
 def replicated(mesh: Mesh) -> NamedSharding:
     """Fully replicated placement on ``mesh`` (decode state, page tables,
-    per-slot bookkeeping — everything the host mirrors byte-exactly)."""
-    return NamedSharding(mesh, P())
+    per-slot bookkeeping — everything the host mirrors byte-exactly).
+    Local-tier resident, with the memory kind resolved through the tier
+    registry like every other NamedSharding here — tier resolution has
+    one owner."""
+    return memtiers.tier_sharding(mesh, P(), memtiers.LOCAL)
 
 
 def constraint(x, mesh: Mesh, spec: P):

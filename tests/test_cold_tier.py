@@ -1,0 +1,581 @@
+"""The N-tier memory hierarchy: ordered local/remote/cold registry with
+per-tier bandwidth/latency, tier-edge transfer charging in the ledger,
+cold parking of preemption stashes, and the bit-identity contract —
+a cold-parked-and-resumed sequence emits exactly the tokens the
+uncontended run produced (tier moves never touch the bytes).
+
+Also covers the degenerate-backend contract: on CPU several tiers alias
+one host memory kind, but the ledger and policies reason about the
+LOGICAL level, so accounting stays per-tier distinct.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import build_model, get_config
+from repro.memory import MemoryOrchestrator, tiers
+from repro.memory.accounting import MemoryLedger, modeled_transfer_s
+from repro.memory.policies import OffloadBetweenSteps, TopKExpertPrefetch
+from repro.memory.swap import PageSwapper
+from repro.memory.tiers import (COLD, DEFAULT_TIER_LINKS, HIERARCHY, LOCAL,
+                                REMOTE, FaultPlan, TierTransferError,
+                                fault_plan, registry)
+from repro.runtime import ft
+from repro.runtime.serve import BatchedServer
+
+PAGE = 4
+MAX_SEQ = 64
+SMALL_POOL = 18          # oversubscribed: forces preemption (see chaos)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("qwen2.5-14b").reduced()
+    cfg = dataclasses.replace(cfg, remat=False, page_size=PAGE)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _server(tiny_model, **kw):
+    model, params = tiny_model
+    kw.setdefault("batch_size", 3)
+    kw.setdefault("max_seq", MAX_SEQ)
+    kw.setdefault("page_size", PAGE)
+    kw.setdefault("audit", True)
+    return BatchedServer(model, params, **kw)
+
+
+def _drive(server, reqs, max_rounds=50):
+    finished = []
+    for _ in range(max_rounds):
+        finished += server.run_once()
+        if all(r.done.is_set() for r in reqs):
+            return finished
+    raise AssertionError(
+        f"requests stuck after {max_rounds} rounds: "
+        f"{[(r.uid, r.done.is_set()) for r in reqs]}")
+
+
+def _submit_three(server):
+    return [server.submit(np.arange(1, 5, dtype=np.int32),
+                          max_new_tokens=24) for _ in range(3)]
+
+
+# ---------------------------------------------------------------------------
+# registry: ordered hierarchy, per-tier link model, reset/re-resolution
+# ---------------------------------------------------------------------------
+
+def test_registry_exposes_ordered_three_tier_hierarchy():
+    h = registry().hierarchy()
+    assert tuple(t.name for t in h) == HIERARCHY == (LOCAL, REMOTE, COLD)
+    for t in h:
+        assert t.available, t
+        assert t.bandwidth_gbps > 0 and t.latency_us > 0, t
+    by = {t.name: t for t in h}
+    # the modeled hierarchy is monotone: each level down trades
+    # bandwidth for capacity and pays more latency
+    assert by[LOCAL].bandwidth_gbps > by[REMOTE].bandwidth_gbps \
+        > by[COLD].bandwidth_gbps
+    assert by[LOCAL].latency_us < by[REMOTE].latency_us \
+        < by[COLD].latency_us
+
+
+def test_edge_is_bottleneck_bandwidth_plus_summed_latency():
+    e = registry().edge(LOCAL, COLD)
+    local, cold = registry().tier(LOCAL), registry().tier(COLD)
+    assert e.bandwidth_gbps == min(local.bandwidth_gbps, cold.bandwidth_gbps)
+    assert e.latency_us == local.latency_us + cold.latency_us
+    nb = 1 << 30
+    assert e.transfer_s(nb) == modeled_transfer_s(
+        nb, bandwidth_gbps=e.bandwidth_gbps, latency_us=e.latency_us)
+    # zero bytes still pays the latency floor
+    assert e.transfer_s(0) == pytest.approx(e.latency_us * 1e-6)
+    assert e.transfer_s(2 * nb) > e.transfer_s(nb)
+
+
+def test_unknown_tier_name_raises_with_hierarchy():
+    with pytest.raises(KeyError, match="hierarchy"):
+        registry().tier("nvme")
+
+
+def test_edge_with_unknown_name_falls_back_to_default_link():
+    # ledger charging must never throw on a custom tier label
+    e = registry().edge(LOCAL, "nvme")
+    assert e.bandwidth_gbps > 0
+    assert e.transfer_s(1 << 20) > 0
+
+
+def test_registry_reset_re_resolves_against_backend():
+    r = registry()
+    before = [(t.name, t.kind) for t in r.hierarchy()]
+    tiers.reset()
+    assert r._tiers == {}            # every cached resolution dropped
+    after = [(t.name, t.kind) for t in r.hierarchy()]
+    # same backend -> same resolution, but freshly computed
+    assert after == before
+    assert tiers.resolved_cold_kind() == r.cold.kind
+
+
+def test_cpu_degenerate_tiers_alias_kind_but_account_distinctly():
+    """Backends with fewer memory kinds than tiers alias physically but
+    stay logically distinct: the ledger keeps separate per-tier lines,
+    and ``tiers()`` lists them in hierarchy order."""
+    kinds = [tiers.resolved_kind(t) for t in HIERARCHY]
+    assert all(k is not None for k in kinds)
+    # on CPU remote and cold collapse onto one host kind — that must
+    # not collapse the ACCOUNTING
+    led = MemoryLedger()
+    led.record(COLD, "kv_swap", 300)
+    led.record(REMOTE, "kv_swap", 200)
+    led.record(LOCAL, "kv_pool", 100)
+    assert led.tiers() == [LOCAL, REMOTE, COLD]
+    assert [led.in_use(t) for t in HIERARCHY] == [100, 200, 300]
+    led.record(COLD, "kv_swap", 0)
+    assert led.hwm(COLD) == 300 and led.in_use(COLD) == 0
+    assert led.hwm(REMOTE) == 200    # untouched by the cold drain
+    snap = led.snapshot()
+    assert list(snap) == [LOCAL, REMOTE, COLD]
+
+
+# ---------------------------------------------------------------------------
+# ledger: tier-edge transfer charges through the registry's link model
+# ---------------------------------------------------------------------------
+
+def test_charge_transfer_accumulates_bytes_time_and_count():
+    led = MemoryLedger()
+    nb = 1 << 30
+    dt = led.charge_transfer(LOCAL, COLD, nb)
+    assert dt == registry().edge(LOCAL, COLD).transfer_s(nb)
+    led.charge_transfer(LOCAL, COLD, nb)
+    assert led.transferred_bytes(LOCAL, COLD) == 2 * nb
+    edge = led.transfers()["local->cold"]
+    assert edge["count"] == 2
+    assert edge["bytes"] == 2 * nb
+    assert edge["modeled_s"] == pytest.approx(2 * dt)
+    # edges are directional
+    assert led.transferred_bytes(COLD, LOCAL) == 0
+
+
+def test_charge_transfer_explicit_link_overrides_registry():
+    led = MemoryLedger()
+    dt = led.charge_transfer(LOCAL, REMOTE, 10**9,
+                             bandwidth_gbps=1.0, latency_us=0.0)
+    assert dt == pytest.approx(1.0)  # 1 GB over 1 GB/s
+
+
+def test_cold_edge_is_slower_than_remote_edge():
+    """The hierarchy's point: parking pays the flash-bandwidth gap."""
+    led = MemoryLedger()
+    nb = 1 << 26
+    t_remote = led.charge_transfer(LOCAL, REMOTE, nb)
+    t_cold = led.charge_transfer(LOCAL, COLD, nb)
+    assert t_cold > t_remote
+    gap = DEFAULT_TIER_LINKS[REMOTE][0] / DEFAULT_TIER_LINKS[COLD][0]
+    assert gap > 10                  # the modeled bandwidth cliff is real
+
+
+def test_simulator_link_model_shares_the_formula():
+    """LinkModel.transfer_time and the ledger charge must route through
+    ONE formula (modeled_transfer_s) — measured and simulated transfer
+    costs cannot drift apart."""
+    from repro.core.latency import LinkModel
+    from repro.core.simulator import GB, SystemConfig, fh4
+
+    link = LinkModel(5e-6, 4e12, eff_max=1.0, eff_min=1.0)
+    nb = 1 << 28
+    assert link.transfer_time(nb) == pytest.approx(modeled_transfer_s(
+        nb, bandwidth_gbps=4e12 / GB, latency_us=5.0))
+    # the simulator exposes the full hierarchy as link parameters
+    links = fh4().tier_links()
+    assert list(links) == list(HIERARCHY)
+    for bw, lat in links.values():
+        assert bw > 0 and lat > 0
+    assert links[COLD] == DEFAULT_TIER_LINKS[COLD]
+
+
+# ---------------------------------------------------------------------------
+# swapper: per-tier stash accounting, park/promote moves
+# ---------------------------------------------------------------------------
+
+def _tiny_cache():
+    shape = (2, 10, PAGE, 2, 4)      # (layers, pages, page, heads, dim)
+    k = jnp.arange(np.prod(shape), dtype=jnp.float32).reshape(shape)
+    return {"k_pages": k, "v_pages": k + 1.0}
+
+
+def test_swap_out_to_cold_then_promote_accounts_and_charges():
+    led = MemoryLedger()
+    sw = PageSwapper(ledger=led)
+    cache = _tiny_cache()
+    want = np.asarray(cache["k_pages"][:, [2, 5]])
+
+    h = sw.swap_out(cache, [2, 5], tier=COLD)
+    nb = h.nbytes
+    assert h.tier == COLD and nb > 0
+    assert sw.outstanding_bytes == nb
+    assert led.in_use(COLD) == nb and led.hwm(COLD) == nb
+    assert led.in_use(REMOTE) == 0   # deep preemption skipped remote
+    assert led.transferred_bytes(LOCAL, COLD) == nb
+
+    sw.promote(h)                    # cold -> remote (through-remote step)
+    assert h.tier == REMOTE and sw.promotes == 1
+    assert led.in_use(COLD) == 0 and led.in_use(REMOTE) == nb
+    assert led.transferred_bytes(COLD, REMOTE) == nb
+    assert led.hwm(COLD) == nb       # the hwm remembers the park
+
+    sw.park(h)                       # and back down
+    assert h.tier == COLD and sw.parks == 1
+    assert led.transferred_bytes(REMOTE, COLD) == nb
+
+    # a move is accounting + a modeled charge, never a byte rewrite
+    sw.promote(h)
+    cache = sw.swap_in(cache, [7, 8], h)
+    np.testing.assert_array_equal(np.asarray(cache["k_pages"][:, [7, 8]]),
+                                  want)
+    assert sw.outstanding_bytes == 0
+    assert led.in_use(REMOTE) == 0 and led.in_use(COLD) == 0
+    assert led.transferred_bytes(REMOTE, LOCAL) == nb
+
+
+def test_park_same_tier_is_a_no_op_move():
+    sw = PageSwapper(ledger=MemoryLedger())
+    h = sw.swap_out(_tiny_cache(), [1], tier=COLD)
+    before = sw.outstanding_bytes
+    sw.park(h)                       # already cold: nothing moves
+    assert h.tier == COLD and sw.outstanding_bytes == before
+    assert sw.ledger.transferred_bytes(REMOTE, COLD) == 0
+
+
+def test_park_fault_leaves_stash_in_place():
+    led = MemoryLedger()
+    sw = PageSwapper(ledger=led, retries=1, backoff_s=0.0)
+    h = sw.swap_out(_tiny_cache(), [1, 2])
+    assert h.tier == REMOTE
+    with fault_plan(FaultPlan(fail_rate=1.0, seed=3)):
+        with pytest.raises(TierTransferError):
+            sw.park(h)
+    assert h.tier == REMOTE          # unmoved
+    assert led.in_use(REMOTE) == h.nbytes and led.in_use(COLD) == 0
+    assert led.transferred_bytes(REMOTE, COLD) == 0
+
+
+def test_adopt_respects_handle_tier():
+    sw = PageSwapper(ledger=MemoryLedger())
+    src = PageSwapper()
+    h = src.swap_out(_tiny_cache(), [3], tier=COLD)
+    sw.adopt(h)
+    assert sw.ledger.in_use(COLD) == h.nbytes
+    assert sw.ledger.in_use(REMOTE) == 0
+    sw.release(h)
+    assert sw.outstanding_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# policies: the pick_tier seam
+# ---------------------------------------------------------------------------
+
+def test_offload_policy_demotes_long_idle_pools():
+    p = OffloadBetweenSteps()
+    assert p.pick_tier(None) == REMOTE
+    assert p.pick_tier({"idle_steps": 0}) == REMOTE
+    assert p.pick_tier({"idle_steps": p.cold_after_idle_steps}) == COLD
+
+
+def test_expert_policy_demotes_rarely_routed_banks():
+    p = TopKExpertPrefetch(num_experts=4, top_k=2)
+    assert p.pick_tier({"route_fraction": 0.5}) == REMOTE
+    assert p.pick_tier({"route_fraction": 0.0}) == COLD
+    # 3 hot experts + 1 never routed
+    assert p.bank_tiers([100, 100, 100, 0]) == [REMOTE] * 3 + [COLD]
+
+
+def test_expert_rebalance_moves_ledger_view_not_bytes():
+    led = MemoryLedger()
+    p = TopKExpertPrefetch(num_experts=4, top_k=2, ledger=led)
+    banks = {k: jnp.ones((4, 8), jnp.float32) for k in p.bank_keys}
+    nb = sum(4 * 8 * 4 for _ in p.bank_keys)
+    per = nb // 4
+
+    chosen = p.rebalance(banks, [100, 100, 100, 0])
+    assert chosen[3] == COLD
+    assert led.in_use(COLD) == per
+    assert led.in_use(REMOTE) == nb - per
+    assert led.transferred_bytes(REMOTE, COLD) == per
+    # the physical banks are untouched (one stacked array — no retrace)
+    assert banks["wi"].shape == (4, 8)
+
+    p.rebalance(banks, [100, 100, 100, 100])    # expert 3 re-warms
+    assert led.in_use(COLD) == 0
+    assert led.in_use(REMOTE) == nb
+    assert led.transferred_bytes(COLD, REMOTE) == per
+    assert led.hwm(COLD) == per
+
+
+# ---------------------------------------------------------------------------
+# orchestrator: pick_tier placement + eager degradation recording
+# ---------------------------------------------------------------------------
+
+def test_place_uses_pick_tier_and_charges_the_edge():
+    m = MemoryOrchestrator.plan(get_config("qwen2.5-14b").reduced())
+    m.policies["opt_state"] = OffloadBetweenSteps()
+    tree = {"k_pages": np.zeros((2, 8), np.float32),
+            "v_pages": np.zeros((2, 8), np.float32)}
+    nb = 2 * tree["k_pages"].nbytes
+    m.place("opt_state", tree, access_stats={"idle_steps": 10**6})
+    assert m.ledger.in_use(COLD) == nb
+    assert m.ledger.transferred_bytes(LOCAL, COLD) == nb
+    assert "opt_state" not in m.degraded
+
+
+def test_eager_place_fault_records_degradation():
+    """Satellite contract: the generic eager placement fallback records
+    ``degraded["<class>"]`` exactly like place_kv_pool does."""
+    m = MemoryOrchestrator.plan(get_config("qwen2.5-14b").reduced())
+    m.policies["opt_state"] = OffloadBetweenSteps()
+    tree = {"k_pages": np.zeros((2, 8), np.float32)}
+    with fault_plan(FaultPlan(fail_first_n=16)):
+        placed = m.place("opt_state", tree,
+                         access_stats={"idle_steps": 10**6})
+    assert "opt_state" in m.degraded
+    assert "local residency" in m.degraded["opt_state"]
+    np.testing.assert_array_equal(np.asarray(placed["k_pages"]),
+                                  tree["k_pages"])
+    # the fallback residency landed LOCAL, not in the faulty tier
+    assert m.ledger.in_use(LOCAL) >= tree["k_pages"].nbytes
+    assert m.ledger.in_use(COLD) == 0
+
+
+# ---------------------------------------------------------------------------
+# serving: cold-parked victims resume bit-identically
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("temp", [0.0, 0.7])
+def test_deep_preemption_to_cold_bit_identical(tiny_model, temp):
+    """cold_park_after_blocks=0: victims stash DIRECTLY in the cold
+    tier, promote through remote on resume, and every token matches the
+    uncontended run."""
+    ref_srv = _server(tiny_model, temperature=temp)
+    ref = _submit_three(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(tiny_model, temperature=temp, num_pages=SMALL_POOL,
+                  cold_park_after_blocks=0)
+    got = _submit_three(srv)
+    _drive(srv, got)
+    assert srv.stats["preemptions"] >= 1
+    assert srv.stats["cold_parks"] >= 1
+    assert srv.stats["cold_promotes"] == srv.stats["cold_parks"]
+    assert srv.stats["sheds"] == 0
+    for a, b in zip(ref, got):
+        assert a.output == b.output, (temp, a.uid, a.output, b.output)
+        assert b.error is None
+    xfers = srv.mem.ledger.transfers()
+    assert xfers["local->cold"]["bytes"] > 0
+    assert xfers["cold->remote"]["bytes"] > 0
+    assert xfers["remote->local"]["bytes"] > 0   # the swap-in leg
+    # deep preemption never staged the victim in the remote tier
+    assert "local->remote" not in xfers
+
+
+@pytest.mark.parametrize("temp", [0.0, 0.7])
+def test_age_based_park_sweep_bit_identical(tiny_model, temp):
+    """cold_park_after_blocks=N>0: stashes start remote and the sweep
+    demotes them once they age past N decode blocks — tokens still
+    bit-identical."""
+    ref_srv = _server(tiny_model, temperature=temp)
+    ref = _submit_three(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(tiny_model, temperature=temp, num_pages=SMALL_POOL,
+                  cold_park_after_blocks=1)
+    got = _submit_three(srv)
+    _drive(srv, got)
+    assert srv.stats["preemptions"] >= 1
+    assert srv.stats["cold_parks"] >= 1, srv.stats
+    assert srv.stats["cold_promotes"] == srv.stats["cold_parks"]
+    for a, b in zip(ref, got):
+        assert a.output == b.output, (temp, a.uid, a.output, b.output)
+    xfers = srv.mem.ledger.transfers()
+    assert xfers["local->remote"]["bytes"] > 0   # stashed remote first
+    assert xfers["remote->cold"]["bytes"] > 0    # then swept down
+
+
+def test_disabled_cold_parking_means_zero_drift(tiny_model):
+    """cold_park_after_blocks=None is the pre-hierarchy behavior: same
+    tokens, zero cold-tier traffic."""
+    srv = _server(tiny_model, num_pages=SMALL_POOL)
+    # the module-scoped model shares ONE orchestrator ledger across tests,
+    # so assert no NEW cold traffic rather than a globally clean ledger
+    before = {k: v["bytes"] for k, v in srv.mem.ledger.transfers().items()
+              if "cold" in k}
+    got = _submit_three(srv)
+    _drive(srv, got)
+    assert srv.stats["preemptions"] >= 1
+    assert srv.stats["cold_parks"] == 0
+    assert srv.stats["cold_promotes"] == 0
+    after = {k: v["bytes"] for k, v in srv.mem.ledger.transfers().items()
+             if "cold" in k}
+    assert after == before, (before, after)
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8_e4m3"])
+def test_cold_park_quantized_bit_identical(kv_dtype):
+    """Quantized pools cold-park their stashes (values + bf16 scales)
+    byte-verbatim: quantized-vs-quantized stays bit-identical."""
+    cfg = get_config("qwen2.5-14b").reduced()
+    cfg = dataclasses.replace(cfg, remat=False, page_size=PAGE,
+                              kv_dtype=kv_dtype)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qm = (model, params)
+    ref_srv = _server(qm, temperature=0.7)
+    ref = _submit_three(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(qm, temperature=0.7, num_pages=SMALL_POOL,
+                  cold_park_after_blocks=0)
+    got = _submit_three(srv)
+    _drive(srv, got)
+    assert srv.stats["cold_parks"] >= 1
+    assert [r.output for r in ref] == [r.output for r in got]
+
+
+def test_cold_park_with_prefix_sharing_bit_identical(tiny_model):
+    """Prefix-shared pages stash to cold and restore private — tokens
+    must not notice."""
+    sys_toks = np.arange(3, 15, dtype=np.int32)        # 3 whole pages
+
+    def submit_all(server):
+        return [server.submit(
+            np.concatenate([sys_toks, np.asarray([50 + i, 60 + i],
+                                                 np.int32)]),
+            max_new_tokens=16) for i in range(3)]
+
+    ref_srv = _server(tiny_model, temperature=0.7, prefix_cache=True)
+    ref = submit_all(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(tiny_model, temperature=0.7, prefix_cache=True,
+                  num_pages=SMALL_POOL, cold_park_after_blocks=0)
+    got = submit_all(srv)
+    _drive(srv, got)
+    assert srv.stats["preemptions"] >= 1
+    assert srv.stats["cold_parks"] >= 1
+    assert [r.output for r in ref] == [r.output for r in got]
+
+
+# ---------------------------------------------------------------------------
+# snapshot/restart: the stash's tier round-trips
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restore_preserves_cold_tier(tiny_model, tmp_path):
+    """A server killed with a cold-parked victim restores the stash in
+    the SAME tier and finishes bit-identically (disk round trip
+    included)."""
+    ref_srv = _server(tiny_model, temperature=0.7, num_pages=SMALL_POOL)
+    ref = _submit_three(ref_srv)
+    _drive(ref_srv, ref)
+
+    srv = _server(tiny_model, temperature=0.7, num_pages=SMALL_POOL,
+                  cold_park_after_blocks=0)
+    reqs = _submit_three(srv)
+    early = []
+    for _ in range(20):
+        early += srv.run_once(max_blocks=1)
+        if srv._preempted:
+            break
+    assert srv._preempted, "scenario never preempted"
+    assert srv._preempted[0].handle.tier == COLD
+    snap = ft.snapshot_server(srv)
+    # live slots serialize through a read-out stash (tier remote); the
+    # parked victim's entry must carry its COLD tier
+    by_tier = [s.get("tier") for s in snap["sequences"] if s.get("tier")]
+    assert COLD in by_tier, by_tier
+    path = ft.save_server_snapshot(tmp_path / "cold_ckpt", snap)
+    del srv                                      # the "crash"
+
+    srv2 = _server(tiny_model, temperature=0.7, num_pages=SMALL_POOL,
+                   cold_park_after_blocks=0)
+    ft.restore_server(srv2, ft.load_server_snapshot(path))
+    assert any(ps.handle.tier == COLD for ps in srv2._preempted)
+    finished = list(early)
+    for _ in range(50):
+        finished += srv2.run_once()
+        if len(finished) == 3:
+            break
+    by_uid = {r.uid: r for r in finished}
+    assert len(by_uid) == 3
+    for a in ref:
+        b = by_uid[a.uid]
+        assert a.output == b.output, (a.uid, a.output, b.output)
+        assert b.error is None
+    # the restored stash promoted through remote on its resume
+    assert srv2.stats["cold_promotes"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel: cold parking across a model-sharded pool
+# ---------------------------------------------------------------------------
+
+SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, sys.argv[1])
+import dataclasses
+import jax, numpy as np
+from repro.configs import get_config, build_model
+from repro.launch.mesh import make_serving_mesh
+from repro.runtime.serve import BatchedServer
+
+cfg = get_config("qwen2.5-14b").reduced()
+cfg = dataclasses.replace(cfg, remat=False, page_size=4)
+params = build_model(cfg).init(jax.random.PRNGKey(0))
+mesh = make_serving_mesh(model=2)
+
+def serve(num_pages, cold_park):
+    srv = BatchedServer(build_model(cfg), params, batch_size=3, max_seq=64,
+                        page_size=4, num_pages=num_pages, temperature=0.7,
+                        paged=True, mesh=mesh, audit=True,
+                        cold_park_after_blocks=cold_park)
+    reqs = [srv.submit(np.arange(1, 5, dtype=np.int32), max_new_tokens=24)
+            for _ in range(3)]
+    for _ in range(50):
+        srv.run_once()
+        if all(r.done.is_set() for r in reqs):
+            break
+    return [tuple(r.output) for r in reqs], srv
+
+ref, _ = serve(None, None)                 # uncontended
+got, srv = serve(18, 0)                    # oversubscribed -> cold park
+assert srv.stats["model_shards"] == 2
+assert srv.stats["preemptions"] >= 1, srv.stats
+assert srv.stats["cold_parks"] >= 1, srv.stats
+assert srv.stats["cold_promotes"] == srv.stats["cold_parks"], srv.stats
+assert got == ref, f"sharded cold-park diverged:\n  {ref}\n  {got}"
+print("SHARDED_COLD_PARK_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_cold_park_bit_identical():
+    """Cold park/promote must round-trip a model-sharded block pool
+    (the stash gather/scatter crosses the "model" axis) without changing
+    a single token."""
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    src = str(Path(__file__).resolve().parent.parent / "src")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SHARDED_SCRIPT, src],
+                         env=env, capture_output=True, text=True,
+                         timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "SHARDED_COLD_PARK_OK" in out.stdout
